@@ -1,0 +1,160 @@
+"""Claim-validation benchmarks for the RANL paper (theory paper — no
+experiment tables exist, so each paper *claim* gets one benchmark; see
+DESIGN.md §7 for the index).
+
+Each function returns a list of row dicts and is wired into run.py.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (PolicyConfig, make_logistic, make_quadratic,
+                        rounds_to_tol, run_gd, run_newton_exact,
+                        run_newton_zero, run_ranl)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def bench_convergence():
+    """Theorem 1: linear contraction, rate ≤ ~1/2-ish per covered round.
+
+    Region-aligned quadratic (coupling=0) with σ>0 Hessian noise so
+    convergence is multi-round; reports the mean per-round contraction.
+    """
+    rows = []
+    for sigma in (0.1, 0.3):
+        prob = make_quadratic(KEY, num_workers=16, dim=64, kappa=100.0,
+                              coupling=0.0, num_regions=8, hess_noise=sigma)
+        res, us = _timed(lambda: run_ranl(
+            prob, KEY, num_rounds=30, num_regions=8,
+            policy=PolicyConfig(keep_prob=0.5, tau_star=1,
+                                heterogeneous=False)))
+        d = np.asarray(res.dist_sq)
+        ratios = d[2:12] / d[1:11]
+        rows.append({"name": f"convergence/sigma={sigma}",
+                     "us_per_call": us,
+                     "derived": f"mean_ratio={ratios.mean():.3f};"
+                                f"final={d[-1]:.2e}"})
+    return rows
+
+
+def bench_condition():
+    """Condition-number independence: rounds-to-1e-8 vs κ (GD compared)."""
+    rows = []
+    for kappa in (10.0, 100.0, 1000.0):
+        prob = make_quadratic(KEY, num_workers=8, dim=32, kappa=kappa,
+                              coupling=0.0, num_regions=4)
+        res, us = _timed(lambda: run_ranl(
+            prob, KEY, num_rounds=60, num_regions=4,
+            policy=PolicyConfig(keep_prob=0.7, tau_star=1,
+                                heterogeneous=False)))
+        _, dg = run_gd(prob, KEY, num_rounds=200)
+        rows.append({
+            "name": f"condition/kappa={kappa:.0f}",
+            "us_per_call": us,
+            "derived": (f"ranl_rounds={rounds_to_tol(res.dist_sq, 1e-8)};"
+                        f"gd_rounds={rounds_to_tol(dg, 1e-8)}")})
+    return rows
+
+
+def bench_staleness():
+    """Lemma 4 delay term: noise floor grows with κ_t (stale_period)."""
+    prob = make_quadratic(KEY, num_workers=8, dim=64, kappa=100.0,
+                          coupling=0.0, num_regions=8)
+    rows = []
+    for period in (0, 1, 2, 4):
+        res, us = _timed(lambda: run_ranl(
+            prob, KEY, num_rounds=40, num_regions=8,
+            policy=PolicyConfig(name="staleness", keep_prob=0.5,
+                                stale_period=period, heterogeneous=False)))
+        d = np.asarray(res.dist_sq)
+        rows.append({"name": f"staleness/kappa_t={period}",
+                     "us_per_call": us,
+                     "derived": f"floor={d[-5:].mean():.3e}"})
+    return rows
+
+
+def bench_coverage():
+    """Lemma 3/4 N/τ* terms: floor improves with minimum coverage τ*."""
+    prob = make_quadratic(KEY, num_workers=16, dim=64, kappa=100.0,
+                          coupling=0.0, num_regions=8, grad_noise=0.3)
+    rows = []
+    for tau in (1, 4, 8):
+        res, us = _timed(lambda: run_ranl(
+            prob, KEY, num_rounds=40, num_regions=8,
+            policy=PolicyConfig(keep_prob=0.4, tau_star=tau,
+                                heterogeneous=False)))
+        d = np.asarray(res.dist_sq)
+        rows.append({"name": f"coverage/tau={tau}",
+                     "us_per_call": us,
+                     "derived": (f"floor={d[-5:].mean():.3e};"
+                                 f"tau_real={res.tau_star}")})
+    return rows
+
+
+def bench_heterogeneity():
+    """Data heterogeneity: floor vs per-worker distribution shift
+    (logistic regression, the realistic convex case)."""
+    rows = []
+    for het in (0.0, 0.5, 1.0):
+        prob = make_logistic(KEY, num_workers=16, dim=32,
+                             heterogeneity=het)
+        res, us = _timed(lambda: run_ranl(
+            prob, KEY, num_rounds=30, num_regions=8,
+            policy=PolicyConfig(keep_prob=0.8, tau_star=1,
+                                heterogeneous=True)))
+        d = np.asarray(res.dist_sq)
+        rows.append({"name": f"heterogeneity/shift={het}",
+                     "us_per_call": us,
+                     "derived": f"floor={d[-5:].mean():.3e}"})
+    return rows
+
+
+def bench_second_order_baselines():
+    """RANL vs NewtonZero (its no-pruning ancestor) vs NewtonExact."""
+    prob = make_quadratic(KEY, num_workers=8, dim=64, kappa=300.0,
+                          coupling=0.0, num_regions=8, hess_noise=0.1)
+    rows = []
+    res, us = _timed(lambda: run_ranl(
+        prob, KEY, num_rounds=30, num_regions=8,
+        policy=PolicyConfig(name="full")))
+    rows.append({"name": "baseline/ranl_fullmask", "us_per_call": us,
+                 "derived": f"final={float(res.dist_sq[-1]):.3e}"})
+    (_, d), us = _timed(lambda: run_newton_zero(prob, KEY, num_rounds=30))
+    rows.append({"name": "baseline/newton_zero", "us_per_call": us,
+                 "derived": f"final={float(d[-1]):.3e}"})
+    (_, d), us = _timed(lambda: run_newton_exact(prob, KEY, num_rounds=30))
+    rows.append({"name": "baseline/newton_exact", "us_per_call": us,
+                 "derived": f"final={float(d[-1]):.3e}"})
+    return rows
+
+
+def bench_comm_cost():
+    """Uplink floats vs keep_prob: pruning is the communication saving."""
+    prob = make_quadratic(KEY, num_workers=16, dim=256, kappa=50.0,
+                          coupling=0.0, num_regions=16)
+    rows = []
+    dense_floats = 16 * 256
+    for kp in (1.0, 0.7, 0.4, 0.2):
+        pol = (PolicyConfig(name="full") if kp == 1.0 else
+               PolicyConfig(keep_prob=kp, tau_star=1, heterogeneous=True))
+        res, us = _timed(lambda: run_ranl(
+            prob, KEY, num_rounds=20, num_regions=16, policy=pol))
+        up = float(np.asarray(res.comm_floats).mean())
+        d = np.asarray(res.dist_sq)
+        rows.append({"name": f"comm/keep={kp}",
+                     "us_per_call": us,
+                     "derived": (f"uplink_frac={up / dense_floats:.2f};"
+                                 f"final={d[-1]:.2e}")})
+    return rows

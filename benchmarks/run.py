@@ -1,0 +1,57 @@
+"""Benchmark harness: one entry per paper claim (the paper is a theory
+paper with no experiment tables — DESIGN.md §7 maps claims to benches)
+plus kernel micro-benches and, when dry-run artifacts exist, the roofline
+summary.
+
+Prints ``name,us_per_call,derived`` CSV.  Run:
+  PYTHONPATH=src python -m benchmarks.run [--only claims|kernels|roofline]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=[None, "claims", "kernels", "roofline"])
+    args = ap.parse_args()
+
+    rows = []
+    if args.only in (None, "claims"):
+        from . import claims
+        for fn in (claims.bench_convergence, claims.bench_condition,
+                   claims.bench_staleness, claims.bench_coverage,
+                   claims.bench_heterogeneity,
+                   claims.bench_second_order_baselines,
+                   claims.bench_comm_cost):
+            rows.extend(fn())
+    if args.only in (None, "kernels"):
+        from . import kernels_bench as kb
+        for fn in (kb.bench_region_aggregate, kb.bench_ranl_update,
+                   kb.bench_flash_attention, kb.bench_rwkv_wkv):
+            rows.extend(fn())
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+    if args.only in (None, "roofline"):
+        dr = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+        if os.path.isdir(dr) and os.listdir(dr):
+            from . import roofline
+            print()
+            roofline.main()
+        else:
+            print("# roofline: no dry-run artifacts "
+                  "(run repro.launch.dryrun first)")
+
+
+if __name__ == "__main__":
+    main()

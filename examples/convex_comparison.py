@@ -1,0 +1,34 @@
+"""RANL vs first/second-order baselines across condition numbers.
+
+Reproduces the paper's headline claims (linear rate, condition-number
+independence, no stepsize tuning):
+  PYTHONPATH=src python examples/convex_comparison.py
+"""
+
+import jax
+import numpy as np
+
+from repro.core import (PolicyConfig, make_quadratic, rounds_to_tol,
+                        run_gd, run_newton_exact, run_newton_zero, run_ranl)
+
+key = jax.random.PRNGKey(1)
+TOL = 1e-8
+
+print(f"rounds to ||x-x*||^2 <= {TOL} (60-round budget; 61 = never)")
+print(f"{'kappa':>8s} {'RANL(prune50%)':>15s} {'NewtonZero':>11s} "
+      f"{'NewtonExact':>12s} {'GD(lr=1/L)':>11s}")
+for kappa in (10.0, 100.0, 1000.0, 10000.0):
+    prob = make_quadratic(key, num_workers=8, dim=32, kappa=kappa,
+                          coupling=0.0, num_regions=4)
+    res = run_ranl(prob, key, num_rounds=60, num_regions=4,
+                   policy=PolicyConfig(keep_prob=0.5, tau_star=1,
+                                       heterogeneous=False))
+    _, dz = run_newton_zero(prob, key, num_rounds=60)
+    _, dx = run_newton_exact(prob, key, num_rounds=60)
+    _, dg = run_gd(prob, key, num_rounds=60)
+    print(f"{kappa:8.0f} {rounds_to_tol(res.dist_sq, TOL):15d} "
+          f"{rounds_to_tol(dz, TOL):11d} {rounds_to_tol(dx, TOL):12d} "
+          f"{rounds_to_tol(dg, TOL):11d}")
+
+print("\nRANL stays flat in kappa (the paper's condition-number "
+      "independence);\nGD degrades linearly and needs lr tuned to 1/L.")

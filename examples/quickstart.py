@@ -1,0 +1,35 @@
+"""Quickstart: RANL (Algorithm 1) on a distributed convex problem.
+
+Runs in seconds on CPU:
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import numpy as np
+
+from repro.core import (PolicyConfig, make_quadratic, run_gd, run_ranl)
+
+key = jax.random.PRNGKey(0)
+
+# 16 heterogeneous workers, ill-conditioned objective (kappa = 500),
+# region-aligned curvature, adaptive pruning: each worker trains a random
+# ~50% of the 8 model regions each round, based on its "resources".
+problem = make_quadratic(key, num_workers=16, dim=64, kappa=500.0,
+                         coupling=0.0, num_regions=8, heterogeneity=0.0)
+policy = PolicyConfig(name="bernoulli", keep_prob=0.5, heterogeneous=True,
+                      tau_star=1)
+
+result = run_ranl(problem, key, num_rounds=30, num_regions=8, policy=policy)
+_, gd_dist = run_gd(problem, key, num_rounds=30)
+
+print("round   RANL ||x-x*||^2      GD ||x-x*||^2    coverage")
+d = np.asarray(result.dist_sq)
+g = np.asarray(gd_dist)
+for t in range(0, 31, 5):
+    cov = float(result.coverage[t - 1]) if t else 1.0
+    print(f"{t:5d}   {d[t]:16.3e}   {g[t]:16.3e}    {cov:.2f}")
+
+print(f"\nRANL transmitted {float(np.mean(result.comm_floats)):.0f} "
+      f"floats/round vs {problem.num_workers * problem.dim} dense "
+      f"(pruned uplink).")
+print(f"Minimum region coverage tau* observed: {result.tau_star}")

@@ -1,0 +1,15 @@
+"""Batched serving example: prefill a batch of prompts, then greedy-decode
+with the KV-cache / recurrent-state serve path, for one arch per family.
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+
+from repro.launch.serve import run
+
+for arch in ("phi4-mini-3.8b",      # dense, GQA KV cache
+             "rwkv6-3b",            # attention-free, O(1) state
+             "hymba-1.5b",          # hybrid: SWA cache + SSM state
+             "musicgen-medium"):    # audio: 4-codebook decoding
+    print(f"\n=== {arch} ===")
+    run(["--arch", arch, "--batch", "4", "--prompt-len", "32",
+         "--gen", "12"])

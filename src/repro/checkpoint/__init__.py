@@ -1,0 +1,1 @@
+from .checkpoint import restore, save  # noqa: F401

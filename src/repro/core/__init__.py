@@ -1,0 +1,21 @@
+"""Paper core: RANL (Algorithm 1), its substrate, and baselines."""
+
+from .aggregation import server_aggregate  # noqa: F401
+from .baselines import (  # noqa: F401
+    rounds_to_tol,
+    run_gd,
+    run_newton_exact,
+    run_newton_zero,
+    run_sgd,
+)
+from .convex import Logistic, Quadratic, make_logistic, make_quadratic  # noqa: F401
+from .hessian import (  # noqa: F401
+    fisher_diag,
+    hutchinson_diag,
+    project_diag,
+    project_psd,
+    solve_projected,
+)
+from .masks import PolicyConfig, ensure_coverage, sample_masks  # noqa: F401
+from .ranl import RanlResult, run_ranl  # noqa: F401
+from .regions import contiguous_regions, expand_mask, region_sizes  # noqa: F401

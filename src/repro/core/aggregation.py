@@ -1,0 +1,33 @@
+"""Server aggregation with gradient memory (Algorithm 1, lines 15–22).
+
+Given per-worker pruned gradients G (N, d), coordinate masks Mx (N, d)
+(region masks expanded to coordinates), and stored latest updates C (N, d):
+
+  per region q (equivalently per coordinate, since masks are region-constant):
+    covered:    ∇F^{t,q} = mean over covering workers of fresh gradients
+    uncovered:  ∇F^{t,q} = mean over ALL workers of stored C_i^{t,q}
+  memory:       C_i^{t+1,q} = fresh if i covered q else C_i^{t,q}
+
+This module is the pure-jnp oracle; ``repro.kernels.region_aggregate``
+implements the same contract as a fused Pallas kernel.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def server_aggregate(grads, masks_x, memory):
+    """grads, masks_x, memory: (N, d). Returns (global_grad (d,), new_memory).
+
+    ``grads`` are already pruned (zero outside the worker's mask); ``masks_x``
+    is the boolean coordinate mask.
+    """
+    m = masks_x.astype(grads.dtype)
+    count = m.sum(axis=0)                                  # (d,)
+    fresh_sum = (grads * m).sum(axis=0)                    # ∑_{i∈N^{t,q}}
+    fresh_mean = fresh_sum / jnp.maximum(count, 1.0)
+    stale_mean = memory.mean(axis=0)                       # 1/N ∑ C_i
+    global_grad = jnp.where(count > 0, fresh_mean, stale_mean)
+    new_memory = jnp.where(masks_x, grads, memory)
+    return global_grad, new_memory

@@ -1,0 +1,96 @@
+"""Baselines the paper positions RANL against.
+
+First-order: distributed GD / SGD (condition-number-sensitive, tuned step).
+Second-order: NewtonExact (fresh full Hessian every round — the expensive
+upper bound) and NewtonZero (one-shot Hessian, no pruning — RANL's ancestor
+[20]; RANL with full masks must match it exactly, which tests pin).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .hessian import project_psd, solve_projected
+
+
+def _trajectory(problem, xs):
+    xs = jnp.stack(xs)
+    dist = jnp.sum((xs - problem.x_star[None, :]) ** 2, axis=1)
+    return xs, dist
+
+
+def run_gd(problem, key, *, num_rounds: int = 30, lr: float | None = None):
+    """Distributed full-gradient descent, lr = 1/L_g (the safe tuned step)."""
+    lr = 1.0 / problem.L_g if lr is None else lr
+    N, d = problem.num_workers, problem.dim
+    x = jnp.zeros(d)
+    ids = jnp.arange(N)
+    grad_all = jax.vmap(problem.worker_grad, in_axes=(0, None, 0))
+    xs = [x]
+    for t in range(num_rounds):
+        gk = jax.random.split(jax.random.fold_in(key, t), N)
+        g = grad_all(ids, x, gk).mean(axis=0)
+        x = x - lr * g
+        xs.append(x)
+    return _trajectory(problem, xs)
+
+
+def run_sgd(problem, key, *, num_rounds: int = 30, lr: float | None = None):
+    """Same as GD here but with the stochastic oracle noise kept (Δ > 0
+    problems); separate entry point for experiment clarity."""
+    return run_gd(problem, key, num_rounds=num_rounds, lr=lr)
+
+
+def run_newton_exact(problem, key, *, num_rounds: int = 30,
+                     mu: float | None = None):
+    """Fresh aggregated Hessian at x^t every round (communication-heavy)."""
+    mu = problem.mu if mu is None else mu
+    N, d = problem.num_workers, problem.dim
+    x = jnp.zeros(d)
+    ids = jnp.arange(N)
+    grad_all = jax.vmap(problem.worker_grad, in_axes=(0, None, 0))
+    xs = [x]
+    for t in range(num_rounds):
+        kt = jax.random.fold_in(key, t)
+        hkeys = jax.random.split(jax.random.fold_in(kt, 0), N)
+        H = jnp.stack([problem.worker_hessian(i, x, hkeys[i])
+                       for i in range(N)]).mean(axis=0)
+        gk = jax.random.split(jax.random.fold_in(kt, 1), N)
+        g = grad_all(ids, x, gk).mean(axis=0)
+        x = x - solve_projected(project_psd(H, mu), g)
+        xs.append(x)
+    return _trajectory(problem, xs)
+
+
+def run_newton_zero(problem, key, *, num_rounds: int = 30,
+                    mu: float | None = None):
+    """One-shot Hessian at x⁰ (FedNL's Newton Zero [20]); no pruning."""
+    mu = problem.mu if mu is None else mu
+    N, d = problem.num_workers, problem.dim
+    x = jnp.zeros(d)
+    ids = jnp.arange(N)
+    k_init, k_loop = jax.random.split(key)
+    hkeys = jax.random.split(jax.random.fold_in(k_init, 0), N)
+    H = jnp.stack([problem.worker_hessian(i, x, hkeys[i])
+                   for i in range(N)]).mean(axis=0)
+    H_mu = project_psd(H, mu)
+    gkeys = jax.random.split(jax.random.fold_in(k_init, 1), N)
+    grad_all = jax.vmap(problem.worker_grad, in_axes=(0, None, 0))
+    g0 = grad_all(ids, x, gkeys).mean(axis=0)
+    xs = [x]
+    x = x - solve_projected(H_mu, g0)
+    xs.append(x)
+    for t in range(1, num_rounds):
+        gk = jax.random.split(jax.random.fold_in(k_loop, t), N)
+        g = grad_all(ids, x, gk).mean(axis=0)
+        x = x - solve_projected(H_mu, g)
+        xs.append(x)
+    return _trajectory(problem, xs)
+
+
+def rounds_to_tol(dist_sq, tol: float) -> int:
+    """First round index with ‖x−x*‖² ≤ tol (len(dist)-1 if never)."""
+    hit = jnp.nonzero(dist_sq <= tol, size=1,
+                      fill_value=dist_sq.shape[0] - 1)[0][0]
+    return int(hit)

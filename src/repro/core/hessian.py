@@ -1,0 +1,70 @@
+"""Hessian utilities: Definition 4 projection, one-shot estimators.
+
+``project_psd``/``[A]_μ`` projects a symmetric matrix onto
+{M : Mᵀ = M, μI ⪯ M} by eigenvalue clamping — exactly the paper's
+``[A]_μ := [A − μI]_0 + μI``.  For the scalable (diagonal) path the same
+operator specializes to ``max(h, μ)`` elementwise.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def symmetrize(a):
+    return 0.5 * (a + a.T)
+
+
+def project_psd(a, mu: float):
+    """[A]_μ (Definition 4): clamp eigenvalues of sym(A) at μ."""
+    w, v = jnp.linalg.eigh(symmetrize(a))
+    w = jnp.maximum(w, mu)
+    return (v * w) @ v.T
+
+
+def project_diag(h, mu: float):
+    """Diagonal specialization of [·]_μ: elementwise max(h, μ)."""
+    return jnp.maximum(h, mu)
+
+
+def solve_projected(a_mu, g):
+    """x-update direction [H]_μ^{-1} g via Cholesky solve (H ⪰ μI > 0)."""
+    return jax.scipy.linalg.cho_solve(jax.scipy.linalg.cho_factor(a_mu), g)
+
+
+def hutchinson_diag(grad_fn, params, key, num_samples: int = 8):
+    """Diagonal Hessian estimate diag(H) ≈ E[z ⊙ (Hz)], z ~ Rademacher.
+
+    grad_fn: params -> grads (pytree).  Uses HVPs via jvp-of-grad.  This is
+    the one-shot Newton-Zero curvature used by the deep-net RANL optimizer.
+    """
+    leaves, treedef = jax.tree.flatten(params)
+
+    def hvp(z):
+        return jax.jvp(grad_fn, (params,), (z,))[1]
+
+    acc = [jnp.zeros_like(l) for l in leaves]
+    for s in range(num_samples):
+        ks = jax.random.fold_in(key, s)
+        zk = [jax.random.rademacher(jax.random.fold_in(ks, i), l.shape,
+                                    dtype=l.dtype)
+              for i, l in enumerate(leaves)]
+        z = jax.tree.unflatten(treedef, zk)
+        hz = jax.tree.leaves(hvp(z))
+        acc = [a + zi * hi for a, zi, hi in zip(acc, zk, hz)]
+    diag = [a / num_samples for a in acc]
+    return jax.tree.unflatten(treedef, diag)
+
+
+def fisher_diag(grad_fn, params, keys):
+    """Empirical-Fisher diagonal: mean of squared per-batch grads.
+
+    Cheaper alternative one-shot curvature (no HVPs); grad_fn(params, key).
+    """
+    acc = None
+    for k in keys:
+        g = grad_fn(params, k)
+        sq = jax.tree.map(jnp.square, g)
+        acc = sq if acc is None else jax.tree.map(jnp.add, acc, sq)
+    return jax.tree.map(lambda a: a / len(keys), acc)

@@ -1,0 +1,91 @@
+"""Pruning policies P: adaptive per-worker region masks (paper §3–4).
+
+A policy maps (key, round t) -> boolean mask M of shape (N, Q): worker i
+trains region q this round iff M[i, q].  Policies model heterogeneous,
+time-varying resources; ``ensure_coverage`` post-processes a mask so every
+region has at least ``tau_star`` covering workers (the paper's minimum
+worker-coverage number τ*)."""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class PolicyConfig:
+    name: str = "bernoulli"      # bernoulli | fixed_k | roundrobin | full | staleness
+    keep_prob: float = 0.5       # bernoulli: mean fraction of regions kept
+    heterogeneous: bool = True   # vary resources across workers
+    keep_k: int = 1              # fixed_k: regions per worker
+    stale_period: int = 0        # staleness: region 0 untrained for this many
+                                 # consecutive rounds out of each period+1
+    tau_star: int = 0            # 0 = no coverage repair
+
+
+def worker_keep_probs(key, num_workers: int, base: float,
+                      heterogeneous: bool):
+    """Per-worker resource levels (keep probabilities)."""
+    if not heterogeneous:
+        return jnp.full((num_workers,), base)
+    # resources spread uniformly in [base/2, min(1, 3*base/2)]
+    lo, hi = base * 0.5, min(1.0, base * 1.5)
+    return jax.random.uniform(key, (num_workers,), minval=lo, maxval=hi)
+
+
+def sample_masks(policy: PolicyConfig, key, t: int | jnp.ndarray,
+                 num_workers: int, num_regions: int):
+    """-> bool (N, Q)."""
+    N, Q = num_workers, num_regions
+    kp, km = jax.random.split(jax.random.fold_in(key, 1))
+    if policy.name == "full":
+        m = jnp.ones((N, Q), bool)
+    elif policy.name == "bernoulli":
+        probs = worker_keep_probs(kp, N, policy.keep_prob,
+                                  policy.heterogeneous)
+        m = jax.random.uniform(jax.random.fold_in(km, t), (N, Q)) \
+            < probs[:, None]
+    elif policy.name == "fixed_k":
+        def one(k):
+            perm = jax.random.permutation(k, Q)
+            return jnp.zeros((Q,), bool).at[perm[:policy.keep_k]].set(True)
+        m = jax.vmap(one)(jax.random.split(jax.random.fold_in(km, t), N))
+    elif policy.name == "roundrobin":
+        q0 = (jnp.arange(N) + t) % Q
+        m = jax.nn.one_hot(q0, Q, dtype=bool)
+    elif policy.name == "staleness":
+        # adversarial: region 0 untrained except once per (period+1) rounds
+        probs = worker_keep_probs(kp, N, policy.keep_prob,
+                                  policy.heterogeneous)
+        m = jax.random.uniform(jax.random.fold_in(km, t), (N, Q)) \
+            < probs[:, None]
+        period = policy.stale_period
+        train_now = (t % (period + 1)) == period if period else True
+        m = m.at[:, 0].set(jnp.logical_and(m[:, 0], train_now))
+    else:
+        raise ValueError(f"unknown policy {policy.name}")
+    if policy.tau_star:
+        m = ensure_coverage(m, key, policy.tau_star)
+    return m
+
+
+def ensure_coverage(mask, key, tau_star: int):
+    """Repair mask so every region is covered by >= tau_star workers.
+
+    Deterministically assigns workers (q + j) mod N to uncovered regions —
+    models the server nudging idle workers, preserving adaptivity elsewhere.
+    """
+    N, Q = mask.shape
+    count = mask.sum(axis=0)
+    need = jnp.maximum(tau_star - count, 0)              # (Q,)
+    j = jnp.arange(N)[:, None]                           # (N, 1)
+    q = jnp.arange(Q)[None, :]
+    # per-region worker order, with ALREADY-COVERING workers sorted last
+    # (forcing them would add no new coverage)
+    key = (j - q) % N + N * mask.astype(jnp.int32)       # (N, Q)
+    rank = (key[None, :, :] < key[:, None, :]).sum(axis=1)
+    forced = rank < need[None, :]
+    return jnp.logical_or(mask, forced)

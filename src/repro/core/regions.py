@@ -1,0 +1,31 @@
+"""Region partition of the parameter vector (paper: Q regions of x ∈ R^d)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def contiguous_regions(d: int, num_regions: int) -> jnp.ndarray:
+    """Region id per coordinate: (d,) int32 with values in [0, Q).
+
+    Contiguous blocks, sizes as equal as possible (the paper leaves the
+    partition abstract; contiguous blocks are the natural instantiation for a
+    flat parameter vector).
+    """
+    if not 1 <= num_regions <= d:
+        raise ValueError(f"need 1 <= Q <= d, got Q={num_regions}, d={d}")
+    bounds = np.linspace(0, d, num_regions + 1).astype(np.int64)
+    ids = np.zeros(d, np.int32)
+    for q in range(num_regions):
+        ids[bounds[q]:bounds[q + 1]] = q
+    return jnp.asarray(ids)
+
+
+def expand_mask(region_mask, region_ids):
+    """(..., Q) region mask -> (..., d) coordinate mask."""
+    return jnp.take(region_mask, region_ids, axis=-1)
+
+
+def region_sizes(region_ids, num_regions: int):
+    return jnp.zeros(num_regions, jnp.int32).at[region_ids].add(1)

@@ -1,0 +1,1 @@
+from .synthetic import make_batch, token_stream  # noqa: F401

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: causal GQA flash attention with sliding window.
+
+Canonical TPU tiling: grid (B, H, num_q_blocks, num_kv_blocks), kv innermost
+so the online-softmax accumulators (m, l, acc) live in VMEM scratch across
+kv iterations while the q block stays resident.  Block shapes are
+(BLOCK_Q, head_dim) / (BLOCK_K, head_dim) with head_dim padded to a lane
+multiple by the wrapper; the q·kᵀ and p·v contractions are MXU matmuls with
+128-aligned contracting dims.
+
+GQA is expressed in the index maps: the kv BlockSpec maps query head h to
+kv head h // group so no repeated-KV tensor is ever materialized in HBM —
+on TPU this saves the (groups×) kv read amplification the pure-jnp path
+pays.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+BLOCK_Q = 128
+BLOCK_K = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, block_q: int, block_k: int, causal: bool,
+            window: int, num_kv_blocks: int):
+    qi = pl.program_id(2)
+    kj = pl.program_id(3)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (bk, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # (bq, bk)
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = kj * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    valid = jnp.ones((block_q, block_k), bool)
+    if causal:
+        valid &= k_pos <= q_pos
+    if window:
+        valid &= k_pos > q_pos - window
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    corr = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_scr[...] = m_new
+
+    @pl.when(kj == num_kv_blocks - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                              "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = BLOCK_Q, block_k: int = BLOCK_K,
+                    interpret: bool = True):
+    """q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd), H % KV == 0, Sq == Skv.
+
+    Returns (B, Sq, H, hd) in q.dtype.  Matches ref.flash_attention_ref.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    assert Sq == Skv, "self-attention kernel: q/kv lengths must match"
+    groups = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, "seq must divide block size"
+    nq, nk = Sq // bq, Skv // bk
+
+    # layout: (B, H, S, hd) so the head dim is a grid axis
+    qT = q.transpose(0, 2, 1, 3)
+    kT = k.transpose(0, 2, 1, 3)
+    vT = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, block_q=bq, block_k=bk, causal=causal,
+        window=window, num_kv_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, g=groups: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, g=groups: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),        # running max m
+            pltpu.VMEM((bq,), jnp.float32),        # running denom l
+            pltpu.VMEM((bq, hd), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(qT, kT, vT)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,40 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels TARGET TPU and are validated against the ref.py oracles in
+interpret mode, which executes the kernel body in Python).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention as _flash_attention
+from .region_aggregate import ranl_update as _ranl_update
+from .region_aggregate import region_aggregate as _region_aggregate
+from .rwkv_wkv import rwkv_wkv as _rwkv_wkv
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def region_aggregate(grads, masks, memory, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _region_aggregate(grads, masks, memory, **kw)
+
+
+def ranl_update(params, hdiag, grads, masks, memory, *, mu, lr=1.0, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _ranl_update(params, hdiag, grads, masks, memory,
+                        mu=mu, lr=lr, **kw)
+
+
+def flash_attention(q, k, v, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _flash_attention(q, k, v, **kw)
+
+
+def rwkv_wkv(r, k, v, w, u, state, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _rwkv_wkv(r, k, v, w, u, state, **kw)

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: kernel tests sweep shapes/dtypes and
+``assert_allclose`` against these functions (interpret mode on CPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def region_aggregate_ref(grads, masks, memory):
+    """Algorithm 1 lines 15–22 (see repro.core.aggregation).
+
+    grads, memory: (N, D) float; masks: (N, D) bool.
+    Returns (global_grad (D,), new_memory (N, D))."""
+    m = masks.astype(grads.dtype)
+    count = m.sum(axis=0)
+    fresh = (grads * m).sum(axis=0) / jnp.maximum(count, 1.0)
+    stale = memory.mean(axis=0)
+    g = jnp.where(count > 0, fresh, stale)
+    new_memory = jnp.where(masks, grads, memory)
+    return g, new_memory
+
+
+def ranl_update_ref(params, hdiag, grads, masks, memory, *, mu, lr):
+    """Fused aggregate + projected-Newton step.
+
+    params, hdiag: (D,); grads/memory/masks: (N, D).
+    Returns (new_params (D,), new_memory)."""
+    g, new_memory = region_aggregate_ref(grads, masks, memory)
+    h_mu = jnp.maximum(hdiag, mu)
+    new_params = params - lr * g / h_mu
+    return new_params, new_memory
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, scale=None):
+    """Full-softmax attention oracle.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd) with H % KV == 0.
+    Sliding ``window`` (0 = unbounded) measured in absolute positions,
+    q positions = arange(Skv - Sq, Skv) (suffix alignment), k = arange(Skv).
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    groups = H // KV
+    scale = hd ** -0.5 if scale is None else scale
+    kr = jnp.repeat(k, groups, axis=2)
+    vr = jnp.repeat(v, groups, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kr.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Skv - Sq, Skv)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    valid = jnp.ones((Sq, Skv), bool)
+    if causal:
+        valid &= kpos <= qpos
+    if window:
+        valid &= kpos > qpos - window
+    s = jnp.where(valid[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rwkv_wkv_ref(r, k, v, w, u, state):
+    """RWKV-6 wkv recurrence oracle (sequential scan).
+
+    r, k, v, w: (B, S, H, hd); u: (H, hd); state: (B, H, hd, hd) fp32.
+    Returns (y (B, S, H, hd) fp32, final_state)."""
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        y = jnp.einsum("bhi,bhij->bhj", r_t,
+                       S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    seq = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+                for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), seq)
+    return jnp.moveaxis(ys, 0, 1), state

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: RWKV-6 wkv recurrence with VMEM-resident state.
+
+The recurrence  S ← diag(w_t)·S + k_tᵀv_t,  y_t = r_t·(S + u ⊙ k_tᵀv_t)
+is sequential in t, so the XLA path (lax.scan) round-trips the (hd, hd)
+state through HBM every step: ~2·S·hd²·4B of traffic per (batch, head).
+This kernel keeps S in VMEM scratch across an entire time block and across
+grid steps (time is the innermost grid axis), so HBM traffic is only the
+linear r/k/v/w reads and y writes — the roofline memory term drops by
+~hd/2 ≈ 32x for hd=64 (see benchmarks/roofline.py §rwkv note).
+
+Grid: (B, H, S / BLOCK_T); state scratch (hd, hd) f32 persists across the
+time-block axis; the inner time loop is a fori_loop over BLOCK_T steps on
+VMEM-resident blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_T = 128
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, s_out_ref,
+            s_scr, *, block_t: int, num_t_blocks: int):
+    tj = pl.program_id(2)
+
+    @pl.when(tj == 0)
+    def _init():
+        s_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)                     # (hd,)
+    r = r_ref[0, 0].astype(jnp.float32)                  # (bt, hd)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    w = w_ref[0, 0].astype(jnp.float32)
+
+    def step(t, carry):
+        S = carry                                        # (hd, hd)
+        kv = k[t][:, None] * v[t][None, :]               # (hd, hd)
+        y = ((S + u[:, None] * kv) * r[t][:, None]).sum(axis=0)
+        y_ref[0, 0, t, :] = y.astype(y_ref.dtype)
+        return w[t][:, None] * S + kv
+
+    s_scr[...] = jax.lax.fori_loop(0, block_t, step, s_scr[...])
+
+    @pl.when(tj == num_t_blocks - 1)
+    def _finish():
+        s_out_ref[0, 0] = s_scr[...].astype(s_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def rwkv_wkv(r, k, v, w, u, state, *, block_t: int = BLOCK_T,
+             interpret: bool = True):
+    """r, k, v, w: (B, S, H, hd); u: (H, hd); state: (B, H, hd, hd) f32.
+
+    Returns (y (B, S, H, hd) f32, final state).  Matches ref.rwkv_wkv_ref.
+    """
+    B, S, H, hd = r.shape
+    bt = min(block_t, S)
+    assert S % bt == 0, "seq must divide block_t"
+    nt = S // bt
+
+    rT, kT, vT, wT = (x.transpose(0, 2, 1, 3) for x in (r, k, v, w))
+    kernel = functools.partial(_kernel, block_t=bt, num_t_blocks=nt)
+
+    y, s_out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nt),
+        in_specs=[
+            pl.BlockSpec((1, 1, bt, hd), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bt, hd), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bt, hd), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bt, hd), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, hd), lambda b, h, j: (h, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, j: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bt, hd), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, j: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, S, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(rT, kT, vT, wT, u, state)
+    return y.transpose(0, 2, 1, 3), s_out

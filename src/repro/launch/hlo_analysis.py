@@ -1,0 +1,182 @@
+"""Post-compile HLO analysis: collective inventory with loop multipliers.
+
+XLA's ``cost_analysis`` counts a ``while`` body once regardless of trip
+count, and collectives inside the layer-scan likewise appear once in the
+HLO text.  This parser walks the partitioned module, finds every collective
+(all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute,
+incl. async ``-start`` forms), attributes it to its computation, and
+multiplies by the enclosing while-loop trip counts (parsed from the loop
+condition's LT-compare constant; nesting multiplies).  Operand sizes come
+from the definition table (HLO prints shapes at definitions only).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"(\(?[^=]*?\)?)\s*"            # result shape (may be a tuple)
+    r"([\w\-]+)\(")                  # opcode
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of all array shapes in a (possibly tuple) type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    comp: str
+    opcode: str
+    result_bytes: int
+    operands: list[str]
+    line: str
+
+
+@dataclass
+class CollectiveRecord:
+    kind: str
+    comp: str
+    operand_bytes: int
+    result_bytes: int
+    multiplier: int
+    count: int = 1
+
+    @property
+    def total_bytes(self) -> int:
+        return self.operand_bytes * self.multiplier * self.count
+
+
+def parse_module(text: str):
+    """-> (instrs by name, comp of each instr, whiles, comp order)."""
+    instrs: dict[str, Instr] = {}
+    comp_instrs: dict[str, list[str]] = {}
+    current = "?"
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        mc = _COMP_RE.match(line.strip())
+        if mc and ("->" in line) and line.strip().endswith("{"):
+            current = mc.group(1)
+            comp_instrs.setdefault(current, [])
+            continue
+        mi = _INSTR_RE.match(line)
+        if not mi:
+            continue
+        name, rtype, opcode = mi.groups()
+        paren = line[line.index(opcode + "(") + len(opcode):]
+        # operand names: %refs inside the first paren group (rough but the
+        # definition table lookup filters non-instruction refs)
+        ops = _OPERAND_RE.findall(paren.split("),", 1)[0])
+        instrs[name] = Instr(name=name, comp=current, opcode=opcode,
+                             result_bytes=shape_bytes(rtype),
+                             operands=ops, line=line.strip())
+        comp_instrs.setdefault(current, []).append(name)
+    return instrs, comp_instrs
+
+
+def _while_edges(instrs):
+    """[(parent_comp, body_comp, cond_comp)] for every while instr."""
+    edges = []
+    for ins in instrs.values():
+        if ins.opcode == "while":
+            mb = re.search(r"body=%?([\w\.\-]+)", ins.line)
+            mc = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+            if mb and mc:
+                edges.append((ins.comp, mb.group(1), mc.group(1)))
+    return edges
+
+
+def _trip_count(cond_comp: str, comp_instrs, instrs, default: int) -> int:
+    """Parse `compare(iter, constant(N)), direction=LT` in the condition."""
+    consts = {}
+    for name in comp_instrs.get(cond_comp, ()):
+        ins = instrs[name]
+        if ins.opcode == "constant":
+            m = re.search(r"constant\((-?\d+)\)", ins.line)
+            if m:
+                consts[name] = int(m.group(1))
+    for name in comp_instrs.get(cond_comp, ()):
+        ins = instrs[name]
+        if ins.opcode == "compare" and "direction=LT" in ins.line:
+            for op in ins.operands:
+                if op in consts:
+                    return max(consts[op], 1)
+    return default
+
+
+def comp_multipliers(instrs, comp_instrs, default_trip: int = 1):
+    """Multiplier per computation (product of enclosing while trip counts)."""
+    mult = {comp: 1 for comp in comp_instrs}
+    edges = _while_edges(instrs)
+    # iterate to fixpoint (nesting depth is tiny)
+    for _ in range(8):
+        changed = False
+        for parent, body, cond in edges:
+            trip = _trip_count(cond, comp_instrs, instrs, default_trip)
+            want = mult.get(parent, 1) * trip
+            if mult.get(body) != want:
+                mult[body] = want
+                changed = True
+            if mult.get(cond, 1) != mult.get(parent, 1):
+                mult[cond] = mult.get(parent, 1)
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def collect_collectives(text: str, default_trip: int = 1):
+    """-> list[CollectiveRecord] (deduped -start/-done pairs)."""
+    instrs, comp_instrs = parse_module(text)
+    mult = comp_multipliers(instrs, comp_instrs, default_trip)
+    records = []
+    for ins in instrs.values():
+        base = ins.opcode.removesuffix("-start")
+        if base not in COLLECTIVES or ins.opcode.endswith("-done"):
+            continue
+        operand_bytes = sum(instrs[o].result_bytes for o in ins.operands
+                            if o in instrs)
+        if operand_bytes == 0:
+            operand_bytes = ins.result_bytes
+        records.append(CollectiveRecord(
+            kind=base, comp=ins.comp, operand_bytes=operand_bytes,
+            result_bytes=ins.result_bytes,
+            multiplier=mult.get(ins.comp, 1)))
+    return records
+
+
+def summarize_collectives(records):
+    by_kind: dict[str, dict] = {}
+    for r in records:
+        d = by_kind.setdefault(r.kind, {"count": 0, "bytes": 0,
+                                        "in_loop_bytes": 0})
+        d["count"] += r.count
+        d["bytes"] += r.total_bytes
+        if r.multiplier > 1:
+            d["in_loop_bytes"] += r.total_bytes
+    total = sum(d["bytes"] for d in by_kind.values())
+    return {"total_bytes": total, "by_kind": by_kind}

@@ -1,0 +1,36 @@
+"""Production meshes (TPU v5e pods).
+
+Defined as functions so importing this module never touches jax device
+state; the dry-run sets XLA_FLAGS for 512 host devices before any jax
+import, ordinary runs see the real (single) device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips.
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate 1-device mesh with the production axis names (tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def data_shards(mesh) -> int:
+    """Total batch/worker shards = product of pod-and-data axis sizes."""
+    n = 1
+    for name in ("pod", "data"):
+        if name in mesh.axis_names:
+            n *= mesh.shape[name]
+    return n
+
+
+def model_shards(mesh) -> int:
+    return mesh.shape.get("model", 1)

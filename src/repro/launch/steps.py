@@ -1,0 +1,193 @@
+"""Step builders for the dry-run / roofline pipeline.
+
+For each (arch config × input shape × mesh) this produces the jittable step
+function, abstract argument specs (ShapeDtypeStruct — no allocation), and
+in/out shardings, for:
+
+  train_4k     -> RANL train_step (vmap-over-workers, N = data shards)
+  prefill_32k  -> prefill_step (forward, emits KV cache / recurrent state)
+  decode_*     -> serve_step (one token against a full cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import forward, init_model, lm_loss
+from ..models.io import (decode_specs, decode_window, prefill_specs,
+                         train_specs)
+from ..optim import RanlLLMConfig, init_state, train_step
+from .mesh import data_shards, model_shards
+from .shard import (BATCH, batch_pspecs, cache_pspecs, params_pspecs,
+                    ranl_state_pspecs, to_shardings)
+
+
+def _logits_spec(cfg, batch: int, mesh) -> P:
+    b_ax = BATCH if batch % data_shards(mesh) == 0 else None
+    v_ax = "model" if cfg.vocab_size % model_shards(mesh) == 0 else None
+    if cfg.modality == "audio":
+        return P(b_ax, None, v_ax)
+    return P(b_ax, v_ax)
+
+
+@dataclass
+class StepBundle:
+    name: str
+    fn: Callable
+    abstract_args: tuple
+    in_shardings: Any
+    out_shardings: Any
+    meta: dict
+
+
+def _chunks(shape):
+    if shape.kind == "train":
+        return 1024, 1024
+    if shape.kind == "prefill":
+        return 2048, 2048
+    return 1, 4096          # decode: one q row, 4k kv blocks
+
+
+def abstract_params(cfg, dtype=None):
+    dt = jnp.dtype(cfg.dtype) if dtype is None else dtype
+    return jax.eval_shape(
+        lambda: init_model(cfg, jax.random.PRNGKey(0), dt))
+
+
+FSDP_PARAM_THRESHOLD = 8e9   # params; larger models shard weights/state
+                             # over the batch axes too (ZeRO-3)
+
+
+def fsdp_axes(cfg, mesh):
+    """[(extra_axes, count), ...] cascade for FSDP, or None (small models)."""
+    if cfg.param_count() < FSDP_PARAM_THRESHOLD:
+        return None
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    out = []
+    if len(axes) == 2:
+        out.append((tuple(axes), data_shards(mesh)))
+    out.append((("data",), mesh.shape["data"]))
+    return out
+
+
+def make_train_bundle(cfg, shape, mesh, *, scan_layers=True, remat=True,
+                      keep_prob=0.7, seq_override=None,
+                      batch_override=None, fsdp=None) -> StepBundle:
+    q_chunk, kv_chunk = _chunks(shape)
+    if seq_override or batch_override:
+        shape = dataclasses.replace(
+            shape, seq_len=seq_override or shape.seq_len,
+            global_batch=batch_override or shape.global_batch)
+    n_workers = data_shards(mesh)
+    rcfg = RanlLLMConfig(num_workers=n_workers, keep_prob=keep_prob)
+
+    def loss_fn(p, b):
+        return lm_loss(p, b, cfg, q_chunk=q_chunk, kv_chunk=kv_chunk,
+                       scan_layers=scan_layers, remat=remat)
+
+    def step(params, state, batch, rng):
+        return train_step(params, state, batch, rng,
+                          loss_fn=loss_fn, cfg=rcfg)
+
+    params_s = abstract_params(cfg)
+    batch_s = train_specs(cfg, shape)
+    key_s = jax.eval_shape(lambda: jax.random.PRNGKey(0))
+    state_s = jax.eval_shape(
+        lambda p, b: init_state(p, loss_fn, b, rcfg, jax.random.PRNGKey(0)),
+        params_s, batch_s)
+
+    fs = fsdp_axes(cfg, mesh) if fsdp is None else fsdp
+    p_spec = params_pspecs(params_s, model_shards(mesh), fs,
+                           cfg.tie_embeddings)
+    s_spec = ranl_state_pspecs(params_s, model_shards(mesh), fs,
+                               cfg.tie_embeddings)
+    b_spec = batch_pspecs(batch_s)
+    in_sh = to_shardings((p_spec, s_spec, b_spec, P()), mesh)
+    metrics_spec = {"loss": P(), "grad_norm": P(), "coverage": P(),
+                    "uplink_frac": P()}
+    out_sh = to_shardings((p_spec, s_spec, metrics_spec), mesh)
+    return StepBundle(
+        name="train", fn=step,
+        abstract_args=(params_s, state_s, batch_s, key_s),
+        in_shardings=in_sh, out_shardings=out_sh,
+        meta={"num_workers": n_workers, "q_chunk": q_chunk,
+              "kv_chunk": kv_chunk, "tokens": shape.global_batch
+              * shape.seq_len, "seq_len": shape.seq_len,
+              "global_batch": shape.global_batch})
+
+
+def make_prefill_bundle(cfg, shape, mesh, *, scan_layers=True) -> StepBundle:
+    q_chunk, kv_chunk = _chunks(shape)
+
+    def step(params, batch):
+        logits, cache, _ = forward(params, batch, cfg, mode="prefill",
+                                   scan_layers=scan_layers,
+                                   q_chunk=q_chunk, kv_chunk=kv_chunk)
+        return logits[:, -1], cache
+
+    params_s = abstract_params(cfg)
+    batch_s = prefill_specs(cfg, shape)
+    p_spec = params_pspecs(params_s, model_shards(mesh),
+                           tied_embeddings=cfg.tie_embeddings)
+    b_spec = batch_pspecs(batch_s)
+    in_sh = to_shardings((p_spec, b_spec), mesh)
+
+    out_s = jax.eval_shape(step, params_s, batch_s)
+    logits_spec = _logits_spec(cfg, shape.global_batch, mesh)
+    cache_spec = cache_pspecs(out_s[1], batch_shards=data_shards(mesh),
+                              model_shards=model_shards(mesh))
+    out_sh = to_shardings((logits_spec, cache_spec), mesh)
+    return StepBundle(
+        name="prefill", fn=step, abstract_args=(params_s, batch_s),
+        in_shardings=in_sh, out_shardings=out_sh,
+        meta={"q_chunk": q_chunk, "kv_chunk": kv_chunk,
+              "tokens": shape.global_batch * shape.seq_len,
+              "seq_len": shape.seq_len,
+              "global_batch": shape.global_batch})
+
+
+def make_decode_bundle(cfg, shape, mesh, *, scan_layers=True) -> StepBundle:
+    _, kv_chunk = _chunks(shape)
+    window = decode_window(cfg, shape.seq_len)
+
+    def step(params, cache, batch):
+        logits, new_cache, _ = forward(params, batch, cfg, mode="decode",
+                                       cache=cache, window=window,
+                                       scan_layers=scan_layers,
+                                       kv_chunk=kv_chunk)
+        return logits[:, -1], new_cache
+
+    params_s = abstract_params(cfg)
+    batch_s, cache_s = decode_specs(cfg, shape)
+    p_spec = params_pspecs(params_s, model_shards(mesh),
+                           tied_embeddings=cfg.tie_embeddings)
+    c_spec = cache_pspecs(cache_s, batch_shards=data_shards(mesh),
+                          model_shards=model_shards(mesh))
+    b_spec = batch_pspecs(batch_s, batch_shards=data_shards(mesh))
+    in_sh = to_shardings((p_spec, c_spec, b_spec), mesh)
+    logits_spec = _logits_spec(cfg, shape.global_batch, mesh)
+    out_sh = to_shardings((logits_spec, c_spec), mesh)
+    return StepBundle(
+        name="decode", fn=step, abstract_args=(params_s, cache_s, batch_s),
+        in_shardings=in_sh, out_shardings=out_sh,
+        meta={"kv_chunk": kv_chunk, "window": window,
+              "cache_len": (cache_s["layers"]["attn"]["k"].shape[2]
+                            if not cfg.attn_free and "attn"
+                            in cache_s["layers"] else 0),
+              "tokens": shape.global_batch, "seq_len": shape.seq_len,
+              "global_batch": shape.global_batch})
+
+
+def make_bundle(cfg, shape, mesh, **kw) -> StepBundle:
+    if shape.kind == "train":
+        return make_train_bundle(cfg, shape, mesh, **kw)
+    if shape.kind == "prefill":
+        return make_prefill_bundle(cfg, shape, mesh, **kw)
+    return make_decode_bundle(cfg, shape, mesh, **kw)

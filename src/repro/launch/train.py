@@ -1,0 +1,115 @@
+"""Training driver: RANL (default) or first-order baselines.
+
+Runs end-to-end on host devices at smoke scale and is the same code path the
+dry-run lowers at production scale.  Example:
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b --smoke \
+      --steps 20 --batch 8 --seq 64 --workers 4
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import get_config, smoke_variant
+from ..data import make_batch
+from ..models import init_model, lm_loss
+from ..optim import (AdamWConfig, RanlLLMConfig, adamw_init, adamw_step,
+                     init_state, train_step)
+from ..checkpoint import save
+
+
+def build_loss(cfg, q_chunk=1024, kv_chunk=1024, remat=True):
+    def loss_fn(params, batch):
+        return lm_loss(params, batch, cfg, q_chunk=q_chunk,
+                       kv_chunk=kv_chunk, remat=remat)
+    return loss_fn
+
+
+def run(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi4-mini-3.8b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--optimizer", default="ranl",
+                    choices=["ranl", "adamw"])
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--keep-prob", type=float, default=0.7)
+    ap.add_argument("--mu", type=float, default=1e-4)
+    ap.add_argument("--lr", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--pattern", default="bigram",
+                    choices=["bigram", "uniform"])
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--log-every", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = smoke_variant(cfg)
+    key = jax.random.PRNGKey(args.seed)
+    kp, kd, ko = jax.random.split(key, 3)
+
+    params = init_model(cfg, kp)
+    loss_fn = build_loss(cfg, q_chunk=min(1024, args.seq),
+                         kv_chunk=min(1024, args.seq))
+    batch0 = make_batch(cfg, jax.random.fold_in(kd, 0),
+                        args.batch, args.seq, pattern=args.pattern)
+
+    history = []
+    if args.optimizer == "ranl":
+        rcfg = RanlLLMConfig(num_workers=args.workers,
+                             keep_prob=args.keep_prob, mu=args.mu,
+                             lr=args.lr)
+        state = init_state(params, loss_fn, batch0, rcfg, ko)
+        step_fn = jax.jit(partial(train_step, loss_fn=loss_fn, cfg=rcfg))
+        for t in range(args.steps):
+            batch = make_batch(cfg, jax.random.fold_in(kd, t + 1),
+                               args.batch, args.seq, pattern=args.pattern)
+            t0 = time.perf_counter()
+            params, state, metrics = step_fn(params, state, batch, ko)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics["step_s"] = time.perf_counter() - t0
+            history.append(metrics)
+            if t % args.log_every == 0:
+                print(f"step {t:4d} loss={metrics['loss']:.4f} "
+                      f"cov={metrics['coverage']:.2f} "
+                      f"uplink={metrics['uplink_frac']:.2f} "
+                      f"({metrics['step_s']:.2f}s)")
+    else:
+        acfg = AdamWConfig(lr=1e-3)
+        state = adamw_init(params, acfg)
+
+        @jax.jit
+        def astep(params, state, batch):
+            loss, g = jax.value_and_grad(loss_fn)(params, batch)
+            params, state = adamw_step(params, state, g, acfg)
+            return params, state, loss
+
+        for t in range(args.steps):
+            batch = make_batch(cfg, jax.random.fold_in(kd, t + 1),
+                               args.batch, args.seq, pattern=args.pattern)
+            params, state, loss = astep(params, state, batch)
+            history.append({"loss": float(loss)})
+            if t % args.log_every == 0:
+                print(f"step {t:4d} loss={float(loss):.4f}")
+
+    if args.checkpoint_dir:
+        save(params, args.checkpoint_dir, step=args.steps)
+        print(f"saved checkpoint to {args.checkpoint_dir}")
+    print(json.dumps({"final_loss": history[-1]["loss"],
+                      "first_loss": history[0]["loss"]}))
+    return history
+
+
+if __name__ == "__main__":
+    run()

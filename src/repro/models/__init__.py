@@ -1,0 +1,7 @@
+from .transformer import (  # noqa: F401
+    forward,
+    init_decode_cache,
+    init_model,
+    lm_loss,
+)
+from .io import decode_specs, input_specs, prefill_specs, train_specs  # noqa: F401

@@ -1,0 +1,71 @@
+"""Shared building blocks: RMSNorm, RoPE, SwiGLU, init helpers."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, dtype=jnp.float32, scale: float | None = None):
+    """Truncated-normal init with 1/sqrt(fan_in) scale (fan_in = shape[-2])."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * 0.02).astype(dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    # stats in fp32, but the normalize multiply stays in x.dtype: an fp32
+    # product would be a full fp32 copy of the hidden state, which the
+    # layer-scan backward then stashes per layer (2x the activation stash)
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1,
+                   keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * scale.astype(x.dtype)
+
+
+def rope_cos_sin(positions, head_dim: int, theta: float):
+    """positions: (..., S) int32 -> cos/sin of shape (..., S, head_dim//2)."""
+    freqs = 1.0 / (theta ** (
+        jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (B, S, heads, hd); positions: (B, S) -> rotated x (same dtype)."""
+    hd = x.shape[-1]
+    cos, sin = rope_cos_sin(positions, hd, theta)      # (B, S, hd//2)
+    cos = cos[:, :, None, :]                            # (B, S, 1, hd//2)
+    sin = sin[:, :, None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = jnp.split(xf, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_swiglu(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, (d_model, d_ff), dtype),
+        "up": dense_init(k2, (d_model, d_ff), dtype),
+        "down": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def apply_swiglu(params, x):
+    h = jax.nn.silu(x @ params["gate"]) * (x @ params["up"])
+    return h @ params["down"]
+
+
+def softmax_cross_entropy(logits, labels):
+    """logits: (..., V) float; labels: (...,) int32 -> scalar mean loss (f32)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,92 @@
+"""Input/cache specs per (config x input-shape): ShapeDtypeStruct stand-ins.
+
+Used by the multi-pod dry-run (no allocation) and mirrored by
+``repro.data.synthetic`` for real smoke-test batches.  Modality frontends are
+stubbed per the task carve-out: VLM batches carry precomputed patch
+embeddings; audio batches carry EnCodec token streams.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .transformer import init_decode_cache
+
+
+def _tokens_spec(cfg, batch: int, seq: int):
+    if cfg.modality == "audio":
+        return jax.ShapeDtypeStruct((batch, seq, cfg.num_codebooks), jnp.int32)
+    return jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+
+
+def _maybe_vision(cfg, batch: int, specs: dict):
+    if cfg.modality == "vision":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.vision_tokens, cfg.vision_embed_dim), jnp.bfloat16)
+    return specs
+
+
+def decode_cache_len(cfg, seq_len: int) -> int:
+    """KV-cache length for a decode step at context ``seq_len``.
+
+    Sub-quadratic rule (DESIGN.md §4): contexts beyond the sliding window run
+    the windowed variant, so cache state is O(window), not O(context).  RWKV
+    has no KV cache at all (O(1) recurrent state).
+    """
+    if cfg.attn_free:
+        return 0
+    window = cfg.sliding_window
+    if cfg.family == "hybrid":
+        return min(seq_len, window)
+    if seq_len > 32_768:  # long-context: windowed variant required
+        return window
+    return seq_len
+
+
+def decode_window(cfg, seq_len: int) -> int:
+    """Attention window used by serve_step at context ``seq_len``."""
+    if cfg.attn_free:
+        return 0
+    if cfg.family == "hybrid":
+        return cfg.sliding_window
+    return cfg.sliding_window if seq_len > 32_768 else 0
+
+
+def train_specs(cfg, shape):
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": _tokens_spec(cfg, b, s),
+             "labels": _tokens_spec(cfg, b, s)}
+    return _maybe_vision(cfg, b, specs)
+
+
+def prefill_specs(cfg, shape):
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": _tokens_spec(cfg, b, s)}
+    return _maybe_vision(cfg, b, specs)
+
+
+def decode_specs(cfg, shape, cache_dtype=None):
+    """Returns (batch_specs, cache_specs) for one decode step.
+
+    (VLM decode consumes text tokens only — the vision prefix lives in the
+    prefilled KV cache.)"""
+    if cache_dtype is None:
+        cache_dtype = jnp.dtype(cfg.dtype)
+    b, s = shape.global_batch, shape.seq_len
+    batch = {"tokens": _tokens_spec(cfg, b, 1),
+             "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    clen = decode_cache_len(cfg, s)
+    cache = jax.eval_shape(
+        lambda: init_decode_cache(cfg, b, max(clen, 1), cache_dtype))
+    return batch, cache
+
+
+def input_specs(cfg, shape):
+    """Dispatch per shape kind -> dict of ShapeDtypeStructs (+cache)."""
+    if shape.kind == "train":
+        return {"batch": train_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_specs(cfg, shape)}
+    batch, cache = decode_specs(cfg, shape)
+    return {"batch": batch, "cache": cache}

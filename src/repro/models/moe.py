@@ -1,0 +1,83 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Dispatch is straight-line HLO (top-k, argsort, scatter/gather, batched
+matmuls) — no loops — so (a) compiled FLOPs reflect only the *routed* tokens
+(tokens × k experts), matching MoE active compute, and (b) the expert axis
+shards cleanly over the ``model`` mesh axis (expert parallelism): the
+scatter into the (E, C, d) buffer lowers to the MoE all-to-all.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+from .sharding import shard_hint
+
+
+def init_moe(cfg, key, dtype=jnp.float32):
+    d, ff, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    kr, kg, ku, kd = jax.random.split(key, 4)
+    return {
+        "router": dense_init(kr, (d, E), dtype, scale=0.02),
+        "gate": dense_init(kg, (E, d, ff), dtype),
+        "up": dense_init(ku, (E, d, ff), dtype),
+        "down": dense_init(kd, (E, ff, d), dtype),
+    }
+
+
+def apply_moe(params, x, cfg):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.experts_per_token
+    T = B * S
+    xf = x.reshape(T, d)
+
+    logits = (xf @ params["router"]).astype(jnp.float32)       # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(logits, k)                    # (T, k)
+    top_w = jax.nn.softmax(top_w, axis=-1).astype(x.dtype)
+
+    # Load-balance aux loss (Switch-style): E * sum_e f_e * p_e.
+    onehot = jax.nn.one_hot(top_e, E, dtype=jnp.float32)       # (T, k, E)
+    frac_tokens = onehot.sum(axis=(0, 1)) / (T * k)
+    mean_probs = probs.mean(axis=0)
+    aux = E * jnp.sum(frac_tokens * mean_probs) * cfg.router_aux_weight
+
+    # --- capacity-based dispatch ---
+    # Capacity truncation makes outputs depend on batch composition (tokens
+    # beyond an expert's slots are dropped) — standard train-time behavior.
+    # For small token counts (decode steps), use worst-case capacity so
+    # serving never drops.
+    C = int(math.ceil(T * k / E * cfg.capacity_factor))
+    if T <= 64:
+        C = T * k
+    flat_e = top_e.reshape(T * k)                              # expert ids
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)     # token ids
+    flat_w = top_w.reshape(T * k)
+
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    group_start = jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos_in_e = jnp.arange(T * k, dtype=jnp.int32) - group_start
+    keep = pos_in_e < C
+    dest = jnp.where(keep, sorted_e * C + pos_in_e, E * C)     # E*C = dropped
+    src_t = flat_t[order]
+    src_w = flat_w[order]
+
+    buf = jnp.zeros((E * C, d), x.dtype)
+    buf = buf.at[dest].set(xf[src_t], mode="drop")
+    buf = shard_hint(buf.reshape(E, C, d), ("model", None, None))
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, params["up"])
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["down"])
+    out_buf = shard_hint(out_buf, ("model", None, None)).reshape(E * C, d)
+
+    gathered = out_buf[jnp.minimum(dest, E * C - 1)]
+    gathered = gathered * (keep[:, None] * src_w[:, None]).astype(x.dtype)
+    out = jnp.zeros((T, d), x.dtype).at[src_t].add(gathered)
+    return out.reshape(B, S, d), aux

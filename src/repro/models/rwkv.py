@@ -1,0 +1,148 @@
+"""RWKV-6 (Finch) blocks: time-mix with data-dependent decay + channel-mix.
+
+The wkv recurrence
+    y_t = r_t · (S + u ⊙ (k_t ⊗ v_t)),   S ← diag(w_t) S + k_t ⊗ v_t
+is evaluated with ``lax.scan`` over time (the (B, H, hd, hd) state makes an
+associative scan memory-infeasible).  On TPU the production path is the
+Pallas ``rwkv_wkv`` kernel which keeps S resident in VMEM across timesteps;
+the scan here is the reference/portable path.  Roofline accounting for the
+recurrence is added analytically (see benchmarks/roofline.py) because scan
+bodies are counted once by XLA cost analysis.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init, rms_norm
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / carried state at t=0). x: (B,S,d)."""
+    B, S, d = x.shape
+    first = jnp.zeros((B, 1, d), x.dtype) if last is None else last[:, None]
+    return jnp.concatenate([first, x[:, :-1]], axis=1)
+
+
+def init_time_mix(cfg, key, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.num_rwkv_heads
+    hd = cfg.rwkv_head_dim
+    lora = 64
+    keys = jax.random.split(key, 8)
+    return {
+        "mu": 0.5 * jnp.ones((5, d), dtype),     # r,k,v,w,g shift mixes
+        "w_r": dense_init(keys[0], (d, H * hd), dtype),
+        "w_k": dense_init(keys[1], (d, H * hd), dtype),
+        "w_v": dense_init(keys[2], (d, H * hd), dtype),
+        "w_g": dense_init(keys[3], (d, H * hd), dtype),
+        "decay_base": jnp.full((H * hd,), -6.0, dtype),
+        "decay_lo": dense_init(keys[4], (d, lora), dtype, scale=0.01),
+        "decay_hi": dense_init(keys[5], (lora, H * hd), dtype, scale=0.01),
+        "bonus_u": dense_init(keys[6], (H, hd), dtype, scale=0.5),
+        "ln_x": jnp.ones((hd,), dtype),
+        "w_o": dense_init(keys[7], (H * hd, d), dtype),
+    }
+
+
+def _wkv_scan_inner(r, k, v, w, u, state):
+    """Sequential scan over the full length of r (time axis 1)."""
+    def step(S, inputs):
+        r_t, k_t, v_t, w_t = inputs                       # (B, H, hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]        # (B,H,hd,hd)
+        y = jnp.einsum("bhi,bhij->bhj", r_t,
+                       S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    seq = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+                for t in (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, seq)
+    return jnp.moveaxis(ys, 0, 1), state
+
+
+def _wkv_scan(r, k, v, w, u, state, chunk: int = 64):
+    """r,k,v,w: (B, S, H, hd); u: (H, hd); state: (B, H, hd, hd) fp32.
+
+    Returns (y: (B, S, H, hd) fp32, final state).
+
+    Time is processed in checkpointed chunks: a naive scan's backward pass
+    stores the (B,H,hd,hd) state for every timestep (TBs at train shapes);
+    checkpointing at chunk boundaries stores only S/chunk states and
+    recomputes one chunk's steps at a time.
+    """
+    B, S, H, hd = r.shape
+    if S <= chunk or S % chunk:
+        return _wkv_scan_inner(r, k, v, w, u, state)
+    nc = S // chunk
+
+    @jax.checkpoint
+    def chunk_step(S0, inp):
+        rc, kc, vc, wc = inp                              # (B, chunk, H, hd)
+        y, S1 = _wkv_scan_inner(rc, kc, vc, wc, u, S0)
+        return S1, y
+
+    seq = tuple(
+        jnp.moveaxis(t.reshape(B, nc, chunk, H, hd), 1, 0)
+        for t in (r, k, v, w))
+    state, ys = jax.lax.scan(chunk_step, state, seq)      # ys: (nc,B,ck,H,hd)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, hd)
+    return y, state
+
+
+def apply_time_mix(params, x, cfg, *, state=None):
+    """x: (B, S, d). state: None or {"last_x": (B,d), "wkv": (B,H,hd,hd)}."""
+    B, S, d = x.shape
+    H, hd = cfg.num_rwkv_heads, cfg.rwkv_head_dim
+    last = None if state is None else state["last_x"]
+    xs = _shift(x, last)
+    mix = lambda i: x + (xs - x) * params["mu"][i]
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+
+    r = (xr @ params["w_r"]).reshape(B, S, H, hd)
+    k = (xk @ params["w_k"]).reshape(B, S, H, hd)
+    v = (xv @ params["w_v"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ params["w_g"])
+    # data-dependent decay (Finch): w_t = exp(-exp(base + lora(x)))
+    dlog = params["decay_base"] + jnp.tanh(
+        xw @ params["decay_lo"]) @ params["decay_hi"]
+    w = jnp.exp(-jnp.exp(dlog.astype(jnp.float32))).reshape(B, S, H, hd)
+
+    wkv0 = (jnp.zeros((B, H, hd, hd), jnp.float32)
+            if state is None else state["wkv"])
+    y, wkv = _wkv_scan(r, k, v, w, params["bonus_u"], wkv0)
+    y = rms_norm(y, params["ln_x"]).reshape(B, S, H * hd).astype(x.dtype)
+    out = (y * g) @ params["w_o"]
+    new_state = {"last_x": x[:, -1], "wkv": wkv}
+    return out, new_state
+
+
+def init_channel_mix(cfg, key, dtype=jnp.float32):
+    d, ff = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, d), dtype),     # k, r shift mixes
+        "w_k": dense_init(k1, (d, ff), dtype),
+        "w_v": dense_init(k2, (ff, d), dtype),
+        "w_r": dense_init(k3, (d, d), dtype),
+    }
+
+
+def apply_channel_mix(params, x, cfg, *, state=None):
+    last = None if state is None else state["last_x"]
+    xs = _shift(x, last)
+    xk = x + (xs - x) * params["mu"][0]
+    xr = x + (xs - x) * params["mu"][1]
+    kk = jnp.square(jax.nn.relu(xk @ params["w_k"]))
+    out = jax.nn.sigmoid(xr @ params["w_r"]) * (kk @ params["w_v"])
+    return out, {"last_x": x[:, -1]}
+
+
+def init_rwkv_state(cfg, batch: int, dtype=jnp.float32):
+    H, hd, d = cfg.num_rwkv_heads, cfg.rwkv_head_dim, cfg.d_model
+    return {
+        "tmix_last_x": jnp.zeros((batch, d), dtype),
+        "wkv": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "cmix_last_x": jnp.zeros((batch, d), dtype),
+    }

@@ -1,0 +1,63 @@
+"""Ambient-mesh sharding hints usable from model code.
+
+``shard_hint(x, spec)`` applies ``with_sharding_constraint`` when a mesh has
+been installed (by the launcher / dry-run); it is a no-op in single-device
+tests, so model code stays mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    prev = current_mesh()
+    _STATE.mesh = mesh
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _STATE.mesh = prev
+
+
+UNCONSTRAINED = P.UNCONSTRAINED
+
+
+def _trim_spec(spec, mesh: Mesh):
+    """Drop mesh axes not present (e.g. 'pod' on the single-pod mesh)."""
+    out = []
+    for part in spec:
+        if part is None or part is UNCONSTRAINED:
+            out.append(part)
+        elif isinstance(part, (tuple, list)):
+            kept = tuple(a for a in part if a in mesh.axis_names)
+            out.append(kept if kept else None)
+        else:
+            out.append(part if part in mesh.axis_names else None)
+    return tuple(out)
+
+
+def shard_hint(x, spec):
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*_trim_spec(spec, mesh))))
+
+
+BATCH_AXES = ("pod", "data")
+
+
+def named_sharding(mesh: Mesh, *spec):
+    return NamedSharding(mesh, P(*_trim_spec(spec, mesh)))

@@ -1,0 +1,112 @@
+"""Selective SSM (Mamba-style) branch used by the Hymba hybrid blocks.
+
+Diagonal state recurrence  h_t = a_t ⊙ h_{t-1} + b_t  is evaluated with
+``jax.lax.associative_scan`` over the time axis — fully parallel,
+straight-line HLO (so FLOPs/bytes are exactly counted by cost analysis and
+the work maps onto the TPU vector units instead of a sequential loop).
+Decode keeps the (B, d_inner, n) state and applies one recurrence step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+
+
+def init_ssm(cfg, key, dtype=jnp.float32):
+    d = cfg.d_model
+    di = d                      # inner width (1x expansion for the branch)
+    n = cfg.ssm_state
+    r = max(1, di // 16)        # low-rank dt projection
+    keys = jax.random.split(key, 7)
+    return {
+        "in_proj": dense_init(keys[0], (d, 2 * di), dtype),
+        "conv": dense_init(keys[1], (cfg.ssm_conv_width, di), dtype,
+                           scale=cfg.ssm_conv_width ** -0.5),
+        "dt_lo": dense_init(keys[2], (di, r), dtype),
+        "dt_hi": dense_init(keys[3], (r, di), dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),   # softplus^-1(0.01)
+        "w_B": dense_init(keys[4], (di, n), dtype),
+        "w_C": dense_init(keys[5], (di, n), dtype),
+        "A_log": jnp.zeros((di, n), dtype),        # A = -exp(A_log) stable
+        "D": jnp.ones((di,), dtype),
+        "out_proj": dense_init(keys[6], (di, d), dtype),
+    }
+
+
+def _causal_conv(u, w, conv_state=None):
+    """Depthwise causal conv. u: (B, S, di); w: (W, di).
+
+    conv_state: (B, W-1, di) trailing inputs from the previous step (decode).
+    Returns (y, new_conv_state).
+    """
+    B, S, di = u.shape
+    W = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((B, W - 1, di), u.dtype)
+    else:
+        pad = conv_state
+    full = jnp.concatenate([pad, u], axis=1)          # (B, S+W-1, di)
+    y = sum(full[:, i:i + S] * w[i] for i in range(W))
+    new_state = full[:, -(W - 1):] if W > 1 else jnp.zeros((B, 0, di), u.dtype)
+    return y, new_state
+
+
+def _ssm_scan(a, b, h0=None):
+    """h_t = a_t * h_{t-1} + b_t (elementwise), via associative scan.
+
+    a, b: (B, S, di, n). h0: (B, di, n) or None. Returns all h: (B, S, di, n).
+    """
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, a_r * b_l + b_r
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def apply_ssm(params, x, cfg, *, state=None):
+    """x: (B, S, d). state: None (train/prefill start) or decode state dict
+    {"h": (B, di, n), "conv": (B, W-1, di)}. Returns (y, new_state)."""
+    B, S, d = x.shape
+    n = cfg.ssm_state
+    xz = x @ params["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)               # (B, S, di) each
+
+    conv_state = None if state is None else state["conv"]
+    u, new_conv = _causal_conv(x_in, params["conv"], conv_state)
+    u = jax.nn.silu(u)
+
+    dt = jax.nn.softplus(
+        (u @ params["dt_lo"]) @ params["dt_hi"] + params["dt_bias"])
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))  # (di, n), negative
+    Bmat = u @ params["w_B"]                           # (B, S, n)
+    Cmat = u @ params["w_C"]                           # (B, S, n)
+
+    dtf = dt.astype(jnp.float32)[..., None]            # (B, S, di, 1)
+    a = jnp.exp(dtf * A)                               # (B, S, di, n)
+    b = dtf * Bmat[:, :, None, :].astype(jnp.float32) \
+        * u[..., None].astype(jnp.float32)
+
+    h0 = None if state is None else state["h"]
+    h = _ssm_scan(a, b, h0)                            # (B, S, di, n)
+    y = jnp.einsum("bsdn,bsn->bsd", h, Cmat.astype(jnp.float32))
+    y = y.astype(x.dtype) + params["D"] * u
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"]
+    new_state = {"h": h[:, -1], "conv": new_conv}
+    return out, new_state
+
+
+def init_ssm_state(cfg, batch: int, dtype=jnp.float32):
+    di, n, W = cfg.d_model, cfg.ssm_state, cfg.ssm_conv_width
+    return {
+        "h": jnp.zeros((batch, di, n), jnp.float32),
+        "conv": jnp.zeros((batch, W - 1, di), dtype),
+    }

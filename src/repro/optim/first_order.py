@@ -1,0 +1,73 @@
+"""First-order baselines (the paper's comparison class): SGD, AdamW.
+
+Minimal hand-rolled implementations (no optax dependency) so baseline runs
+share the exact same step/sharding machinery as RANL.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SGDConfig:
+    lr: float = 0.1
+    momentum: float = 0.0
+
+
+def sgd_init(params, cfg: SGDConfig):
+    if cfg.momentum:
+        return {"m": jax.tree.map(jnp.zeros_like, params)}
+    return {}
+
+
+def sgd_step(params, state, grads, cfg: SGDConfig):
+    if cfg.momentum:
+        m = jax.tree.map(lambda m_, g: cfg.momentum * m_ + g,
+                         state["m"], grads)
+        new = jax.tree.map(lambda p, m_: p - cfg.lr * m_, params, m)
+        return new, {"m": m}
+    return jax.tree.map(lambda p, g: p - cfg.lr * g, params, grads), state
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+
+def adamw_step(params, state, grads, cfg: AdamWConfig):
+    t = state["step"] + 1
+    b1t = 1.0 - cfg.b1 ** t.astype(jnp.float32)
+    b2t = 1.0 - cfg.b2 ** t.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_ = cfg.b1 * m + (1 - cfg.b1) * gf
+        v_ = cfg.b2 * v + (1 - cfg.b2) * jnp.square(gf)
+        step = cfg.lr * (m_ / b1t) / (jnp.sqrt(v_ / b2t) + cfg.eps)
+        if cfg.weight_decay:
+            step = step + cfg.lr * cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - step).astype(p.dtype), m_, v_
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state["m"])
+    flat_v = jax.tree_util.tree_leaves(state["v"])
+    out = [upd(*args) for args in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+    return new_p, {"step": t, "m": new_m, "v": new_v}

@@ -1,0 +1,206 @@
+"""Unit + property tests for the paper-faithful core (Algorithm 1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (PolicyConfig, ensure_coverage, expand_mask,
+                        contiguous_regions, make_quadratic, project_psd,
+                        region_sizes, rounds_to_tol, run_gd,
+                        run_newton_zero, run_ranl, sample_masks,
+                        server_aggregate, solve_projected)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# --------------------------------------------------------------------------
+# Definition 4 projection
+# --------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 12), st.floats(0.01, 2.0), st.integers(0, 10_000))
+def test_projection_floor_and_symmetry(d, mu, seed):
+    a = jax.random.normal(jax.random.PRNGKey(seed), (d, d))
+    p = project_psd(a, mu)
+    w = np.linalg.eigvalsh(np.asarray(p))
+    assert w.min() >= mu - 1e-4          # μI ⪯ [A]_μ
+    np.testing.assert_allclose(p, p.T, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 10), st.floats(0.05, 1.0), st.integers(0, 10_000))
+def test_projection_idempotent(d, mu, seed):
+    a = jax.random.normal(jax.random.PRNGKey(seed), (d, d))
+    p1 = project_psd(a, mu)
+    p2 = project_psd(p1, mu)
+    np.testing.assert_allclose(p1, p2, atol=1e-4)
+
+
+def test_projection_lemma1_contraction():
+    """Lemma 1: ‖[H]_μ − H*‖_F ≤ ‖H − H*‖_F for H* ⪰ μI."""
+    d, mu = 16, 0.5
+    for seed in range(10):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+        h = jax.random.normal(k1, (d, d))
+        h = 0.5 * (h + h.T)
+        hstar = project_psd(jax.random.normal(k2, (d, d)), mu)
+        lhs = jnp.linalg.norm(project_psd(h, mu) - hstar)
+        rhs = jnp.linalg.norm(0.5 * (h + h.T) - hstar)
+        assert float(lhs) <= float(rhs) + 1e-5
+
+
+def test_solve_projected_matches_inverse():
+    a = project_psd(jax.random.normal(KEY, (8, 8)), 0.3)
+    g = jax.random.normal(jax.random.fold_in(KEY, 1), (8,))
+    np.testing.assert_allclose(solve_projected(a, g),
+                               jnp.linalg.solve(a, g), rtol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# regions / masks
+# --------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 64), st.integers(1, 16))
+def test_region_partition_covers_every_coordinate(d, q):
+    q = min(q, d)
+    ids = contiguous_regions(d, q)
+    assert ids.shape == (d,)
+    assert int(ids.min()) == 0 and int(ids.max()) == q - 1
+    sizes = np.asarray(region_sizes(ids, q))
+    assert sizes.sum() == d and sizes.min() >= 1
+    assert (np.diff(np.asarray(ids)) >= 0).all()   # contiguous
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 12), st.integers(1, 6),
+       st.integers(0, 1000))
+def test_ensure_coverage_guarantees_tau(n, q, tau, seed):
+    tau = min(tau, n)
+    m = jax.random.uniform(jax.random.PRNGKey(seed), (n, q)) < 0.2
+    fixed = ensure_coverage(m, jax.random.PRNGKey(seed), tau)
+    assert (np.asarray(fixed.sum(axis=0)) >= tau).all()
+    # repair only adds coverage, never removes
+    assert bool(jnp.all(fixed | ~m))
+
+
+def test_mask_policies_shapes_and_determinism():
+    for name in ("bernoulli", "fixed_k", "roundrobin", "full", "staleness"):
+        pol = PolicyConfig(name=name, keep_prob=0.5, keep_k=2,
+                           stale_period=2)
+        m1 = sample_masks(pol, KEY, 3, 8, 6)
+        m2 = sample_masks(pol, KEY, 3, 8, 6)
+        assert m1.shape == (8, 6) and m1.dtype == jnp.bool_
+        np.testing.assert_array_equal(m1, m2)       # deterministic in key
+    full = sample_masks(PolicyConfig(name="full"), KEY, 0, 4, 5)
+    assert bool(full.all())
+
+
+# --------------------------------------------------------------------------
+# server aggregation (Algorithm 1 lines 15–22)
+# --------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 40), st.integers(0, 10_000))
+def test_full_coverage_equals_plain_mean(n, d, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    g = jax.random.normal(k1, (n, d))
+    c = jax.random.normal(k2, (n, d))
+    masks = jnp.ones((n, d), bool)
+    out, c_new = server_aggregate(g, masks, c)
+    np.testing.assert_allclose(out, g.mean(axis=0), rtol=2e-5, atol=1e-6)
+    np.testing.assert_array_equal(c_new, g)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 8), st.integers(2, 40), st.integers(0, 10_000))
+def test_uncovered_regions_use_memory_mean(n, d, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    g = jax.random.normal(k1, (n, d))
+    c = jax.random.normal(k2, (n, d))
+    masks = jnp.zeros((n, d), bool)
+    out, c_new = server_aggregate(g * 0.0, masks, c)
+    np.testing.assert_allclose(out, c.mean(axis=0), rtol=2e-5, atol=1e-6)
+    np.testing.assert_array_equal(c_new, c)        # memory untouched
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 8), st.integers(4, 32), st.integers(0, 10_000),
+       st.floats(0.1, 0.9))
+def test_aggregation_per_coordinate_semantics(n, d, seed, p):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    g = jax.random.normal(ks[0], (n, d))
+    c = jax.random.normal(ks[1], (n, d))
+    masks = jax.random.uniform(ks[2], (n, d)) < p
+    gm = jnp.where(masks, g, 0.0)
+    out, c_new = server_aggregate(gm, masks, c)
+    gn, cn, outn = map(np.asarray, (gm, c, out))
+    mn = np.asarray(masks)
+    for j in range(d):
+        cov = mn[:, j]
+        if cov.any():
+            exp = gn[cov, j].mean()
+        else:
+            exp = cn[:, j].mean()
+        assert abs(outn[j] - exp) < 1e-4
+    np.testing.assert_array_equal(np.asarray(c_new),
+                                  np.where(mn, gn, cn))
+
+
+# --------------------------------------------------------------------------
+# convergence claims (Theorem 1)
+# --------------------------------------------------------------------------
+
+def test_ranl_linear_convergence_region_aligned():
+    prob = make_quadratic(KEY, num_workers=8, dim=64, kappa=100.0,
+                          coupling=0.0, num_regions=8)
+    res = run_ranl(prob, KEY, num_rounds=40, num_regions=8,
+                   policy=PolicyConfig(keep_prob=0.5, tau_star=1,
+                                       heterogeneous=False))
+    assert float(res.dist_sq[-1]) < 1e-9 * float(res.dist_sq[0])
+
+
+def test_ranl_condition_number_independence():
+    rounds = {}
+    for kappa in (10.0, 1000.0):
+        prob = make_quadratic(KEY, num_workers=8, dim=32, kappa=kappa,
+                              coupling=0.0, num_regions=4)
+        res = run_ranl(prob, KEY, num_rounds=60, num_regions=4,
+                       policy=PolicyConfig(keep_prob=0.7, tau_star=1,
+                                           heterogeneous=False))
+        rounds[kappa] = rounds_to_tol(res.dist_sq, 1e-8)
+        _, dg = run_gd(prob, KEY, num_rounds=60)
+        if kappa >= 1000:
+            assert rounds_to_tol(dg, 1e-8) >= 59    # GD stalls at high κ
+    assert abs(rounds[10.0] - rounds[1000.0]) <= 10
+
+
+def test_ranl_full_mask_matches_newton_zero():
+    """RANL with full masks must be exactly NewtonZero (same seeds)."""
+    prob = make_quadratic(KEY, num_workers=8, dim=32, kappa=50.0,
+                          hess_noise=0.1, grad_noise=0.05)
+    res = run_ranl(prob, KEY, num_rounds=10, num_regions=4,
+                   policy=PolicyConfig(name="full"))
+    d = np.asarray(res.dist_sq)
+    _, dz = run_newton_zero(prob, KEY, num_rounds=10)
+    dz = np.asarray(dz)
+    # identical init phase (same seeds, full masks == no pruning)
+    np.testing.assert_allclose(d[1], dz[1], rtol=1e-5)
+    # both settle at the same stochastic floor (Δ > 0 here)
+    assert d[-1] < 1e-4 * d[0]
+    assert dz[-1] < 1e-4 * dz[0]
+
+
+def test_staleness_floor_monotone():
+    prob = make_quadratic(KEY, num_workers=8, dim=64, kappa=100.0,
+                          coupling=0.0, num_regions=8)
+    floors = []
+    for period in (0, 2, 4):
+        res = run_ranl(prob, KEY, num_rounds=40, num_regions=8,
+                       policy=PolicyConfig(name="staleness", keep_prob=0.5,
+                                           stale_period=period,
+                                           heterogeneous=False))
+        floors.append(float(np.asarray(res.dist_sq)[-5:].mean()))
+    assert floors[0] < floors[1] < floors[2]

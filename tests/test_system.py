@@ -1,0 +1,102 @@
+"""End-to-end behaviour tests: training improves, serving generates,
+checkpoints roundtrip, data pipeline is deterministic."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore, save
+from repro.configs import INPUT_SHAPES, get_config, list_configs, smoke_variant
+from repro.data import make_batch, token_stream
+
+
+def test_config_registry_complete():
+    archs = list_configs()
+    assert len(archs) == 10
+    families = {get_config(a).family for a in archs}
+    assert families == {"dense", "moe", "ssm", "hybrid", "vlm", "audio"}
+    assert set(INPUT_SHAPES) == {"train_4k", "prefill_32k", "decode_32k",
+                                 "long_500k"}
+    shp = INPUT_SHAPES["train_4k"]
+    assert shp.seq_len == 4096 and shp.global_batch == 256
+
+
+def test_end_to_end_ranl_training_learns():
+    from repro.launch.train import run
+    hist = run(["--arch", "phi4-mini-3.8b", "--smoke", "--steps", "12",
+                "--batch", "16", "--seq", "64", "--workers", "4",
+                "--log-every", "100"])
+    assert hist[-1]["loss"] < hist[0]["loss"] - 1.0
+
+
+def test_end_to_end_adamw_baseline_learns():
+    from repro.launch.train import run
+    hist = run(["--arch", "phi4-mini-3.8b", "--smoke", "--steps", "12",
+                "--batch", "16", "--seq", "64", "--optimizer", "adamw",
+                "--log-every", "100"])
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.3
+
+
+def test_end_to_end_serving_generates():
+    from repro.launch.serve import run
+    gen = run(["--arch", "rwkv6-3b", "--batch", "2",
+               "--prompt-len", "16", "--gen", "8"])
+    assert gen.shape[1] == 8
+    assert bool((gen >= 0).all())
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.models import init_model
+    cfg = smoke_variant(get_config("hymba-1.5b"))
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    d = str(tmp_path / "ckpt")
+    save(params, d, step=7)
+    like = jax.tree.map(jnp.zeros_like, params)
+    back = restore(like, d)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    from repro.models import init_model
+    cfg = smoke_variant(get_config("phi4-mini-3.8b"))
+    params = init_model(cfg, jax.random.PRNGKey(0))
+    d = str(tmp_path / "ckpt")
+    save(params, d)
+    bad = jax.tree.map(lambda x: jnp.zeros(x.shape + (1,), x.dtype), params)
+    with pytest.raises(ValueError):
+        restore(bad, d)
+
+
+def test_data_deterministic_and_heterogeneous():
+    cfg = smoke_variant(get_config("phi4-mini-3.8b"))
+    k = jax.random.PRNGKey(3)
+    a = token_stream(cfg, k, 4, 64)
+    b = token_stream(cfg, k, 4, 64)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # heterogeneity: worker-0 band differs from worker-7 band
+    w0 = token_stream(cfg, k, 2, 512, worker=0, num_workers=8,
+                      heterogeneity=1.0)
+    w7 = token_stream(cfg, k, 2, 512, worker=7, num_workers=8,
+                      heterogeneity=1.0)
+    assert abs(float(jnp.mean(w0)) - float(jnp.mean(w7))) \
+        > cfg.vocab_size / 16
+
+
+def test_bigram_pattern_is_learnable_structure():
+    cfg = smoke_variant(get_config("phi4-mini-3.8b"))
+    toks = np.asarray(token_stream(cfg, jax.random.PRNGKey(0), 4, 256,
+                                   pattern="bigram"))
+    nxt = (31 * toks[:, :-1] + 17) % cfg.vocab_size
+    frac = (toks[:, 1:] == nxt).mean()
+    assert frac > 0.8           # ~90% follow the affine bigram map
+
+
+def test_audio_batch_shapes():
+    cfg = smoke_variant(get_config("musicgen-medium"))
+    b = make_batch(cfg, jax.random.PRNGKey(0), 2, 16)
+    assert b["tokens"].shape == (2, 16, cfg.num_codebooks)
+    assert b["labels"].shape == (2, 16, cfg.num_codebooks)
