@@ -2,7 +2,9 @@
 experiment tables exist, so each paper *claim* gets one benchmark; see
 DESIGN.md §7 for the index).
 
-Each function returns a list of row dicts and is wired into run.py.
+Each function returns a list of row dicts and is wired into run.py.  All
+take ``smoke=True`` for a tiny-shape / few-round variant that finishes in
+seconds (the CI smoke job).
 """
 
 from __future__ import annotations
@@ -15,7 +17,8 @@ import numpy as np
 
 from repro.core import (PolicyConfig, make_logistic, make_quadratic,
                         rounds_to_tol, run_gd, run_newton_exact,
-                        run_newton_zero, run_ranl)
+                        run_newton_zero, run_ranl, run_ranl_batch,
+                        run_ranl_reference)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -23,25 +26,28 @@ KEY = jax.random.PRNGKey(0)
 def _timed(fn):
     t0 = time.perf_counter()
     out = fn()
+    jax.block_until_ready(jax.tree.leaves(out.__dict__ if hasattr(out, "__dict__") else out))
     return out, (time.perf_counter() - t0) * 1e6
 
 
-def bench_convergence():
+def bench_convergence(smoke: bool = False):
     """Theorem 1: linear contraction, rate ≤ ~1/2-ish per covered round.
 
     Region-aligned quadratic (coupling=0) with σ>0 Hessian noise so
     convergence is multi-round; reports the mean per-round contraction.
     """
+    dim, rounds = (32, 12) if smoke else (64, 30)
     rows = []
-    for sigma in (0.1, 0.3):
-        prob = make_quadratic(KEY, num_workers=16, dim=64, kappa=100.0,
+    for sigma in (0.1,) if smoke else (0.1, 0.3):
+        prob = make_quadratic(KEY, num_workers=16, dim=dim, kappa=100.0,
                               coupling=0.0, num_regions=8, hess_noise=sigma)
         res, us = _timed(lambda: run_ranl(
-            prob, KEY, num_rounds=30, num_regions=8,
+            prob, KEY, num_rounds=rounds, num_regions=8,
             policy=PolicyConfig(keep_prob=0.5, tau_star=1,
                                 heterogeneous=False)))
         d = np.asarray(res.dist_sq)
-        ratios = d[2:12] / d[1:11]
+        hi = min(12, rounds)
+        ratios = d[2:hi] / d[1:hi - 1]
         rows.append({"name": f"convergence/sigma={sigma}",
                      "us_per_call": us,
                      "derived": f"mean_ratio={ratios.mean():.3f};"
@@ -49,17 +55,18 @@ def bench_convergence():
     return rows
 
 
-def bench_condition():
+def bench_condition(smoke: bool = False):
     """Condition-number independence: rounds-to-1e-8 vs κ (GD compared)."""
     rows = []
-    for kappa in (10.0, 100.0, 1000.0):
-        prob = make_quadratic(KEY, num_workers=8, dim=32, kappa=kappa,
+    dim, rounds = (16, 20) if smoke else (32, 60)
+    for kappa in ((10.0, 1000.0) if smoke else (10.0, 100.0, 1000.0)):
+        prob = make_quadratic(KEY, num_workers=8, dim=dim, kappa=kappa,
                               coupling=0.0, num_regions=4)
         res, us = _timed(lambda: run_ranl(
-            prob, KEY, num_rounds=60, num_regions=4,
+            prob, KEY, num_rounds=rounds, num_regions=4,
             policy=PolicyConfig(keep_prob=0.7, tau_star=1,
                                 heterogeneous=False)))
-        _, dg = run_gd(prob, KEY, num_rounds=200)
+        _, dg = run_gd(prob, KEY, num_rounds=20 if smoke else 200)
         rows.append({
             "name": f"condition/kappa={kappa:.0f}",
             "us_per_call": us,
@@ -68,14 +75,15 @@ def bench_condition():
     return rows
 
 
-def bench_staleness():
+def bench_staleness(smoke: bool = False):
     """Lemma 4 delay term: noise floor grows with κ_t (stale_period)."""
-    prob = make_quadratic(KEY, num_workers=8, dim=64, kappa=100.0,
+    dim, rounds = (32, 15) if smoke else (64, 40)
+    prob = make_quadratic(KEY, num_workers=8, dim=dim, kappa=100.0,
                           coupling=0.0, num_regions=8)
     rows = []
-    for period in (0, 1, 2, 4):
+    for period in ((0, 2) if smoke else (0, 1, 2, 4)):
         res, us = _timed(lambda: run_ranl(
-            prob, KEY, num_rounds=40, num_regions=8,
+            prob, KEY, num_rounds=rounds, num_regions=8,
             policy=PolicyConfig(name="staleness", keep_prob=0.5,
                                 stale_period=period, heterogeneous=False)))
         d = np.asarray(res.dist_sq)
@@ -85,14 +93,15 @@ def bench_staleness():
     return rows
 
 
-def bench_coverage():
+def bench_coverage(smoke: bool = False):
     """Lemma 3/4 N/τ* terms: floor improves with minimum coverage τ*."""
-    prob = make_quadratic(KEY, num_workers=16, dim=64, kappa=100.0,
+    dim, rounds = (32, 15) if smoke else (64, 40)
+    prob = make_quadratic(KEY, num_workers=16, dim=dim, kappa=100.0,
                           coupling=0.0, num_regions=8, grad_noise=0.3)
     rows = []
-    for tau in (1, 4, 8):
+    for tau in ((1, 8) if smoke else (1, 4, 8)):
         res, us = _timed(lambda: run_ranl(
-            prob, KEY, num_rounds=40, num_regions=8,
+            prob, KEY, num_rounds=rounds, num_regions=8,
             policy=PolicyConfig(keep_prob=0.4, tau_star=tau,
                                 heterogeneous=False)))
         d = np.asarray(res.dist_sq)
@@ -103,15 +112,16 @@ def bench_coverage():
     return rows
 
 
-def bench_heterogeneity():
+def bench_heterogeneity(smoke: bool = False):
     """Data heterogeneity: floor vs per-worker distribution shift
     (logistic regression, the realistic convex case)."""
     rows = []
-    for het in (0.0, 0.5, 1.0):
-        prob = make_logistic(KEY, num_workers=16, dim=32,
+    dim, rounds = (16, 10) if smoke else (32, 30)
+    for het in ((0.0, 1.0) if smoke else (0.0, 0.5, 1.0)):
+        prob = make_logistic(KEY, num_workers=16, dim=dim,
                              heterogeneity=het)
         res, us = _timed(lambda: run_ranl(
-            prob, KEY, num_rounds=30, num_regions=8,
+            prob, KEY, num_rounds=rounds, num_regions=8,
             policy=PolicyConfig(keep_prob=0.8, tau_star=1,
                                 heterogeneous=True)))
         d = np.asarray(res.dist_sq)
@@ -121,36 +131,40 @@ def bench_heterogeneity():
     return rows
 
 
-def bench_second_order_baselines():
+def bench_second_order_baselines(smoke: bool = False):
     """RANL vs NewtonZero (its no-pruning ancestor) vs NewtonExact."""
-    prob = make_quadratic(KEY, num_workers=8, dim=64, kappa=300.0,
+    dim, rounds = (32, 10) if smoke else (64, 30)
+    prob = make_quadratic(KEY, num_workers=8, dim=dim, kappa=300.0,
                           coupling=0.0, num_regions=8, hess_noise=0.1)
     rows = []
     res, us = _timed(lambda: run_ranl(
-        prob, KEY, num_rounds=30, num_regions=8,
+        prob, KEY, num_rounds=rounds, num_regions=8,
         policy=PolicyConfig(name="full")))
     rows.append({"name": "baseline/ranl_fullmask", "us_per_call": us,
                  "derived": f"final={float(res.dist_sq[-1]):.3e}"})
-    (_, d), us = _timed(lambda: run_newton_zero(prob, KEY, num_rounds=30))
+    (_, d), us = _timed(lambda: run_newton_zero(prob, KEY,
+                                                num_rounds=rounds))
     rows.append({"name": "baseline/newton_zero", "us_per_call": us,
                  "derived": f"final={float(d[-1]):.3e}"})
-    (_, d), us = _timed(lambda: run_newton_exact(prob, KEY, num_rounds=30))
+    (_, d), us = _timed(lambda: run_newton_exact(prob, KEY,
+                                                 num_rounds=rounds))
     rows.append({"name": "baseline/newton_exact", "us_per_call": us,
                  "derived": f"final={float(d[-1]):.3e}"})
     return rows
 
 
-def bench_comm_cost():
+def bench_comm_cost(smoke: bool = False):
     """Uplink floats vs keep_prob: pruning is the communication saving."""
-    prob = make_quadratic(KEY, num_workers=16, dim=256, kappa=50.0,
+    dim, rounds = (64, 8) if smoke else (256, 20)
+    prob = make_quadratic(KEY, num_workers=16, dim=dim, kappa=50.0,
                           coupling=0.0, num_regions=16)
     rows = []
-    dense_floats = 16 * 256
-    for kp in (1.0, 0.7, 0.4, 0.2):
+    dense_floats = 16 * dim
+    for kp in ((1.0, 0.4) if smoke else (1.0, 0.7, 0.4, 0.2)):
         pol = (PolicyConfig(name="full") if kp == 1.0 else
                PolicyConfig(keep_prob=kp, tau_star=1, heterogeneous=True))
         res, us = _timed(lambda: run_ranl(
-            prob, KEY, num_rounds=20, num_regions=16, policy=pol))
+            prob, KEY, num_rounds=rounds, num_regions=16, policy=pol))
         up = float(np.asarray(res.comm_floats).mean())
         d = np.asarray(res.dist_sq)
         rows.append({"name": f"comm/keep={kp}",
@@ -158,3 +172,63 @@ def bench_comm_cost():
                      "derived": (f"uplink_frac={up / dense_floats:.2f};"
                                  f"final={d[-1]:.2e}")})
     return rows
+
+
+def bench_engine_speedup(smoke: bool = False):
+    """Scan-compiled engine vs the original host-loop driver.
+
+    Both run the identical 30-round dense configuration (the trajectories
+    match to 1e-6); the reference re-traces every round, the engine
+    compiles once (warmed before timing) — the speedup is the tentpole
+    claim for cheap scenario sweeps.
+    """
+    dim, rounds = (32, 10) if smoke else (64, 30)
+    prob = make_quadratic(KEY, num_workers=16, dim=dim, kappa=100.0,
+                          coupling=0.0, num_regions=8)
+    pol = PolicyConfig(keep_prob=0.5, tau_star=1, heterogeneous=False)
+    kw = dict(num_rounds=rounds, num_regions=8, policy=pol)
+    ref_res, us_ref = _timed(lambda: run_ranl_reference(prob, KEY, **kw))
+    run_ranl(prob, KEY, **kw)                     # compile once
+    res, us_new = _timed(lambda: run_ranl(prob, KEY, **kw))
+    err = float(np.abs(np.asarray(res.xs) - np.asarray(ref_res.xs)).max())
+    return [{"name": "engine/scan_vs_hostloop", "us_per_call": us_new,
+             "derived": (f"hostloop_us={us_ref:.0f};"
+                         f"speedup={us_ref / us_new:.1f}x;"
+                         f"max_traj_err={err:.1e}")}]
+
+
+def bench_batch_seeds(smoke: bool = False):
+    """Batched multi-seed engine: B runs in one compilation, with the
+    variance band of the final error across seeds."""
+    B, dim, rounds = (4, 32, 10) if smoke else (16, 64, 30)
+    prob = make_quadratic(KEY, num_workers=16, dim=dim, kappa=100.0,
+                          coupling=0.0, num_regions=8, grad_noise=0.1)
+    pol = PolicyConfig(keep_prob=0.5, tau_star=1)
+    keys = jax.random.split(KEY, B)
+    kw = dict(num_rounds=rounds, num_regions=8, policy=pol)
+    run_ranl_batch(prob, keys, **kw)              # compile once
+    res, us = _timed(lambda: run_ranl_batch(prob, keys, **kw))
+    finals = np.asarray(res.dist_sq)[:, -1]
+    return [{"name": f"engine/batch_{B}seeds", "us_per_call": us,
+             "derived": (f"us_per_seed={us / B:.0f};"
+                         f"final_med={np.median(finals):.2e};"
+                         f"final_max={finals.max():.2e}")}]
+
+
+def bench_diag_kernel_path(smoke: bool = False):
+    """Scalable curvature: diagonal [·]_μ + fused Pallas update kernel vs
+    the pure-jnp oracle path (identical trajectories)."""
+    dim, rounds = (64, 10) if smoke else (256, 30)
+    prob = make_quadratic(KEY, num_workers=8, dim=dim, kappa=50.0,
+                          coupling=0.0, num_regions=dim)
+    pol = PolicyConfig(keep_prob=0.5, tau_star=1)
+    kw = dict(num_rounds=rounds, num_regions=8, policy=pol,
+              curvature="diag")
+    run_ranl(prob, KEY, use_kernel=True, **kw)    # compile both paths
+    run_ranl(prob, KEY, use_kernel=False, **kw)
+    res_k, us_k = _timed(lambda: run_ranl(prob, KEY, use_kernel=True, **kw))
+    res_r, us_r = _timed(lambda: run_ranl(prob, KEY, use_kernel=False, **kw))
+    err = float(np.abs(np.asarray(res_k.xs) - np.asarray(res_r.xs)).max())
+    return [{"name": "engine/diag_pallas_path", "us_per_call": us_k,
+             "derived": (f"jnp_oracle_us={us_r:.0f};max_err={err:.1e};"
+                         f"final={float(res_k.dist_sq[-1]):.2e}")}]

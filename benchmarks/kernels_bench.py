@@ -5,6 +5,8 @@ wall-clock numbers meaningful for comparison are the XLA reference path's;
 kernel rows report correctness (max |err| vs oracle) and the *modeled* HBM
 traffic ratio (the TPU-side win), derived from the tiling in the kernel
 docstrings.
+
+Every bench takes ``smoke=True`` for tiny shapes (CI smoke job).
 """
 
 from __future__ import annotations
@@ -32,8 +34,8 @@ def _time_jit(fn, *args, iters=5):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def bench_region_aggregate():
-    N, D = 16, 1 << 16
+def bench_region_aggregate(smoke: bool = False):
+    N, D = (8, 1 << 10) if smoke else (16, 1 << 16)
     ks = jax.random.split(KEY, 3)
     G = jax.random.normal(ks[0], (N, D))
     M = jax.random.uniform(ks[1], (N, D)) < 0.5
@@ -48,8 +50,8 @@ def bench_region_aggregate():
              "derived": f"max_err={err:.1e};hbm_model=7N->4N"}]
 
 
-def bench_ranl_update():
-    N, D = 16, 1 << 16
+def bench_ranl_update(smoke: bool = False):
+    N, D = (8, 1 << 10) if smoke else (16, 1 << 16)
     ks = jax.random.split(KEY, 5)
     G = jax.random.normal(ks[0], (N, D))
     M = jax.random.uniform(ks[1], (N, D)) < 0.5
@@ -65,23 +67,24 @@ def bench_ranl_update():
              "derived": f"max_err={err:.1e};fuses=aggregate+newton"}]
 
 
-def bench_flash_attention():
-    B, S, H, KV, hd = 1, 512, 4, 2, 64
+def bench_flash_attention(smoke: bool = False):
+    B, S, H, KV, hd = (1, 128, 2, 2, 32) if smoke else (1, 512, 4, 2, 64)
     ks = jax.random.split(KEY, 3)
     q = jax.random.normal(ks[0], (B, S, H, hd))
     k = jax.random.normal(ks[1], (B, S, KV, hd))
     v = jax.random.normal(ks[2], (B, S, KV, hd))
     ref_fn = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
     us = _time_jit(ref_fn, q, k, v)
-    o1 = flash_attention(q, k, v, block_q=128, block_k=128)
+    bq = min(128, S)
+    o1 = flash_attention(q, k, v, block_q=bq, block_k=bq)
     o2 = ref_fn(q, k, v)
     err = float(jnp.abs(o1 - o2).max())
     return [{"name": "kernel/flash_attention", "us_per_call": us,
              "derived": f"max_err={err:.1e};vmem_tiles={128}x{hd}"}]
 
 
-def bench_rwkv_wkv():
-    B, S, H, hd = 2, 256, 4, 64
+def bench_rwkv_wkv(smoke: bool = False):
+    B, S, H, hd = (1, 64, 2, 16) if smoke else (2, 256, 4, 64)
     r, k, v = (jax.random.normal(jax.random.fold_in(KEY, i), (B, S, H, hd))
                for i in range(3))
     w = jax.nn.sigmoid(
@@ -91,7 +94,7 @@ def bench_rwkv_wkv():
     s0 = jnp.zeros((B, H, hd, hd))
     ref_fn = jax.jit(ref.rwkv_wkv_ref)
     us = _time_jit(ref_fn, r, k, v, w, u, s0)
-    y1, sf1 = rwkv_wkv(r, k, v, w, u, s0, block_t=128)
+    y1, sf1 = rwkv_wkv(r, k, v, w, u, s0, block_t=min(128, S))
     y2, sf2 = ref_fn(r, k, v, w, u, s0)
     err = float(jnp.abs(y1 - y2).max())
     # scan: 2·S·hd²·4B state traffic per (b,h); kernel: 2·(S/bt)·hd²·4B

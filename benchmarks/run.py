@@ -5,11 +5,17 @@ summary.
 
 Prints ``name,us_per_call,derived`` CSV.  Run:
   PYTHONPATH=src python -m benchmarks.run [--only claims|kernels|roofline]
+                                          [--smoke] [--json OUT.json]
+
+``--smoke`` shrinks every bench to tiny shapes / few rounds (interpret-mode
+Pallas) so the whole sweep finishes in a couple of minutes — the CI smoke
+job runs it and uploads ``--json`` output as an artifact.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import os
 import sys
 
@@ -20,6 +26,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=[None, "claims", "kernels", "roofline"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes / few rounds; skips roofline")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write rows as a JSON file")
     args = ap.parse_args()
 
     rows = []
@@ -29,19 +39,27 @@ def main() -> None:
                    claims.bench_staleness, claims.bench_coverage,
                    claims.bench_heterogeneity,
                    claims.bench_second_order_baselines,
-                   claims.bench_comm_cost):
-            rows.extend(fn())
+                   claims.bench_comm_cost,
+                   claims.bench_engine_speedup,
+                   claims.bench_batch_seeds,
+                   claims.bench_diag_kernel_path):
+            rows.extend(fn(smoke=args.smoke))
     if args.only in (None, "kernels"):
         from . import kernels_bench as kb
         for fn in (kb.bench_region_aggregate, kb.bench_ranl_update,
                    kb.bench_flash_attention, kb.bench_rwkv_wkv):
-            rows.extend(fn())
+            rows.extend(fn(smoke=args.smoke))
 
     print("name,us_per_call,derived")
     for r in rows:
         print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
 
-    if args.only in (None, "roofline"):
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=2)
+        print(f"# wrote {len(rows)} rows to {args.json}")
+
+    if args.only in (None, "roofline") and not args.smoke:
         dr = os.path.join(os.path.dirname(__file__), "..",
                           "experiments", "dryrun")
         if os.path.isdir(dr) and os.listdir(dr):

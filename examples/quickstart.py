@@ -4,10 +4,16 @@ Runs in seconds on CPU:
   PYTHONPATH=src python examples/quickstart.py
 """
 
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
 import jax
 import numpy as np
 
-from repro.core import (PolicyConfig, make_quadratic, run_gd, run_ranl)
+from repro.core import (PolicyConfig, make_quadratic, run_gd, run_ranl,
+                        run_ranl_batch)
 
 key = jax.random.PRNGKey(0)
 
@@ -33,3 +39,13 @@ print(f"\nRANL transmitted {float(np.mean(result.comm_floats)):.0f} "
       f"floats/round vs {problem.num_workers * problem.dim} dense "
       f"(pruned uplink).")
 print(f"Minimum region coverage tau* observed: {result.tau_star}")
+
+# Variance band across seeds: the scan-compiled engine vmaps whole runs,
+# so 16 seeds cost one compilation + one batched execution.
+batch = run_ranl_batch(problem, jax.random.split(key, 16), num_rounds=30,
+                       num_regions=8, policy=policy)
+finals = np.asarray(batch.dist_sq)[:, -1]
+print(f"\n16-seed final error band: median={np.median(finals):.2e} "
+      f"[{finals.min():.2e}, {finals.max():.2e}], "
+      f"tau* range {int(np.min(np.asarray(batch.tau_star)))}"
+      f"..{int(np.max(np.asarray(batch.tau_star)))}")

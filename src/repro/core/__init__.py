@@ -17,5 +17,10 @@ from .hessian import (  # noqa: F401
     solve_projected,
 )
 from .masks import PolicyConfig, ensure_coverage, sample_masks  # noqa: F401
-from .ranl import RanlResult, run_ranl  # noqa: F401
+from .ranl import (  # noqa: F401
+    RanlResult,
+    run_ranl,
+    run_ranl_batch,
+    run_ranl_reference,
+)
 from .regions import contiguous_regions, expand_mask, region_sizes  # noqa: F401

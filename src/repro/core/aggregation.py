@@ -17,12 +17,18 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def server_aggregate(grads, masks_x, memory):
+def server_aggregate(grads, masks_x, memory, *, use_kernel: bool = False,
+                     interpret: bool | None = None):
     """grads, masks_x, memory: (N, d). Returns (global_grad (d,), new_memory).
 
     ``grads`` are already pruned (zero outside the worker's mask); ``masks_x``
-    is the boolean coordinate mask.
+    is the boolean coordinate mask.  Pure jnp by default (trace-safe inside
+    scan/vmap); ``use_kernel=True`` routes to the fused Pallas
+    ``region_aggregate`` kernel (interpret mode on CPU unless overridden).
     """
+    if use_kernel:
+        from ..kernels.region_aggregate import region_aggregate
+        return region_aggregate(grads, masks_x, memory, interpret=interpret)
     m = masks_x.astype(grads.dtype)
     count = m.sum(axis=0)                                  # (d,)
     fresh_sum = (grads * m).sum(axis=0)                    # ∑_{i∈N^{t,q}}

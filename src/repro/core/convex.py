@@ -158,6 +158,18 @@ class Logistic:
         return jax.hessian(self.loss)(self.x_star)
 
 
+def _register_problem_pytrees():
+    """Problems flow through jit/vmap boundaries (the scan-compiled RANL
+    engine takes them as arguments), so register them as pytrees: arrays
+    are data leaves, scalar constants are static metadata."""
+    jax.tree_util.register_dataclass(
+        Quadratic, ("A", "b", "x_star"),
+        ("grad_noise", "hess_noise", "mu", "L_g"))
+    jax.tree_util.register_dataclass(
+        Logistic, ("X", "y", "x_star"),
+        ("lam", "grad_noise", "hess_noise", "mu", "L_g"))
+
+
 def make_logistic(key, *, num_workers: int = 16, per_worker: int = 128,
                   dim: int = 32, lam: float = 1e-2,
                   heterogeneity: float = 0.0, grad_noise: float = 0.0,
@@ -184,3 +196,6 @@ def make_logistic(key, *, num_workers: int = 16, per_worker: int = 128,
     return Logistic(X=X, y=y, lam=lam, grad_noise=grad_noise,
                     hess_noise=hess_noise, x_star=x,
                     mu=float(w[0]), L_g=float(w[-1]))
+
+
+_register_problem_pytrees()

@@ -37,23 +37,28 @@ def hutchinson_diag(grad_fn, params, key, num_samples: int = 8):
     """Diagonal Hessian estimate diag(H) ≈ E[z ⊙ (Hz)], z ~ Rademacher.
 
     grad_fn: params -> grads (pytree).  Uses HVPs via jvp-of-grad.  This is
-    the one-shot Newton-Zero curvature used by the deep-net RANL optimizer.
+    the one-shot Newton-Zero curvature used by the deep-net RANL optimizer
+    and the scan-compiled convex driver's ``curvature="diag"`` path.  The
+    probes are vmapped over samples (one batched HVP, not ``num_samples``
+    sequential ones).
     """
     leaves, treedef = jax.tree.flatten(params)
 
     def hvp(z):
         return jax.jvp(grad_fn, (params,), (z,))[1]
 
-    acc = [jnp.zeros_like(l) for l in leaves]
-    for s in range(num_samples):
-        ks = jax.random.fold_in(key, s)
+    def one_probe(ks):
         zk = [jax.random.rademacher(jax.random.fold_in(ks, i), l.shape,
                                     dtype=l.dtype)
               for i, l in enumerate(leaves)]
         z = jax.tree.unflatten(treedef, zk)
         hz = jax.tree.leaves(hvp(z))
-        acc = [a + zi * hi for a, zi, hi in zip(acc, zk, hz)]
-    diag = [a / num_samples for a in acc]
+        return [zi * hi for zi, hi in zip(zk, hz)]
+
+    sample_keys = jax.vmap(lambda s: jax.random.fold_in(key, s))(
+        jnp.arange(num_samples))
+    probes = jax.vmap(one_probe)(sample_keys)     # leading axis: samples
+    diag = [p.mean(axis=0) for p in probes]
     return jax.tree.unflatten(treedef, diag)
 
 
@@ -61,10 +66,10 @@ def fisher_diag(grad_fn, params, keys):
     """Empirical-Fisher diagonal: mean of squared per-batch grads.
 
     Cheaper alternative one-shot curvature (no HVPs); grad_fn(params, key).
+    ``keys``: stacked PRNG keys (any stackable sequence); the per-key
+    gradients are vmapped into one batched evaluation.
     """
-    acc = None
-    for k in keys:
-        g = grad_fn(params, k)
-        sq = jax.tree.map(jnp.square, g)
-        acc = sq if acc is None else jax.tree.map(jnp.add, acc, sq)
-    return jax.tree.map(lambda a: a / len(keys), acc)
+    keys = jnp.asarray(keys)
+    sq = jax.vmap(
+        lambda k: jax.tree.map(jnp.square, grad_fn(params, k)))(keys)
+    return jax.tree.map(lambda a: a.mean(axis=0), sq)

@@ -4,7 +4,14 @@ A policy maps (key, round t) -> boolean mask M of shape (N, Q): worker i
 trains region q this round iff M[i, q].  Policies model heterogeneous,
 time-varying resources; ``ensure_coverage`` post-processes a mask so every
 region has at least ``tau_star`` covering workers (the paper's minimum
-worker-coverage number τ*)."""
+worker-coverage number τ*).
+
+Trace-safety contract (the scan-compiled driver relies on it): ``t`` may be
+a traced int32 scalar — every policy folds it into the PRNG key or uses it
+arithmetically, never as a Python branch — while ``policy``, ``num_workers``
+and ``num_regions`` are static, so mask shapes are fixed at trace time and
+``sample_masks`` can live inside a ``jax.lax.scan`` body.  Sampling a
+traced ``t`` is bit-identical to sampling the same concrete ``t``."""
 
 from __future__ import annotations
 
@@ -38,8 +45,9 @@ def worker_keep_probs(key, num_workers: int, base: float,
 
 def sample_masks(policy: PolicyConfig, key, t: int | jnp.ndarray,
                  num_workers: int, num_regions: int):
-    """-> bool (N, Q)."""
-    N, Q = num_workers, num_regions
+    """-> bool (N, Q).  ``t`` may be traced; shapes depend only on the
+    static ``num_workers``/``num_regions``."""
+    N, Q = int(num_workers), int(num_regions)
     kp, km = jax.random.split(jax.random.fold_in(key, 1))
     if policy.name == "full":
         m = jnp.ones((N, Q), bool)

@@ -24,6 +24,13 @@ from jax.experimental import pallas as pl
 BLOCK_D = 512
 
 
+def _resolve_interpret(interpret: bool | None) -> bool:
+    """None -> interpret everywhere except real TPUs (compiled there)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
+
+
 def _kernel(g_ref, m_ref, c_ref, out_g_ref, out_c_ref):
     g = g_ref[...]                       # (N, bd) float
     m = m_ref[...]                       # (N, bd) mask (same dtype as g)
@@ -35,14 +42,21 @@ def _kernel(g_ref, m_ref, c_ref, out_g_ref, out_c_ref):
     out_c_ref[...] = jnp.where(m > 0, g, c)
 
 
-@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
 def region_aggregate(grads, masks, memory, *, block_d: int = BLOCK_D,
-                     interpret: bool = True):
+                     interpret: bool | None = None):
     """grads, memory: (N, D) f32; masks: (N, D) bool.
 
     Returns (global_grad (D,), new_memory (N, D)).  D is padded to the
-    block size internally.
+    block size internally.  ``interpret=None`` picks interpret mode on
+    CPU and the compiled kernel on TPU.
     """
+    return _region_aggregate(grads, masks, memory, block_d=block_d,
+                             interpret=_resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def _region_aggregate(grads, masks, memory, *, block_d: int,
+                      interpret: bool):
     N, D = grads.shape
     dt = grads.dtype
     bd = min(block_d, max(128, D))
@@ -89,15 +103,23 @@ def _fused_kernel(x_ref, h_ref, g_ref, m_ref, c_ref, out_x_ref, out_c_ref,
     out_c_ref[...] = jnp.where(m > 0, g, c)
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("mu", "lr", "block_d", "interpret"))
 def ranl_update(params, hdiag, grads, masks, memory, *, mu: float,
                 lr: float = 1.0, block_d: int = BLOCK_D,
-                interpret: bool = True):
+                interpret: bool | None = None):
     """Fused aggregation + projected-Newton update (one HBM pass).
 
     params, hdiag: (D,); grads/masks/memory: (N, D).
-    Returns (new_params, new_memory)."""
+    Returns (new_params, new_memory).  ``interpret=None`` picks interpret
+    mode on CPU and the compiled kernel on TPU."""
+    return _ranl_update(params, hdiag, grads, masks, memory, mu=mu, lr=lr,
+                        block_d=block_d,
+                        interpret=_resolve_interpret(interpret))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mu", "lr", "block_d", "interpret"))
+def _ranl_update(params, hdiag, grads, masks, memory, *, mu: float,
+                 lr: float, block_d: int, interpret: bool):
     N, D = grads.shape
     dt = params.dtype
     bd = min(block_d, max(128, D))

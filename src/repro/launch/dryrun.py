@@ -85,6 +85,8 @@ def lower_and_compile(cfg, shape, mesh, *, scan_layers=True,
                         - mem.alias_size_in_bytes),
     }
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):     # older jax returns [dict]
+        ca = ca[0] if ca else {}
     out["cost_raw"] = {k: float(v) for k, v in ca.items()
                        if k in ("flops", "bytes accessed",
                                 "transcendentals")}

@@ -1,0 +1,64 @@
+"""Deterministic stand-in for the tiny slice of `hypothesis` this suite
+uses (``given``, ``settings``, ``strategies.integers/floats``).
+
+Loaded by the root conftest.py ONLY when the real library is absent
+(offline/hermetic environments).  Each ``@given`` property is executed for
+a fixed number of pseudo-random examples drawn from a per-test seeded RNG,
+so runs are reproducible; there is no shrinking or failure database.
+"""
+
+from __future__ import annotations
+
+import inspect
+import random
+from types import SimpleNamespace
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self.draw = draw
+
+
+def _integers(min_value, max_value):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def _floats(min_value, max_value):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+strategies = SimpleNamespace(integers=_integers, floats=_floats)
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,
+             **_kwargs):
+    """Records max_examples on the (already given-wrapped) test."""
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            rng = random.Random(fn.__qualname__)
+            n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            for _ in range(n):
+                vals = [s.draw(rng) for s in strats]
+                fn(*args, *vals, **kwargs)
+        # zero-arg signature: the drawn parameters must not look like
+        # pytest fixtures (functools.wraps would leak fn's signature)
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+    return deco
+
+
+class HealthCheck(SimpleNamespace):
+    all = staticmethod(lambda: [])

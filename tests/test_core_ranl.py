@@ -9,7 +9,8 @@ from hypothesis import given, settings, strategies as st
 from repro.core import (PolicyConfig, ensure_coverage, expand_mask,
                         contiguous_regions, make_quadratic, project_psd,
                         region_sizes, rounds_to_tol, run_gd,
-                        run_newton_zero, run_ranl, sample_masks,
+                        run_newton_zero, run_ranl, run_ranl_batch,
+                        run_ranl_reference, sample_masks,
                         server_aggregate, solve_projected)
 
 KEY = jax.random.PRNGKey(0)
@@ -191,6 +192,100 @@ def test_ranl_full_mask_matches_newton_zero():
     # both settle at the same stochastic floor (Δ > 0 here)
     assert d[-1] < 1e-4 * d[0]
     assert dz[-1] < 1e-4 * dz[0]
+
+
+def test_sample_masks_trace_safe_in_scan():
+    """Masks drawn with a traced round index inside lax.scan must be
+    bit-identical to eager sampling at the same concrete round."""
+    for name in ("bernoulli", "fixed_k", "roundrobin", "full", "staleness"):
+        pol = PolicyConfig(name=name, keep_prob=0.5, keep_k=2,
+                           stale_period=2, tau_star=1)
+
+        def body(c, t):
+            return c, sample_masks(pol, jax.random.fold_in(KEY, t), t, 8, 6)
+
+        _, scanned = jax.lax.scan(body, 0, jnp.arange(1, 6))
+        for i, t in enumerate(range(1, 6)):
+            eager = sample_masks(pol, jax.random.fold_in(KEY, t), t, 8, 6)
+            np.testing.assert_array_equal(np.asarray(scanned[i]),
+                                          np.asarray(eager))
+
+
+# --------------------------------------------------------------------------
+# scan-compiled engine vs the host-loop reference driver
+# --------------------------------------------------------------------------
+
+def test_scan_engine_reproduces_reference_trajectory():
+    """The compiled engine must reproduce the seed host-loop trajectory on
+    a fixed key (dense path; allclose atol 1e-6, diagnostics exact)."""
+    prob = make_quadratic(KEY, num_workers=8, dim=48, kappa=80.0,
+                          coupling=0.0, num_regions=6, grad_noise=0.1,
+                          hess_noise=0.1)
+    for pol in (PolicyConfig(keep_prob=0.5, tau_star=1,
+                             heterogeneous=False),
+                PolicyConfig(name="roundrobin"),
+                PolicyConfig(name="full"),
+                PolicyConfig(name="staleness", keep_prob=0.6,
+                             stale_period=2),
+                PolicyConfig(name="fixed_k", keep_k=2)):
+        res = run_ranl(prob, KEY, num_rounds=12, num_regions=6, policy=pol)
+        ref = run_ranl_reference(prob, KEY, num_rounds=12, num_regions=6,
+                                 policy=pol)
+        np.testing.assert_allclose(res.xs, ref.xs, rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(res.dist_sq, ref.dist_sq,
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(res.losses, ref.losses,
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(res.comm_floats),
+                                      np.asarray(ref.comm_floats))
+        np.testing.assert_allclose(res.coverage, ref.coverage, atol=1e-7)
+        assert res.tau_star == ref.tau_star
+
+
+def test_batch_engine_matches_single_runs():
+    """run_ranl_batch rows match per-seed run_ranl (same compiled math up
+    to float32 solve accuracy) and carry per-seed diagnostics."""
+    prob = make_quadratic(KEY, num_workers=8, dim=32, kappa=50.0,
+                          coupling=0.0, num_regions=4, grad_noise=0.1)
+    pol = PolicyConfig(keep_prob=0.5, tau_star=1)
+    keys = jax.random.split(KEY, 4)
+    bat = run_ranl_batch(prob, keys, num_rounds=10, num_regions=4,
+                         policy=pol)
+    assert bat.xs.shape == (4, 12, 32)
+    assert bat.coverage.shape == (4, 10)
+    for b in range(4):
+        single = run_ranl(prob, keys[b], num_rounds=10, num_regions=4,
+                          policy=pol)
+        np.testing.assert_allclose(bat.xs[b], single.xs, atol=2e-4)
+        np.testing.assert_array_equal(np.asarray(bat.comm_floats[b]),
+                                      np.asarray(single.comm_floats))
+        assert int(bat.tau_star[b]) == single.tau_star
+
+
+def test_diag_curvature_kernel_matches_oracle_path():
+    """curvature='diag' through the fused Pallas kernel equals the pure-jnp
+    oracle path, and converges linearly on a coordinate-diagonal problem
+    (where the Hutchinson diagonal is exact)."""
+    prob = make_quadratic(KEY, num_workers=8, dim=32, kappa=50.0,
+                          coupling=0.0, num_regions=32)
+    pol = PolicyConfig(keep_prob=0.5, tau_star=1)
+    res_k = run_ranl(prob, KEY, num_rounds=30, num_regions=8,
+                     curvature="diag", use_kernel=True, policy=pol)
+    res_o = run_ranl(prob, KEY, num_rounds=30, num_regions=8,
+                     curvature="diag", use_kernel=False, policy=pol)
+    np.testing.assert_allclose(res_k.xs, res_o.xs, rtol=1e-6, atol=1e-6)
+    assert float(res_k.dist_sq[-1]) < 1e-9 * float(res_k.dist_sq[0])
+
+
+def test_diag_batch_runs_under_vmap():
+    """The Pallas update kernel stays vmappable: batched diag runs work."""
+    prob = make_quadratic(KEY, num_workers=4, dim=16, kappa=10.0,
+                          coupling=0.0, num_regions=16)
+    keys = jax.random.split(KEY, 3)
+    bat = run_ranl_batch(prob, keys, num_rounds=5, num_regions=4,
+                         curvature="diag")
+    assert bat.xs.shape == (3, 7, 16)
+    assert np.isfinite(np.asarray(bat.dist_sq)).all()
 
 
 def test_staleness_floor_monotone():

@@ -63,6 +63,62 @@ def test_ranl_update_matches_oracle(n, d, mu, lr):
     np.testing.assert_array_equal(c1, c2)
 
 
+@pytest.mark.parametrize("n,d", [(1, 1), (1, 7), (3, 129), (5, 1),
+                                 (2, 511), (7, 513)])
+def test_region_aggregate_odd_padded_shapes(n, d):
+    """Odd / sub-block / just-past-block D exercises the padding path."""
+    ks = jax.random.split(KEY, 3)
+    g = jax.random.normal(ks[0], (n, d))
+    m = jax.random.uniform(ks[1], (n, d)) < 0.5
+    c = jax.random.normal(ks[2], (n, d))
+    g1, c1 = region_aggregate(g, m, c)
+    g2, c2 = ref.region_aggregate_ref(g, m, c)
+    np.testing.assert_allclose(g1, g2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+def test_region_aggregate_all_uncovered():
+    """No region covered anywhere: output is the memory mean, memory kept."""
+    n, d = 4, 300
+    ks = jax.random.split(KEY, 2)
+    g = jax.random.normal(ks[0], (n, d))
+    m = jnp.zeros((n, d), bool)
+    c = jax.random.normal(ks[1], (n, d))
+    g1, c1 = region_aggregate(g * 0.0, m, c)
+    np.testing.assert_allclose(g1, c.mean(axis=0), rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c))
+
+
+def test_ranl_update_single_worker():
+    """N=1: covered coordinates take the worker's gradient verbatim."""
+    d, mu, lr = 200, 1e-2, 0.7
+    ks = jax.random.split(KEY, 4)
+    g = jax.random.normal(ks[0], (1, d))
+    m = jax.random.uniform(ks[1], (1, d)) < 0.5
+    c = jax.random.normal(ks[2], (1, d))
+    x = jax.random.normal(ks[3], (d,))
+    h = jnp.abs(jax.random.normal(jax.random.fold_in(KEY, 9), (d,)))
+    x1, c1 = ranl_update(x, h, g * m, m, c, mu=mu, lr=lr)
+    x2, c2 = ref.ranl_update_ref(x, h, g * m, m, c, mu=mu, lr=lr)
+    np.testing.assert_allclose(x1, x2, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+
+
+@pytest.mark.parametrize("n,d", [(1, 7), (3, 129), (6, 1000)])
+def test_ranl_update_all_uncovered(n, d):
+    """All-uncovered fused update steps along the memory mean only."""
+    ks = jax.random.split(KEY, 4)
+    g = jax.random.normal(ks[0], (n, d))
+    m = jnp.zeros((n, d), bool)
+    c = jax.random.normal(ks[1], (n, d))
+    x = jax.random.normal(ks[2], (d,))
+    h = jnp.abs(jax.random.normal(ks[3], (d,))) + 0.5
+    x1, c1 = ranl_update(x, h, g * 0.0, m, c, mu=1e-3, lr=1.0)
+    expect = x - c.mean(axis=0) / jnp.maximum(h, 1e-3)
+    np.testing.assert_allclose(x1, expect, rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c))
+
+
 def test_kernel_consistent_with_core_aggregation():
     """Kernel == repro.core.aggregation.server_aggregate on region masks."""
     from repro.core import contiguous_regions, expand_mask, server_aggregate
@@ -77,6 +133,10 @@ def test_kernel_consistent_with_core_aggregation():
     g2, c2 = server_aggregate(g, masks, c)
     np.testing.assert_allclose(g1, g2, rtol=1e-5, atol=1e-6)
     np.testing.assert_array_equal(c1, c2)
+    # server_aggregate's kernel dispatch flag routes to the same kernel
+    g3, c3 = server_aggregate(g, masks, c, use_kernel=True)
+    np.testing.assert_array_equal(np.asarray(g1), np.asarray(g3))
+    np.testing.assert_array_equal(np.asarray(c1), np.asarray(c3))
 
 
 # --------------------------------------------------------------------------
