@@ -18,7 +18,7 @@ import numpy as np
 from repro.core import (PolicyConfig, make_logistic, make_quadratic,
                         rounds_to_tol, run_gd, run_newton_exact,
                         run_newton_zero, run_ranl, run_ranl_batch,
-                        run_ranl_reference)
+                        run_ranl_reference, run_ranl_sharded)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -213,6 +213,34 @@ def bench_batch_seeds(smoke: bool = False):
              "derived": (f"us_per_seed={us / B:.0f};"
                          f"final_med={np.median(finals):.2e};"
                          f"final_max={finals.max():.2e}")}]
+
+
+def bench_sharded_engine(smoke: bool = False):
+    """Device-sharded round loop (shard_map + psum aggregation) vs the
+    single-device engine on the same key — identical trajectories; on one
+    device the row measures pure shard_map/collective overhead, on a real
+    multi-device mesh it measures the scale-out path."""
+    dim, rounds = (32, 10) if smoke else (64, 30)
+    N = 16
+    prob = make_quadratic(KEY, num_workers=N, dim=dim, kappa=100.0,
+                          coupling=0.0, num_regions=8)
+    pol = PolicyConfig(keep_prob=0.5, tau_star=1, heterogeneous=False)
+    kw = dict(num_rounds=rounds, num_regions=8, policy=pol)
+    # workers must divide across devices: use the largest divisor of N
+    # that fits the visible devices (e.g. 12 devices -> an 8-device mesh)
+    # rather than crashing the sweep
+    ndev = max(k for k in range(1, N + 1)
+               if N % k == 0 and k <= jax.device_count())
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:ndev]), ("data",))
+    run_ranl(prob, KEY, **kw)                     # compile both engines
+    run_ranl_sharded(prob, KEY, mesh=mesh, **kw)
+    res_1, us_1 = _timed(lambda: run_ranl(prob, KEY, **kw))
+    res_s, us_s = _timed(lambda: run_ranl_sharded(prob, KEY, mesh=mesh,
+                                                  **kw))
+    err = float(np.abs(np.asarray(res_s.xs) - np.asarray(res_1.xs)).max())
+    return [{"name": f"engine/sharded_{ndev}dev", "us_per_call": us_s,
+             "derived": (f"single_dev_us={us_1:.0f};devices={ndev};"
+                         f"max_traj_err={err:.1e}")}]
 
 
 def bench_diag_kernel_path(smoke: bool = False):

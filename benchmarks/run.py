@@ -30,6 +30,9 @@ def main() -> None:
                     help="tiny shapes / few rounds; skips roofline")
     ap.add_argument("--json", default=None, metavar="OUT",
                     help="also write rows as a JSON file")
+    ap.add_argument("--engine-json", default=None, metavar="OUT",
+                    help="also write the engine/* rows (the perf "
+                         "trajectory the CI tracks) as a JSON file")
     args = ap.parse_args()
 
     rows = []
@@ -42,6 +45,7 @@ def main() -> None:
                    claims.bench_comm_cost,
                    claims.bench_engine_speedup,
                    claims.bench_batch_seeds,
+                   claims.bench_sharded_engine,
                    claims.bench_diag_kernel_path):
             rows.extend(fn(smoke=args.smoke))
     if args.only in (None, "kernels"):
@@ -58,6 +62,12 @@ def main() -> None:
         with open(args.json, "w") as f:
             json.dump(rows, f, indent=2)
         print(f"# wrote {len(rows)} rows to {args.json}")
+
+    if args.engine_json:
+        eng = [r for r in rows if r["name"].startswith("engine/")]
+        with open(args.engine_json, "w") as f:
+            json.dump(eng, f, indent=2)
+        print(f"# wrote {len(eng)} engine rows to {args.engine_json}")
 
     if args.only in (None, "roofline") and not args.smoke:
         dr = os.path.join(os.path.dirname(__file__), "..",

@@ -19,8 +19,10 @@ from .hessian import (  # noqa: F401
 from .masks import PolicyConfig, ensure_coverage, sample_masks  # noqa: F401
 from .ranl import (  # noqa: F401
     RanlResult,
+    lower_ranl_sharded,
     run_ranl,
     run_ranl_batch,
     run_ranl_reference,
+    run_ranl_sharded,
 )
 from .regions import contiguous_regions, expand_mask, region_sizes  # noqa: F401

@@ -18,11 +18,20 @@ Engine layout:
 * coverage / communication / τ* diagnostics ride the scan outputs instead
   of host-side Python accumulators;
 * ``run_ranl_batch`` vmaps init + rounds over seeds: many independent runs
-  in one compilation, for variance-banded convergence curves;
+  in one compilation, for variance-banded convergence curves — and shards
+  the seed axis across devices when given a ``mesh``;
 * ``curvature="diag"`` swaps the dense Definition-4 eigen-projection for a
   Hutchinson diagonal estimate and dispatches each round's fused
   aggregate + projected-Newton step to the Pallas ``ranl_update`` kernel
-  (interpret mode on CPU, compiled on TPU).
+  (interpret mode on CPU, compiled on TPU);
+* ``run_ranl_sharded`` partitions the *worker* axis across the devices of
+  a ``("data",)`` mesh via ``shard_map``: per-worker gradients and the
+  gradient memory C_i stay device-local (the paper's per-worker state),
+  and server aggregation is expressed as real collectives — a tiny
+  region-sized ``psum`` for coverage counts plus exactly ONE param-sized
+  ``psum`` per round (the single-reduction form of ``masked_aggregate``).
+  ``lower_ranl_sharded`` exposes the partitioned HLO so tests can assert
+  that communication claim on the compiled module.
 
 For single runs the init phase executes eagerly (op-by-op, exactly the
 reference sequence) so the trajectory reproduces ``run_ranl_reference`` —
@@ -37,6 +46,8 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .aggregation import server_aggregate
 from .hessian import hutchinson_diag, project_diag, project_psd, \
@@ -185,6 +196,205 @@ _batch_jit = functools.partial(
     jax.jit, static_argnames=_BATCH_STATIC)(_ranl_batch_engine)
 
 
+# --------------------------------------------------------------------------
+# device-sharded engine: worker axis partitioned over a ("data",) mesh
+# --------------------------------------------------------------------------
+
+def _replicated_specs(tree):
+    return jax.tree.map(lambda l: P(*([None] * jnp.ndim(l))), tree)
+
+
+def _worker_sharded_specs(problem, axis_name: str):
+    """Shard every worker-indexed problem leaf (leading dim == N, ndim >= 2
+    in both problem classes) over ``axis_name``; replicate the rest."""
+    N = problem.num_workers
+
+    def spec(leaf):
+        if leaf.ndim >= 2 and leaf.shape[0] == N:
+            return P(axis_name, *([None] * (leaf.ndim - 1)))
+        return P(*([None] * leaf.ndim))
+
+    return jax.tree.map(spec, problem)
+
+
+def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, *,
+                         axis_name: str, num_rounds: int, num_regions: int,
+                         policy: PolicyConfig, mu: float, lr: float,
+                         curvature: str, cho_lower: bool, num_workers: int):
+    """Per-device round loop (runs under ``shard_map``).
+
+    ``problem``/``C0`` arrive worker-sharded (N/n_dev local workers);
+    ``x1`` and the curvature state are replicated.  Each round issues one
+    region-sized ``psum`` (coverage counts) and ONE param-sized ``psum``
+    (the single-reduction aggregate) — the memory C never leaves the
+    device that owns its workers.
+    """
+    N = num_workers                       # global worker count
+    d = x1.shape[0]
+    Q = num_regions
+    region_ids = contiguous_regions(d, Q)
+    n_local = problem.num_workers         # workers held by this shard
+    shard = jax.lax.axis_index(axis_name)
+    local_ids = jnp.arange(n_local)
+    grad_pruned = jax.vmap(problem.worker_grad, in_axes=(0, 0, 0))
+
+    def body(carry, t):
+        x, C = carry
+        kt = jax.random.fold_in(k_loop, t)
+        # Sample the FULL (N, Q) mask and key batch on every device (tiny,
+        # and it keeps the PRNG stream bit-identical to the single-device
+        # engine), then slice out this shard's workers.
+        M_full = sample_masks(policy, kt, t, N, Q)
+        gk_full = jax.random.split(jax.random.fold_in(kt, 7), N)
+        start = shard * n_local
+        M = jax.lax.dynamic_slice_in_dim(M_full, start, n_local)
+        gk = jax.lax.dynamic_slice_in_dim(gk_full, start, n_local)
+        Mx = expand_mask(M, region_ids)                  # (n_local, d)
+        x_pruned = jnp.where(Mx, x[None, :], 0.0)
+        G = grad_pruned(local_ids, x_pruned, gk) * Mx
+        # coverage counts: region-sized reduction (Q ints — negligible)
+        count_q = jax.lax.psum(M.sum(axis=0), axis_name)
+        covered_q = count_q > 0
+        count_x = jnp.take(count_q, region_ids)
+        covered_x = jnp.take(covered_q, region_ids)
+        # single-reduction aggregation (masked_aggregate's form): fold the
+        # covered fresh-mean and the uncovered memory-mean fallback into
+        # one per-worker contribution, so the worker-axis sum below is the
+        # round's ONE param-sized all-reduce.  G is exactly zero outside
+        # each worker's mask, so no re-masking is needed.
+        denom = jnp.maximum(count_x, 1).astype(G.dtype)
+        contrib = jnp.where(covered_x[None, :], G / denom, C / N)
+        g = jax.lax.psum(contrib.sum(axis=0), axis_name)
+        C = jnp.where(Mx, G, C)                          # device-local
+        if curvature == "dense":
+            step = jax.scipy.linalg.cho_solve((cho_c, cho_lower), g)
+        else:
+            step = g / project_diag(hdiag, mu)
+        x = x - lr * step
+        comm = jax.lax.psum(Mx.sum(), axis_name)
+        covered_counts = jnp.where(covered_q, count_q, N)
+        return (x, C), (x, covered_q.mean(), comm, covered_counts.min())
+
+    ts = jnp.arange(1, num_rounds + 1)
+    _, (xs_t, cov, comm, min_counts) = jax.lax.scan(body, (x1, C0), ts)
+    xs = jnp.concatenate([jnp.stack([jnp.zeros(d), x1]), xs_t], axis=0)
+    tau = jnp.minimum(jnp.asarray(N, min_counts.dtype), min_counts.min())
+    return xs, cov, comm, tau
+
+
+_SHARDED_STATIC = ("mesh", "axis_name", "num_rounds", "num_regions",
+                   "policy", "mu", "lr", "curvature", "cho_lower",
+                   "num_workers")
+
+
+def _sharded_engine(problem, k_loop, x1, C0, cho_c, hdiag, *, mesh,
+                    axis_name, num_rounds, num_regions, policy, mu, lr,
+                    curvature, cho_lower, num_workers):
+    body = functools.partial(
+        _sharded_rounds_body, axis_name=axis_name, num_rounds=num_rounds,
+        num_regions=num_regions, policy=policy, mu=mu, lr=lr,
+        curvature=curvature, cho_lower=cho_lower, num_workers=num_workers)
+    in_specs = (_worker_sharded_specs(problem, axis_name),
+                _replicated_specs(k_loop), _replicated_specs(x1),
+                P(axis_name, None), _replicated_specs(cho_c),
+                _replicated_specs(hdiag))
+    # outputs are replicated by construction (every x-update flows through
+    # the psum); check_rep=False because the replication checker cannot
+    # track the axis_index-based worker slicing
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs,
+                   out_specs=(P(), P(), P(), P()), check_rep=False)
+    return fn(problem, k_loop, x1, C0, cho_c, hdiag)
+
+
+_sharded_jit = functools.partial(
+    jax.jit, static_argnames=_SHARDED_STATIC)(_sharded_engine)
+
+
+def _check_mesh(problem, mesh, axis_name: str):
+    if axis_name not in mesh.axis_names:
+        raise ValueError(f"mesh {mesh.axis_names} has no "
+                         f"{axis_name!r} axis to shard workers over")
+    n_dev = mesh.shape[axis_name]
+    if problem.num_workers % n_dev:
+        raise ValueError(
+            f"num_workers={problem.num_workers} must divide evenly across "
+            f"the {n_dev} devices of the {axis_name!r} mesh axis")
+    return n_dev
+
+
+def _sharded_args(problem, key, *, mesh, axis_name, num_rounds, num_regions,
+                  policy, mu, lr, curvature, hutchinson_samples):
+    _check_mesh(problem, mesh, axis_name)
+    cfg = _config(problem, mu=mu, lr=lr, curvature=curvature,
+                  hutchinson_samples=hutchinson_samples)
+    hutch = cfg.pop("hutch_samples")
+    k_init, k_loop = jax.random.split(key)
+    x1, C0, cho_c, cho_lower, hdiag = _init_phase(
+        problem, k_init, mu=cfg["mu"], lr=cfg["lr"],
+        curvature=cfg["curvature"], hutch_samples=hutch)
+    args = (problem, k_loop, x1, C0, cho_c, hdiag)
+    static = dict(mesh=mesh, axis_name=axis_name,
+                  num_rounds=int(num_rounds), num_regions=int(num_regions),
+                  policy=policy, cho_lower=cho_lower,
+                  num_workers=problem.num_workers, **cfg)
+    return args, static
+
+
+def run_ranl_sharded(problem, key, *, mesh, num_rounds: int = 30,
+                     num_regions: int = 8,
+                     policy: PolicyConfig = PolicyConfig(),
+                     mu: float | None = None, curvature: str = "dense",
+                     lr: float = 1.0, hutchinson_samples: int = 8,
+                     axis_name: str = "data"):
+    """Algorithm 1 with the worker axis sharded across ``mesh`` devices.
+
+    The init phase runs replicated (identical to ``run_ranl``); the round
+    loop runs under ``shard_map`` with ``problem``'s worker-indexed leaves
+    and the gradient memory C partitioned over ``axis_name`` and server
+    aggregation expressed as ``psum`` collectives.  Trajectories match
+    ``run_ranl`` to reduction-reorder tolerance (parity-pinned at 1e-6 in
+    tests/test_multidevice.py).  The aggregation is always the pure-jnp
+    collective form — ``use_kernel`` has no sharded counterpart.
+
+    Requires ``num_workers`` divisible by the ``axis_name`` mesh extent.
+    """
+    if num_rounds <= 0:       # no rounds -> no communication to shard
+        _check_mesh(problem, mesh, axis_name)   # still validate the mesh
+        return run_ranl(problem, key, num_rounds=num_rounds,
+                        num_regions=num_regions, policy=policy, mu=mu,
+                        curvature=curvature, lr=lr,
+                        hutchinson_samples=hutchinson_samples)
+    args, static = _sharded_args(
+        problem, key, mesh=mesh, axis_name=axis_name, num_rounds=num_rounds,
+        num_regions=num_regions, policy=policy, mu=mu, lr=lr,
+        curvature=curvature, hutchinson_samples=hutchinson_samples)
+    xs, cov, comm, tau = _sharded_jit(*args, **static)
+    dist = jnp.sum((xs - problem.x_star[None, :]) ** 2, axis=1)
+    losses = jax.vmap(problem.loss)(xs)
+    return RanlResult(xs=xs, dist_sq=dist, losses=losses, coverage=cov,
+                      comm_floats=comm, tau_star=int(tau))
+
+
+def lower_ranl_sharded(problem, key, *, mesh, num_rounds: int = 30,
+                       num_regions: int = 8,
+                       policy: PolicyConfig = PolicyConfig(),
+                       mu: float | None = None, curvature: str = "dense",
+                       lr: float = 1.0, hutchinson_samples: int = 8,
+                       axis_name: str = "data"):
+    """Lower (without running) the sharded round loop.
+
+    Returns the ``jax.stages.Lowered`` for the same computation
+    ``run_ranl_sharded`` executes; ``.compile().as_text()`` is the
+    partitioned HLO that ``launch.hlo_analysis`` can inventory — the
+    one-param-sized-all-reduce-per-round invariant is asserted on it.
+    """
+    args, static = _sharded_args(
+        problem, key, mesh=mesh, axis_name=axis_name, num_rounds=num_rounds,
+        num_regions=num_regions, policy=policy, mu=mu, lr=lr,
+        curvature=curvature, hutchinson_samples=hutchinson_samples)
+    return _sharded_jit.lower(*args, **static)
+
+
 def _config(problem, *, mu, lr, curvature, hutchinson_samples):
     if curvature not in ("dense", "diag"):
         raise ValueError(f"unknown curvature {curvature!r}")
@@ -226,14 +436,31 @@ def run_ranl_batch(problem, keys, *, num_rounds: int = 30,
                    policy: PolicyConfig = PolicyConfig(),
                    mu: float | None = None, curvature: str = "dense",
                    lr: float = 1.0, use_kernel: bool = True,
-                   hutchinson_samples: int = 8):
+                   hutchinson_samples: int = 8, mesh=None,
+                   axis_name: str = "data"):
     """Batched multi-seed runs: one compilation, vmapped over ``keys``.
 
     ``keys``: (B,)-stacked PRNG keys (``jax.random.split(key, B)``).
     Returns a RanlResult whose arrays carry a leading batch axis and whose
     ``tau_star`` is a (B,) int array.
+
+    With ``mesh``, the seed axis is sharded across the devices of the
+    mesh's ``axis_name`` axis (the problem is replicated): B independent
+    runs execute B/n_dev-per-device with zero cross-run communication.
+    Requires B divisible by the axis extent.
     """
     keys = jnp.asarray(keys)
+    if mesh is not None:
+        if axis_name not in mesh.axis_names:
+            raise ValueError(f"mesh {mesh.axis_names} has no "
+                             f"{axis_name!r} axis to shard seeds over")
+        n_dev = mesh.shape[axis_name]
+        if keys.shape[0] % n_dev:
+            raise ValueError(
+                f"batch of {keys.shape[0]} seeds must divide evenly "
+                f"across the {n_dev} devices of the {axis_name!r} axis")
+        keys = jax.device_put(keys, NamedSharding(mesh, P(axis_name)))
+        problem = jax.device_put(problem, NamedSharding(mesh, P()))
     cfg = _config(problem, mu=mu, lr=lr, curvature=curvature,
                   hutchinson_samples=hutchinson_samples)
     xs, dist, losses, cov, comm, tau = _batch_jit(

@@ -5,9 +5,12 @@ count, and collectives inside the layer-scan likewise appear once in the
 HLO text.  This parser walks the partitioned module, finds every collective
 (all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute,
 incl. async ``-start`` forms), attributes it to its computation, and
-multiplies by the enclosing while-loop trip counts (parsed from the loop
-condition's LT-compare constant; nesting multiplies).  Operand sizes come
-from the definition table (HLO prints shapes at definitions only).
+multiplies by the enclosing while-loop trip counts (XLA's
+``known_trip_count`` backend config when present, else parsed from the
+loop condition's LT-compare constant; nesting multiplies).  Operand sizes
+come from the definition table (HLO prints shapes at definitions only).
+``/*index=N*/`` comments (emitted inside wide tuple types) are stripped
+before matching — they otherwise break instruction parsing.
 """
 
 from __future__ import annotations
@@ -31,6 +34,7 @@ _INSTR_RE = re.compile(
     r"([\w\-]+)\(")                  # opcode
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
 
 
 def shape_bytes(type_str: str) -> int:
@@ -77,7 +81,7 @@ def parse_module(text: str):
     comp_instrs: dict[str, list[str]] = {}
     current = "?"
     for raw in text.splitlines():
-        line = raw.rstrip()
+        line = _COMMENT_RE.sub("", raw).rstrip()
         mc = _COMP_RE.match(line.strip())
         if mc and ("->" in line) and line.strip().endswith("{"):
             current = mc.group(1)
@@ -99,14 +103,19 @@ def parse_module(text: str):
 
 
 def _while_edges(instrs):
-    """[(parent_comp, body_comp, cond_comp)] for every while instr."""
+    """[(parent_comp, body_comp, cond_comp, known_trip)] per while instr.
+
+    ``known_trip`` is XLA's authoritative ``known_trip_count`` backend
+    config when printed, else None (fall back to condition parsing)."""
     edges = []
     for ins in instrs.values():
         if ins.opcode == "while":
             mb = re.search(r"body=%?([\w\.\-]+)", ins.line)
             mc = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+            mk = re.search(r"known_trip_count[^\d]*(\d+)", ins.line)
             if mb and mc:
-                edges.append((ins.comp, mb.group(1), mc.group(1)))
+                edges.append((ins.comp, mb.group(1), mc.group(1),
+                              int(mk.group(1)) if mk else None))
     return edges
 
 
@@ -135,8 +144,10 @@ def comp_multipliers(instrs, comp_instrs, default_trip: int = 1):
     # iterate to fixpoint (nesting depth is tiny)
     for _ in range(8):
         changed = False
-        for parent, body, cond in edges:
-            trip = _trip_count(cond, comp_instrs, instrs, default_trip)
+        for parent, body, cond, known_trip in edges:
+            trip = (known_trip if known_trip is not None
+                    else _trip_count(cond, comp_instrs, instrs,
+                                     default_trip))
             want = mult.get(parent, 1) * trip
             if mult.get(body) != want:
                 mult[body] = want

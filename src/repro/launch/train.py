@@ -5,6 +5,11 @@ dry-run lowers at production scale.  Example:
 
   PYTHONPATH=src python -m repro.launch.train --arch qwen3-32b --smoke \
       --steps 20 --batch 8 --seq 64 --workers 4
+
+With ``--data-shards N`` the RANL worker/batch axes shard over an
+(N,)-device ``("data",)`` mesh (workers and batch must divide by N); on a
+laptop/CI set ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to
+emulate the devices.
 """
 
 from __future__ import annotations
@@ -43,6 +48,9 @@ def run(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--data-shards", type=int, default=1,
+                    help="shard the worker/batch axes over this many "
+                         "devices of a ('data',) mesh (1 = unsharded)")
     ap.add_argument("--keep-prob", type=float, default=0.7)
     ap.add_argument("--mu", type=float, default=1e-4)
     ap.add_argument("--lr", type=float, default=1.0)
@@ -56,6 +64,18 @@ def run(argv=None):
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = smoke_variant(cfg)
+    mesh = None
+    if args.data_shards > 1:
+        ndev = jax.device_count()
+        if ndev < args.data_shards:
+            raise SystemExit(
+                f"--data-shards {args.data_shards} needs that many devices "
+                f"but jax sees {ndev}; set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count="
+                f"{args.data_shards} to emulate them")
+        mesh = jax.make_mesh((args.data_shards,), ("data",))
+        print(f"mesh: {args.data_shards}-way ('data',) over "
+              f"{jax.devices()[0].platform}")
     key = jax.random.PRNGKey(args.seed)
     kp, kd, ko = jax.random.split(key, 3)
 
@@ -70,8 +90,9 @@ def run(argv=None):
         rcfg = RanlLLMConfig(num_workers=args.workers,
                              keep_prob=args.keep_prob, mu=args.mu,
                              lr=args.lr)
-        state = init_state(params, loss_fn, batch0, rcfg, ko)
-        step_fn = jax.jit(partial(train_step, loss_fn=loss_fn, cfg=rcfg))
+        state = init_state(params, loss_fn, batch0, rcfg, ko, mesh=mesh)
+        step_fn = jax.jit(partial(train_step, loss_fn=loss_fn, cfg=rcfg,
+                                  mesh=mesh))
         for t in range(args.steps):
             batch = make_batch(cfg, jax.random.fold_in(kd, t + 1),
                                args.batch, args.seq, pattern=args.pattern)

@@ -73,12 +73,25 @@ def region_layout(params):
 
     Returns (num_regions, num_layer_regions, leaf_infos) where leaf_infos is
     a list aligned with tree_leaves: ("layer", L) or ("glue", region_id).
+
+    Every stacked layer leaf must agree on ``leaf.shape[0]`` — layer q of
+    one leaf and layer q of another share a region id, so a mismatched
+    depth would silently assign masks to the wrong layers.
     """
     leaves = jax.tree_util.tree_leaves_with_path(params)
-    num_layers = 0
+    depths = {}
     for path, leaf in leaves:
         if _is_layer_path(path):
-            num_layers = max(num_layers, leaf.shape[0])
+            depths[jax.tree_util.keystr(path)] = leaf.shape[0]
+    sizes = sorted(set(depths.values()))
+    if len(sizes) > 1:
+        detail = ", ".join(f"{k}={v}" for k, v in sorted(depths.items()))
+        raise ValueError(
+            "region_layout: stacked layer leaves disagree on the leading "
+            f"(num_layers) dim {sizes} — region ids would mis-align "
+            f"across leaves ({detail}). Stack every per-layer tensor to "
+            "the same depth, or move the odd leaf out of 'layers'.")
+    num_layers = sizes[0] if sizes else 0
     infos = []
     next_glue = num_layers
     for path, leaf in leaves:
@@ -148,9 +161,60 @@ def split_batch(batch, num_workers: int):
                             *a.shape[1:]), batch)
 
 
-def per_worker_grads(loss_fn, params, batch, num_workers: int):
-    """vmap(value_and_grad) over the worker axis. batch leaves (B, ...)."""
+# --------------------------------------------------------------------------
+# mesh plumbing: worker/batch axes sharded over the data axes of a mesh
+# --------------------------------------------------------------------------
+
+def _data_axes(mesh):
+    from ..launch.shard import BATCH
+    return tuple(a for a in BATCH if a in mesh.axis_names)
+
+
+def _data_shards(mesh) -> int:
+    n = 1
+    for a in _data_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _shard_worker_axis(tree, mesh, num_workers: int):
+    """Constrain the leading (worker) axis of every leaf over the mesh's
+    data axes — the pjit sharding that makes vmap-over-workers execute
+    one-worker-shard-per-device."""
+    axes = _data_axes(mesh)
+    n = _data_shards(mesh)
+    if not axes or n == 1:
+        return tree
+    if num_workers % n:
+        raise ValueError(
+            f"num_workers={num_workers} must divide evenly across the "
+            f"{n}-way {axes} mesh axes")
+    def one(leaf):
+        spec = jax.sharding.PartitionSpec(axes,
+                                          *([None] * (leaf.ndim - 1)))
+        return jax.lax.with_sharding_constraint(
+            leaf, jax.sharding.NamedSharding(mesh, spec))
+    return jax.tree.map(one, tree)
+
+
+def _apply_pspecs(tree, specs, mesh):
+    from ..launch.shard import to_shardings
+    return jax.tree.map(jax.lax.with_sharding_constraint, tree,
+                        to_shardings(specs, mesh))
+
+
+def per_worker_grads(loss_fn, params, batch, num_workers: int, *,
+                     mesh=None):
+    """vmap(value_and_grad) over the worker axis. batch leaves (B, ...).
+
+    With ``mesh``, the split (num_workers, B/num_workers, ...) batch is
+    sharding-constrained worker-axis-over-data so pjit partitions the
+    per-worker gradient evaluations across devices (real data parallelism,
+    not emulation).
+    """
     wb = split_batch(batch, num_workers)
+    if mesh is not None:
+        wb = _shard_worker_axis(wb, mesh, num_workers)
     losses, grads = jax.vmap(
         lambda b: jax.value_and_grad(loss_fn)(params, b))(wb)
     return losses, grads
@@ -186,10 +250,11 @@ def _decode_memory(C, cfg, like_dtype):
 
 
 def init_state(params, loss_fn, batch, cfg: RanlLLMConfig, key,
-               precond_batches=None):
+               precond_batches=None, mesh=None):
     """Round-0: one-shot curvature + memory seeded with init gradients."""
     mdt = jnp.dtype(cfg.memory_dtype)
-    _, G0 = per_worker_grads(loss_fn, params, batch, cfg.num_workers)
+    _, G0 = per_worker_grads(loss_fn, params, batch, cfg.num_workers,
+                             mesh=mesh)
     C = jax.tree.map(lambda g: _encode_memory(g, cfg), G0)
     # empirical-Fisher diagonal from the per-worker init gradients
     # (mean over workers of squared grads — one extra pass over nothing:
@@ -199,7 +264,8 @@ def init_state(params, loss_fn, batch, cfg: RanlLLMConfig, key,
     del mdt
     if precond_batches is not None:
         for b in precond_batches:
-            _, Gb = per_worker_grads(loss_fn, params, b, cfg.num_workers)
+            _, Gb = per_worker_grads(loss_fn, params, b, cfg.num_workers,
+                                     mesh=mesh)
             h = jax.tree.map(
                 lambda a, g: a + jnp.mean(
                     jnp.square(g.astype(jnp.float32)), axis=0), h, Gb)
@@ -207,10 +273,34 @@ def init_state(params, loss_fn, batch, cfg: RanlLLMConfig, key,
     return {"step": jnp.zeros((), jnp.int32), "precond": h, "memory": C}
 
 
-def train_step(params, state, batch, rng, *, loss_fn, cfg: RanlLLMConfig):
-    """One RANL round. Returns (new_params, new_state, metrics)."""
+def train_step(params, state, batch, rng, *, loss_fn, cfg: RanlLLMConfig,
+               mesh=None, pspecs=None):
+    """One RANL round. Returns (new_params, new_state, metrics).
+
+    With ``mesh``, the step runs pjit-sharded end to end: the global batch
+    and the split worker axis shard over the mesh's data axes and the
+    per-worker gradients are constrained with the worker-prefixed
+    PartitionSpecs from ``launch.shard`` — the worker-axis sum inside
+    ``masked_aggregate`` then lowers to the round's single param-sized
+    all-reduce.  ``pspecs`` optionally carries precomputed trees
+    ({"state": ranl_state_pspecs(...), "batch": batch_pspecs(...)});
+    omitted entries are derived from ``params``/``batch``.
+    """
     num_regions, num_layer_regions, infos = region_layout(params)
-    losses, G = per_worker_grads(loss_fn, params, batch, cfg.num_workers)
+    if mesh is not None:
+        from ..launch.shard import batch_pspecs, ranl_state_pspecs
+        pspecs = dict(pspecs or {})
+        if "batch" not in pspecs:
+            pspecs["batch"] = batch_pspecs(
+                batch, batch_shards=_data_shards(mesh))
+        if "state" not in pspecs:
+            pspecs["state"] = ranl_state_pspecs(
+                params, model_shards=mesh.shape.get("model", 1))
+        batch = _apply_pspecs(batch, pspecs["batch"], mesh)
+    losses, G = per_worker_grads(loss_fn, params, batch, cfg.num_workers,
+                                 mesh=mesh)
+    if mesh is not None:
+        G = _apply_pspecs(G, pspecs["state"]["memory"], mesh)
 
     mask_key = jax.random.fold_in(rng, state["step"])
     masks = sample_masks(cfg.policy, mask_key, state["step"],

@@ -1,5 +1,6 @@
 """Deterministic stand-in for the tiny slice of `hypothesis` this suite
-uses (``given``, ``settings``, ``strategies.integers/floats``).
+uses (``given``, ``settings``,
+``strategies.integers/floats/sampled_from/booleans``).
 
 Loaded by the root conftest.py ONLY when the real library is absent
 (offline/hermetic environments).  Each ``@given`` property is executed for
@@ -29,7 +30,18 @@ def _floats(min_value, max_value):
     return _Strategy(lambda rng: rng.uniform(min_value, max_value))
 
 
-strategies = SimpleNamespace(integers=_integers, floats=_floats)
+def _sampled_from(elements):
+    vals = list(elements)
+    return _Strategy(lambda rng: vals[rng.randrange(len(vals))])
+
+
+def _booleans():
+    return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+strategies = SimpleNamespace(integers=_integers, floats=_floats,
+                             sampled_from=_sampled_from,
+                             booleans=_booleans)
 
 
 def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None,

@@ -1,0 +1,281 @@
+"""Device-parity harness: sharded engines vs the single-device oracles.
+
+The multi-device tests force ``XLA_FLAGS=--xla_force_host_platform_
+device_count=8`` in a subprocess (the parent's jax device count is locked
+at first import — same pattern as ``test_subprocess_mini_dryrun``) and pin:
+
+* ``run_ranl_sharded`` trajectory parity (<= 1e-6; diagnostics exact)
+  against ``run_ranl`` on 1/2/8-device ``("data",)`` meshes, dense and
+  diag curvature;
+* ``run_ranl_batch(mesh=...)`` parity against the unsharded batch engine,
+  with the seed axis actually partitioned across devices;
+* ``ranl_llm.train_step(mesh=...)`` parity against the single-device step
+  on 1/2/8-device meshes (params to reduction-reorder tolerance);
+* the communication claim, on compiled partitioned HLO via
+  ``launch.hlo_analysis``: the core round loop issues exactly ONE
+  param-sized all-reduce per round (plus a region-sized count reduce),
+  and a full ``train_step`` moves one gradient-sized reduction pass total
+  — the ``masked_aggregate`` single-reduction comment as an invariant.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (PolicyConfig, make_quadratic, run_ranl,
+                        run_ranl_batch, run_ranl_sharded)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _run_subprocess(code: str, timeout: int = 560):
+    """Run ``code`` (which must print a JSON dict as its last line) in a
+    fresh interpreter so it can set XLA_FLAGS before importing jax."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+_PRELUDE = r"""
+import os
+os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+assert jax.device_count() == 8, jax.devices()
+KEY = jax.random.PRNGKey(0)
+"""
+
+
+# --------------------------------------------------------------------------
+# in-process checks (single real device)
+# --------------------------------------------------------------------------
+
+def test_sharded_single_device_mesh_matches_run_ranl():
+    """On a degenerate 1-device mesh the shard_map engine must reproduce
+    run_ranl bit-for-bit (same PRNG stream, same reduction order)."""
+    prob = make_quadratic(KEY, num_workers=8, dim=48, kappa=80.0,
+                          coupling=0.0, num_regions=6, grad_noise=0.1,
+                          hess_noise=0.1)
+    pol = PolicyConfig(keep_prob=0.5, tau_star=1, heterogeneous=False)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = run_ranl_sharded(prob, KEY, mesh=mesh, num_rounds=8,
+                          num_regions=6, policy=pol)
+    ref = run_ranl(prob, KEY, num_rounds=8, num_regions=6, policy=pol)
+    np.testing.assert_array_equal(np.asarray(sh.xs), np.asarray(ref.xs))
+    np.testing.assert_array_equal(np.asarray(sh.comm_floats),
+                                  np.asarray(ref.comm_floats))
+    np.testing.assert_array_equal(np.asarray(sh.coverage),
+                                  np.asarray(ref.coverage))
+    assert sh.tau_star == ref.tau_star
+
+
+def test_sharded_mesh_validation_errors():
+    prob = make_quadratic(KEY, num_workers=4, dim=16, kappa=10.0,
+                          coupling=0.0, num_regions=4)
+    no_data = jax.make_mesh((1,), ("model",))
+    with pytest.raises(ValueError, match="data"):
+        run_ranl_sharded(prob, KEY, mesh=no_data, num_rounds=2)
+    with pytest.raises(ValueError, match="data"):
+        run_ranl_batch(prob, jax.random.split(KEY, 2), num_rounds=2,
+                       mesh=no_data)
+
+
+# --------------------------------------------------------------------------
+# 8 emulated host devices (subprocess)
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sharded_run_ranl_parity_and_hlo_one_allreduce():
+    """Dense + diag parity on 1/2/8-device meshes, the worker-divisibility
+    guard, and the one-param-sized-all-reduce-per-round HLO invariant."""
+    code = _PRELUDE + r"""
+from repro.core import (PolicyConfig, make_quadratic, run_ranl,
+                        run_ranl_sharded, lower_ranl_sharded)
+from repro.launch.hlo_analysis import collect_collectives
+
+prob = make_quadratic(KEY, num_workers=8, dim=48, kappa=80.0, coupling=0.0,
+                      num_regions=6, grad_noise=0.1, hess_noise=0.1)
+pol = PolicyConfig(keep_prob=0.5, tau_star=1, heterogeneous=False)
+ref = run_ranl(prob, KEY, num_rounds=12, num_regions=6, policy=pol)
+out = {"parity": {}}
+for ndev in (1, 2, 8):
+    mesh = jax.make_mesh((ndev,), ('data',))
+    sh = run_ranl_sharded(prob, KEY, mesh=mesh, num_rounds=12,
+                          num_regions=6, policy=pol)
+    out["parity"][str(ndev)] = {
+        "xs_err": float(np.abs(np.asarray(sh.xs)
+                               - np.asarray(ref.xs)).max()),
+        "cov_err": float(np.abs(np.asarray(sh.coverage)
+                                - np.asarray(ref.coverage)).max()),
+        "comm_eq": bool((np.asarray(sh.comm_floats)
+                         == np.asarray(ref.comm_floats)).all()),
+        "tau_eq": bool(sh.tau_star == ref.tau_star),
+    }
+
+mesh8 = jax.make_mesh((8,), ('data',))
+sh_d = run_ranl_sharded(prob, KEY, mesh=mesh8, num_rounds=12,
+                        num_regions=6, policy=pol, curvature='diag')
+ref_d = run_ranl(prob, KEY, num_rounds=12, num_regions=6, policy=pol,
+                 curvature='diag', use_kernel=False)
+out["diag_err"] = float(np.abs(np.asarray(sh_d.xs)
+                               - np.asarray(ref_d.xs)).max())
+
+# workers must divide across devices
+bad = make_quadratic(KEY, num_workers=6, dim=16, kappa=10.0, coupling=0.0)
+try:
+    run_ranl_sharded(bad, KEY, mesh=mesh8, num_rounds=2)
+    out["divisibility_raises"] = False
+except ValueError:
+    out["divisibility_raises"] = True
+
+# HLO: per scanned round, exactly ONE param-sized all-reduce (d floats);
+# the only other in-loop all-reduces are the region-count / scalar-comm
+# reductions, orders of magnitude smaller.
+D, T = 512, 7
+prob_h = make_quadratic(KEY, num_workers=8, dim=D, kappa=10.0,
+                        coupling=0.0, num_regions=8)
+txt = lower_ranl_sharded(prob_h, KEY, mesh=mesh8, num_rounds=T,
+                         num_regions=8, policy=pol).compile().as_text()
+recs = collect_collectives(txt, default_trip=1)
+in_loop = [r for r in recs if r.kind == 'all-reduce' and r.multiplier > 1]
+param_sized = [r for r in in_loop if r.operand_bytes >= D * 4]
+out["hlo"] = {
+    "n_param_sized_in_loop": len(param_sized),
+    "param_sized_multipliers": [r.multiplier for r in param_sized],
+    "small_in_loop_bytes": [r.operand_bytes for r in in_loop
+                            if r.operand_bytes < D * 4],
+    "rounds": T,
+}
+print(json.dumps(out))
+"""
+    res = _run_subprocess(code)
+    for ndev, r in res["parity"].items():
+        assert r["xs_err"] <= 1e-6, (ndev, res)
+        assert r["cov_err"] == 0.0, (ndev, res)
+        assert r["comm_eq"] and r["tau_eq"], (ndev, res)
+    assert res["diag_err"] <= 1e-6, res
+    assert res["divisibility_raises"], res
+    hlo = res["hlo"]
+    assert hlo["n_param_sized_in_loop"] == 1, hlo
+    assert hlo["param_sized_multipliers"] == [hlo["rounds"]], hlo
+    # the remaining in-loop reductions are the (Q,) counts + scalar comm
+    assert all(b <= 256 for b in hlo["small_in_loop_bytes"]), hlo
+
+
+@pytest.mark.slow
+def test_sharded_batch_parity_and_placement():
+    """run_ranl_batch(mesh=...) matches the unsharded batch engine and
+    actually spreads the seed axis across the mesh devices."""
+    code = _PRELUDE + r"""
+from repro.core import PolicyConfig, make_quadratic, run_ranl_batch
+
+prob = make_quadratic(KEY, num_workers=8, dim=32, kappa=50.0, coupling=0.0,
+                      num_regions=4, grad_noise=0.1)
+pol = PolicyConfig(keep_prob=0.5, tau_star=1)
+keys = jax.random.split(KEY, 8)
+ref = run_ranl_batch(prob, keys, num_rounds=10, num_regions=4, policy=pol)
+out = {}
+for ndev in (1, 2, 8):
+    mesh = jax.make_mesh((ndev,), ('data',))
+    bat = run_ranl_batch(prob, keys, num_rounds=10, num_regions=4,
+                         policy=pol, mesh=mesh)
+    out[str(ndev)] = {
+        "xs_err": float(np.abs(np.asarray(bat.xs)
+                               - np.asarray(ref.xs)).max()),
+        "comm_eq": bool((np.asarray(bat.comm_floats)
+                         == np.asarray(ref.comm_floats)).all()),
+        "tau_eq": bool((np.asarray(bat.tau_star)
+                        == np.asarray(ref.tau_star)).all()),
+        "n_devices_used": len(bat.xs.sharding.device_set),
+    }
+try:
+    run_ranl_batch(prob, jax.random.split(KEY, 6), num_rounds=2,
+                   mesh=jax.make_mesh((8,), ('data',)))
+    out["divisibility_raises"] = False
+except ValueError:
+    out["divisibility_raises"] = True
+print(json.dumps(out))
+"""
+    res = _run_subprocess(code)
+    for ndev in ("1", "2", "8"):
+        r = res[ndev]
+        assert r["xs_err"] <= 1e-6, (ndev, res)
+        assert r["comm_eq"] and r["tau_eq"], (ndev, res)
+        assert r["n_devices_used"] == int(ndev), (ndev, res)
+    assert res["divisibility_raises"], res
+
+
+@pytest.mark.slow
+def test_train_step_sharded_parity_and_single_reduction_hlo():
+    """ranl_llm.train_step with a mesh matches the single-device step on
+    1/2/8-device meshes, and its compiled HLO moves exactly one
+    gradient-sized all-reduce pass (masked_aggregate's claim)."""
+    code = _PRELUDE + r"""
+from functools import partial
+from repro.configs import get_config, smoke_variant
+from repro.data import make_batch
+from repro.models import init_model, lm_loss
+from repro.optim import RanlLLMConfig, init_state, train_step
+from repro.launch.hlo_analysis import collect_collectives
+
+cfg = smoke_variant(get_config('phi4-mini-3.8b'))
+params = init_model(cfg, KEY)
+loss_fn = lambda p, b: lm_loss(p, b, cfg, q_chunk=16, kv_chunk=16)
+batch = make_batch(cfg, KEY, 8, 32, pattern='bigram')
+rcfg = RanlLLMConfig(num_workers=8)
+state = init_state(params, loss_fn, batch, rcfg, KEY)
+ref = jax.jit(partial(train_step, loss_fn=loss_fn, cfg=rcfg))
+p1, s1, m1 = ref(params, state, batch, KEY)
+out = {"parity": {}}
+for ndev in (1, 2, 8):
+    mesh = jax.make_mesh((ndev,), ('data',))
+    sh = jax.jit(partial(train_step, loss_fn=loss_fn, cfg=rcfg, mesh=mesh))
+    p2, s2, m2 = sh(params, state, batch, KEY)
+    perr = prel = 0.0
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        a = np.asarray(a, np.float32); b = np.asarray(b, np.float32)
+        perr = max(perr, float(np.abs(a - b).max()))
+        prel = max(prel, float((np.abs(a - b)
+                                / (np.abs(a) + 1e-3)).max()))
+    out["parity"][str(ndev)] = {
+        "param_abs_err": perr, "param_rel_err": prel,
+        "loss_err": abs(float(m1['loss']) - float(m2['loss'])),
+        "coverage_eq": float(m1['coverage']) == float(m2['coverage']),
+        "uplink_eq": float(m1['uplink_frac']) == float(m2['uplink_frac']),
+        "step_eq": int(s2['step']) == int(s1['step']),
+    }
+
+# single-reduction invariant on the compiled 8-device step: total
+# all-reduce traffic == one fp32 pass over the gradients (+ scalar
+# epsilon for the per-leaf counts / trust-ratio / metric reductions)
+mesh8 = jax.make_mesh((8,), ('data',))
+sh8 = jax.jit(partial(train_step, loss_fn=loss_fn, cfg=rcfg, mesh=mesh8))
+txt = sh8.lower(params, state, batch, KEY).compile().as_text()
+recs = collect_collectives(txt, default_trip=1)
+ar_bytes = sum(r.total_bytes for r in recs if r.kind == 'all-reduce')
+grad_bytes = sum(l.size * 4 for l in jax.tree.leaves(params))
+out["hlo"] = {"allreduce_bytes": ar_bytes, "grad_bytes": grad_bytes}
+print(json.dumps(out))
+"""
+    res = _run_subprocess(code)
+    for ndev, r in res["parity"].items():
+        # reduction-reorder tolerance: worker-axis sums are partitioned
+        assert r["param_abs_err"] <= 1e-5, (ndev, res)
+        assert r["param_rel_err"] <= 3e-4, (ndev, res)
+        assert r["loss_err"] <= 1e-5, (ndev, res)
+        assert r["coverage_eq"] and r["uplink_eq"] and r["step_eq"], \
+            (ndev, res)
+    hlo = res["hlo"]
+    assert hlo["grad_bytes"] <= hlo["allreduce_bytes"] \
+        <= hlo["grad_bytes"] + 64 * 1024, hlo

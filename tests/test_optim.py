@@ -134,6 +134,100 @@ def test_int8_memory_roundtrip_and_training():
     assert float(m["loss"]) < first - 0.3
 
 
+def test_region_layout_mismatched_layer_depths_raise():
+    """Stacked layer leaves that disagree on the leading (num_layers) dim
+    would silently mis-assign region ids; region_layout must refuse."""
+    params = {"layers": {"wq": jnp.zeros((4, 8, 8)),
+                         "up": jnp.zeros((5, 8, 16))},
+              "embed": jnp.zeros((32, 8))}
+    with pytest.raises(ValueError, match="disagree"):
+        region_layout(params)
+    # agreeing depths (the valid shape) still lay out fine
+    ok = {"layers": {"wq": jnp.zeros((4, 8, 8)),
+                     "up": jnp.zeros((4, 8, 16))},
+          "embed": jnp.zeros((32, 8))}
+    num_regions, n_layer, infos = region_layout(ok)
+    assert n_layer == 4 and num_regions == 5
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 6), st.integers(2, 5), st.integers(3, 17),
+       st.integers(0, 10_000), st.floats(0.05, 0.95))
+def test_masked_aggregate_covered_and_memory_invariants(n, l, d, seed, p):
+    """Algorithm-1 lines 15–22 invariants, region by region: covered
+    regions average fresh gradients over exactly the covering workers,
+    uncovered regions fall back to the all-worker memory mean, and C_new
+    refreshes only where the worker trained the region."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    G = jax.random.normal(ks[0], (n, l, d))
+    C = jax.random.normal(ks[1], (n, l, d))
+    m = jax.random.uniform(ks[2], (n, l)) < p
+    g, c_new = masked_aggregate(G, m, C)
+    gn, cn, mn = np.asarray(G), np.asarray(C), np.asarray(m)
+    for q in range(l):
+        cov = mn[:, q]
+        exp = gn[cov, :, :][:, q].mean(axis=0) if cov.any() \
+            else cn[:, q].mean(axis=0)
+        np.testing.assert_allclose(np.asarray(g)[q], exp,
+                                   rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(c_new),
+                               np.where(mn[:, :, None], gn, cn),
+                               rtol=1e-6, atol=0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 4), st.integers(1, 33),
+       st.integers(0, 10_000), st.floats(-2.0, 2.0),
+       st.sampled_from(["float32", "bfloat16", "float16"]),
+       st.integers(2, 4))
+def test_quantize_memory_roundtrip_error_bound(n, l, d, seed, logscale,
+                                               dtype, ndim):
+    """int8 memory round-trip: |deq(q(G)) − G| <= scale/2 elementwise,
+    where scale is the per-(worker, region-row) absmax / 127 — across
+    dtypes, magnitudes, and 2-D/3-D/4-D leading shapes."""
+    from repro.optim.ranl_llm import dequantize_memory, quantize_memory
+    shape = {2: (n, d), 3: (n, l, d), 4: (n, l, d, 3)}[ndim]
+    G = (jax.random.normal(jax.random.PRNGKey(seed), shape)
+         * (10.0 ** logscale)).astype(jnp.dtype(dtype))
+    q = quantize_memory(G)
+    assert q["q"].dtype == jnp.int8 and q["q"].shape == G.shape
+    scale = np.asarray(q["scale"], np.float64)
+    assert (scale > 0).all()
+    # scales are per (worker, region-row): all dims after the second
+    # (after the first for 2-D leaves) are reduced to keepdims=1
+    red_from = 2 if ndim > 2 else 1
+    assert scale.shape == shape[:red_from] + (1,) * (ndim - red_from)
+    back = np.asarray(dequantize_memory(q), np.float64)
+    Gf = np.asarray(G.astype(jnp.float32), np.float64)
+    bound = 0.5 * scale * (1.0 + 1e-3) + 1e-12
+    assert (np.abs(back - Gf) <= bound).all(), \
+        float(np.abs(back - Gf).max() / scale.max())
+
+
+def test_train_step_jit_precond_refresh_with_int8_memory():
+    """precond_beta > 0 and memory_int8=True together, under jax.jit:
+    the EMA curvature refresh runs, the int8 memory survives the jit
+    round-trips, and training still learns."""
+    cfg, params, loss_fn, batch, _ = _setup(batch=16, seq=64)
+    rcfg = RanlLLMConfig(num_workers=4, precond_beta=0.3, memory_int8=True)
+    state = init_state(params, loss_fn, batch, rcfg, KEY)
+    h0 = np.asarray(jax.tree.leaves(state["precond"])[0])
+    step = jax.jit(lambda p, s, b, r: train_step(p, s, b, r,
+                                                 loss_fn=loss_fn, cfg=rcfg))
+    first = None
+    for t in range(8):
+        b = make_batch(cfg, jax.random.fold_in(KEY, 300 + t), 16, 64,
+                       pattern="bigram")
+        params, state, m = step(params, state, b, KEY)
+        first = first if first is not None else float(m["loss"])
+    is_mem = lambda x: isinstance(x, dict) and "q" in x
+    mem = jax.tree_util.tree_leaves(state["memory"], is_leaf=is_mem)
+    assert all(leaf["q"].dtype == jnp.int8 for leaf in mem)
+    h1 = np.asarray(jax.tree.leaves(state["precond"])[0])
+    assert not np.allclose(h0, h1)          # EMA refresh ran under jit
+    assert float(m["loss"]) < first - 0.3   # and training still learns
+
+
 def test_precond_refresh_updates_curvature():
     cfg, params, loss_fn, batch, _ = _setup()
     batch2 = make_batch(cfg, jax.random.fold_in(KEY, 999), 8, 32,
