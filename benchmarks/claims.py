@@ -18,7 +18,8 @@ import numpy as np
 from repro.core import (PolicyConfig, make_logistic, make_quadratic,
                         rounds_to_tol, run_gd, run_newton_exact,
                         run_newton_zero, run_ranl, run_ranl_batch,
-                        run_ranl_reference, run_ranl_sharded)
+                        run_ranl_reference, run_ranl_sharded,
+                        run_ranl_sharded2d)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -240,6 +241,44 @@ def bench_sharded_engine(smoke: bool = False):
     err = float(np.abs(np.asarray(res_s.xs) - np.asarray(res_1.xs)).max())
     return [{"name": f"engine/sharded_{ndev}dev", "us_per_call": us_s,
              "derived": (f"single_dev_us={us_1:.0f};devices={ndev};"
+                         f"max_traj_err={err:.1e}")}]
+
+
+def bench_sharded2d_engine(smoke: bool = False):
+    """Dimension-sharded round loop: 2-D ("data","model") shard_map with
+    per-device C/G/hdiag d-slices, blocked panel-Cholesky solves, and the
+    param all-reduce shrunk to a data-axis-only d/n_model-float psum —
+    vs the single-device engine on the same key (trajectory parity
+    reported).  On one device the 1x1 row measures pure shard_map +
+    blocked-solve overhead; on a real mesh it is the d >> device-memory
+    scale-out path."""
+    dim, rounds = (32, 10) if smoke else (64, 30)
+    N = 16
+    prob = make_quadratic(KEY, num_workers=N, dim=dim, kappa=100.0,
+                          coupling=0.0, num_regions=8)
+    pol = PolicyConfig(keep_prob=0.5, tau_star=1, heterogeneous=False)
+    kw = dict(num_rounds=rounds, num_regions=8, policy=pol)
+    # widest (data, model) mesh the visible devices allow: workers must
+    # divide the data axis, dim the model axis (prefer more model shards —
+    # the axis this bench exists to exercise)
+    ndev = jax.device_count()
+    best = (1, 1)
+    for c in (c for c in range(1, dim + 1) if dim % c == 0):
+        for r in (r for r in range(1, N + 1) if N % r == 0):
+            if r * c <= ndev and \
+                    (r * c, c) > (best[0] * best[1], best[1]):
+                best = (r, c)
+    from repro.launch.mesh import make_engine_mesh
+    mesh = make_engine_mesh(*best)
+    run_ranl(prob, KEY, **kw)                     # compile both engines
+    run_ranl_sharded2d(prob, KEY, mesh=mesh, **kw)
+    res_1, us_1 = _timed(lambda: run_ranl(prob, KEY, **kw))
+    res_s, us_s = _timed(lambda: run_ranl_sharded2d(prob, KEY, mesh=mesh,
+                                                    **kw))
+    err = float(np.abs(np.asarray(res_s.xs) - np.asarray(res_1.xs)).max())
+    return [{"name": f"engine/sharded2d_{best[0]}x{best[1]}",
+             "us_per_call": us_s,
+             "derived": (f"single_dev_us={us_1:.0f};mesh={best[0]}x{best[1]};"
                          f"max_traj_err={err:.1e}")}]
 
 

@@ -46,6 +46,7 @@ def main() -> None:
                    claims.bench_engine_speedup,
                    claims.bench_batch_seeds,
                    claims.bench_sharded_engine,
+                   claims.bench_sharded2d_engine,
                    claims.bench_diag_kernel_path):
             rows.extend(fn(smoke=args.smoke))
     if args.only in (None, "kernels"):

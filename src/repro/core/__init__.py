@@ -10,6 +10,8 @@ from .baselines import (  # noqa: F401
 )
 from .convex import Logistic, Quadratic, make_logistic, make_quadratic  # noqa: F401
 from .hessian import (  # noqa: F401
+    blocked_cho_solve,
+    blocked_cholesky,
     fisher_diag,
     hutchinson_diag,
     project_diag,
@@ -20,9 +22,11 @@ from .masks import PolicyConfig, ensure_coverage, sample_masks  # noqa: F401
 from .ranl import (  # noqa: F401
     RanlResult,
     lower_ranl_sharded,
+    lower_ranl_sharded2d,
     run_ranl,
     run_ranl_batch,
     run_ranl_reference,
     run_ranl_sharded,
+    run_ranl_sharded2d,
 )
 from .regions import contiguous_regions, expand_mask, region_sizes  # noqa: F401

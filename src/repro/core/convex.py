@@ -55,6 +55,34 @@ class Quadratic:
         n = 0.5 * (n + n.T)
         return self.A[i] + self.hess_noise * n
 
+    def worker_grad_rows(self, i, x, key, row_start, num_rows: int):
+        """Rows [row_start, row_start+num_rows) of ``worker_grad(i, x, key)``.
+
+        Computable from a row panel of A — the dimension-sharded engine
+        hands each device ``self`` with ``A`` already sliced to its
+        ``(N_local, num_rows, d)`` panel (see ``dim_sharded_specs``), so the
+        d×d per-worker Hessians never sit whole on one device.  The noise
+        stream is drawn at full length and sliced, keeping the values (and
+        the Δ/√d scaling) bit-identical to the unsharded oracle.
+        ``num_rows`` must be static; ``row_start`` may be traced.
+        """
+        g = self.A[i] @ (x - self.b[i])               # (num_rows,) panel rows
+        d = self.A.shape[-1]                          # GLOBAL dim (last axis)
+        noise = self.grad_noise * jax.random.normal(key, (d,)) \
+            / jnp.sqrt(d * 1.0)
+        return g + jax.lax.dynamic_slice_in_dim(noise, row_start, num_rows)
+
+    def dim_sharded_specs(self, worker_axis: str, dim_axis: str):
+        """PartitionSpecs for a ("data","model")-style 2-D mesh: workers
+        over ``worker_axis``, the per-worker Hessian rows over ``dim_axis``
+        (the O(N d²) state; b is O(N d) and stays dimension-replicated so
+        the grad oracle sees the full shift vector)."""
+        from jax.sharding import PartitionSpec as P
+        return Quadratic(A=P(worker_axis, dim_axis, None),
+                         b=P(worker_axis, None), grad_noise=self.grad_noise,
+                         hess_noise=self.hess_noise, x_star=P(),
+                         mu=self.mu, L_g=self.L_g)
+
     def mean_hessian(self):
         return self.A.mean(axis=0)
 
@@ -153,6 +181,26 @@ class Logistic:
         d = self.dim
         n = jax.random.normal(key, (d, d)) / d
         return H + self.hess_noise * 0.5 * (n + n.T)
+
+    def worker_grad_rows(self, i, x, key, row_start, num_rows: int):
+        """Rows [row_start, row_start+num_rows) of ``worker_grad``.
+
+        Logistic holds no O(d²) per-worker state (X is N×n×d), so the
+        dimension-sharded engine keeps X worker-sharded only and each model
+        shard recomputes the full gradient and slices — exact by
+        construction, trading redundant O(n d) flops for zero extra
+        communication.  ``num_rows`` must be static."""
+        g = self.worker_grad(i, x, key)
+        return jax.lax.dynamic_slice_in_dim(g, row_start, num_rows)
+
+    def dim_sharded_specs(self, worker_axis: str, dim_axis: str):
+        """Workers over ``worker_axis`` only — see ``worker_grad_rows``."""
+        from jax.sharding import PartitionSpec as P
+        return Logistic(X=P(worker_axis, None, None),
+                        y=P(worker_axis, None), lam=self.lam,
+                        grad_noise=self.grad_noise,
+                        hess_noise=self.hess_noise, x_star=P(),
+                        mu=self.mu, L_g=self.L_g)
 
     def mean_hessian(self):
         return jax.hessian(self.loss)(self.x_star)

@@ -33,6 +33,65 @@ def solve_projected(a_mu, g):
     return jax.scipy.linalg.cho_solve(jax.scipy.linalg.cho_factor(a_mu), g)
 
 
+def blocked_cholesky(a, block_size: int):
+    """Right-looking blocked Cholesky: lower factor L with a = L Lᵀ.
+
+    Processes ``block_size`` columns at a time (Python loop, static
+    shapes; ``d`` need not divide evenly — the last block is ragged):
+    factor the diagonal block, triangular-solve the panel below it, then
+    apply the symmetric trailing update.  This is the schedule the
+    dimension-sharded engine distributes over the ``"model"`` axis — each
+    step touches one column block plus the trailing submatrix, so no
+    participant ever needs the whole d×d matrix at once.  Agrees with
+    ``jnp.linalg.cholesky`` to float tolerance (equivalence-pinned in
+    tests across odd / non-divisible d).
+    """
+    d = a.shape[0]
+    if not 1 <= block_size:
+        raise ValueError(f"need block_size >= 1, got {block_size}")
+    L = jnp.zeros_like(a)
+    W = a
+    for s in range(0, d, block_size):
+        e = min(s + block_size, d)
+        ljj = jnp.linalg.cholesky(W[s:e, s:e])
+        L = L.at[s:e, s:e].set(ljj)
+        if e < d:
+            # panel solve: L[e:, s:e] = W[e:, s:e] inv(L_jj)ᵀ
+            panel = jax.scipy.linalg.solve_triangular(
+                ljj, W[e:, s:e].T, lower=True).T
+            L = L.at[e:, s:e].set(panel)
+            # trailing update (right-looking): W[e:, e:] -= panel panelᵀ
+            W = W.at[e:, e:].add(-(panel @ panel.T))
+    return L
+
+
+def blocked_cho_solve(chol_l, b, block_size: int):
+    """Solve (L Lᵀ) x = b by blocked forward/backward substitution.
+
+    ``chol_l``: lower Cholesky factor (e.g. from ``blocked_cholesky``).
+    Each block step consumes one (block, block) diagonal tile and one
+    panel of already-solved entries — the access pattern the sharded
+    engine turns into per-device panels plus small broadcasts.
+    """
+    if not 1 <= block_size:
+        raise ValueError(f"need block_size >= 1, got {block_size}")
+    d = chol_l.shape[0]
+    starts = list(range(0, d, block_size))
+    y = jnp.zeros_like(b)
+    for s in starts:                               # forward: L y = b
+        e = min(s + block_size, d)
+        rhs = b[s:e] - chol_l[s:e, :s] @ y[:s]
+        y = y.at[s:e].set(jax.scipy.linalg.solve_triangular(
+            chol_l[s:e, s:e], rhs, lower=True))
+    x = jnp.zeros_like(b)
+    for s in reversed(starts):                     # backward: Lᵀ x = y
+        e = min(s + block_size, d)
+        rhs = y[s:e] - chol_l[e:, s:e].T @ x[e:]
+        x = x.at[s:e].set(jax.scipy.linalg.solve_triangular(
+            chol_l[s:e, s:e].T, rhs, lower=False))
+    return x
+
+
 def hutchinson_diag(grad_fn, params, key, num_samples: int = 8):
     """Diagonal Hessian estimate diag(H) ≈ E[z ⊙ (Hz)], z ~ Rademacher.
 

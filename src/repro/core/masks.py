@@ -35,11 +35,19 @@ class PolicyConfig:
 
 def worker_keep_probs(key, num_workers: int, base: float,
                       heterogeneous: bool):
-    """Per-worker resource levels (keep probabilities)."""
+    """Per-worker resource levels (keep probabilities), mean ``base``.
+
+    Heterogeneous workers draw uniformly from an interval centred on
+    ``base`` with half-width ``min(base/2, 1 - base)`` — the widest
+    symmetric interval inside [0, 1], so the mean keep probability equals
+    ``base`` for every ``base`` in (0, 1] (a one-sided clip at 1.0 would
+    bias the mean low for base > 2/3).  For base <= 2/3 this is the
+    historical [base/2, 3*base/2] spread.
+    """
     if not heterogeneous:
         return jnp.full((num_workers,), base)
-    # resources spread uniformly in [base/2, min(1, 3*base/2)]
-    lo, hi = base * 0.5, min(1.0, base * 1.5)
+    half = min(base * 0.5, 1.0 - base)
+    lo, hi = base - half, base + half
     return jax.random.uniform(key, (num_workers,), minval=lo, maxval=hi)
 
 
@@ -76,24 +84,31 @@ def sample_masks(policy: PolicyConfig, key, t: int | jnp.ndarray,
     else:
         raise ValueError(f"unknown policy {policy.name}")
     if policy.tau_star:
-        m = ensure_coverage(m, key, policy.tau_star)
+        m = ensure_coverage(m, policy.tau_star)
     return m
 
 
-def ensure_coverage(mask, key, tau_star: int):
+def ensure_coverage(mask, tau_star: int):
     """Repair mask so every region is covered by >= tau_star workers.
 
     Deterministically assigns workers (q + j) mod N to uncovered regions —
     models the server nudging idle workers, preserving adaptivity elsewhere.
+    ``tau_star`` may not exceed the number of workers: with only N workers
+    the best achievable coverage is N, and silently capping there would let
+    a config promise a τ* the run cannot deliver.
     """
     N, Q = mask.shape
+    if tau_star > N:
+        raise ValueError(
+            f"ensure_coverage: tau_star={tau_star} exceeds num_workers={N} "
+            f"— at most N workers can cover a region")
     count = mask.sum(axis=0)
     need = jnp.maximum(tau_star - count, 0)              # (Q,)
     j = jnp.arange(N)[:, None]                           # (N, 1)
     q = jnp.arange(Q)[None, :]
     # per-region worker order, with ALREADY-COVERING workers sorted last
     # (forcing them would add no new coverage)
-    key = (j - q) % N + N * mask.astype(jnp.int32)       # (N, Q)
-    rank = (key[None, :, :] < key[:, None, :]).sum(axis=1)
+    order = (j - q) % N + N * mask.astype(jnp.int32)     # (N, Q)
+    rank = (order[None, :, :] < order[:, None, :]).sum(axis=1)
     forced = rank < need[None, :]
     return jnp.logical_or(mask, forced)

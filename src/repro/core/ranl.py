@@ -31,7 +31,19 @@ Engine layout:
   region-sized ``psum`` for coverage counts plus exactly ONE param-sized
   ``psum`` per round (the single-reduction form of ``masked_aggregate``).
   ``lower_ranl_sharded`` exposes the partitioned HLO so tests can assert
-  that communication claim on the compiled module.
+  that communication claim on the compiled module;
+* ``run_ranl_sharded2d`` adds the *dimension* axis: a 2-D
+  ``("data", "model")`` mesh where workers shard over "data" as above and
+  the parameter dimension d shards over "model" — per-device slices of C,
+  G, hdiag and the region masks, the param all-reduce shrunk to a
+  d/n_model-float psum over only the data axis, and (dense path) the
+  replicated Cholesky replaced by a blocked right-looking factorization +
+  blocked triangular solves over row panels, so the per-ROUND curvature
+  state is never a d×d buffer on any device (the one-time dense init
+  still materializes [H]_μ once — the Definition-4 eigen-projection is
+  inherently global; at true d >> memory scale use ``curvature="diag"``,
+  whose init is O(d)).  ``lower_ranl_sharded2d`` exposes the partitioned
+  HLO for the memory/communication assertions.
 
 For single runs the init phase executes eagerly (op-by-op, exactly the
 reference sequence) so the trajectory reproduces ``run_ranl_reference`` —
@@ -53,7 +65,7 @@ from .aggregation import server_aggregate
 from .hessian import hutchinson_diag, project_diag, project_psd, \
     solve_projected
 from .masks import PolicyConfig, sample_masks
-from .regions import contiguous_regions, expand_mask
+from .regions import contiguous_regions, expand_mask, region_sizes
 
 
 @dataclass
@@ -63,18 +75,29 @@ class RanlResult:
     losses: jnp.ndarray        # (T+2,)
     coverage: jnp.ndarray      # (T,) fraction of regions covered per round
     comm_floats: jnp.ndarray   # (T,) uplink floats actually transmitted
-    tau_star: int              # realized min coverage over rounds/regions
+    tau_star: int              # realized min worker coverage over
+                               # rounds/regions — 0 if ANY region went
+                               # uncovered in any round (the quantity
+                               # Theorem 1 is conditioned on).
                                # ((B,) array for batched runs)
+    tau_covered: int = 0       # min coverage over COVERED regions only —
+                               # the memory-fallback reading, where an
+                               # uncovered region is served from C and does
+                               # not count against fresh-gradient coverage.
+                               # N when every region was always covered.
 
 
 def _init_phase(problem, k_init, *, mu: float, lr: float, curvature: str,
-                hutch_samples: int):
+                hutch_samples: int, with_h_mu: bool = False):
     """Alg. 1 lines 1–8, worker evaluations vmapped.
 
     Returns (x1, C0, cho_c, cho_lower, hdiag): the post-init iterate, the
     seeded gradient memory, and the curvature state — a Cholesky factor of
     [H]_μ for the dense path, a projected diagonal estimate for the diag
-    path (the unused one is None).
+    path (the unused one is None).  With ``with_h_mu`` the projected
+    Hessian itself rides along as a sixth element (None on the diag path)
+    so the dimension-sharded engine can hand its row panels to the blocked
+    factorization; it is dead (traced away) otherwise.
     """
     N, d = problem.num_workers, problem.dim
     worker_ids = jnp.arange(N)
@@ -85,10 +108,12 @@ def _init_phase(problem, k_init, *, mu: float, lr: float, curvature: str,
     gkeys = jax.random.split(jax.random.fold_in(k_init, 1), N)
     g0 = grad_at(worker_ids, x0, gkeys)          # (N, d)
 
+    h_mu = None
     if curvature == "dense":
         H = jax.vmap(problem.worker_hessian,
                      in_axes=(0, None, 0))(worker_ids, x0, hkeys).mean(axis=0)
-        cho_c, cho_lower = jax.scipy.linalg.cho_factor(project_psd(H, mu))
+        h_mu = project_psd(H, mu)
+        cho_c, cho_lower = jax.scipy.linalg.cho_factor(h_mu)
         hdiag = None
         step0 = jax.scipy.linalg.cho_solve((cho_c, cho_lower),
                                            g0.mean(axis=0))
@@ -108,7 +133,32 @@ def _init_phase(problem, k_init, *, mu: float, lr: float, curvature: str,
         raise ValueError(f"unknown curvature {curvature!r}")
 
     x1 = x0 - lr * step0
+    if with_h_mu:
+        return x1, g0, cho_c, cho_lower, hdiag, h_mu
     return x1, g0, cho_c, cho_lower, hdiag
+
+
+def _round_diagnostics(covered_q, count_q, n_workers: int):
+    """Per-round (coverage_mean, min_count, min_covered_count).
+
+    ``min_count`` is the raw count minimum, so an uncovered region
+    contributes its literal 0 — it feeds ``tau_star``, the realized
+    minimum the convergence theorem is conditioned on (the old mapping of
+    uncovered regions to N hid them behind tau_star >= 1).
+    ``min_covered_count`` maps uncovered regions to N (excluded from the
+    min) — it feeds ``tau_covered``, the memory-fallback reading.  Single
+    source of truth for every engine (scan/batch, 1-D sharded, 2-D
+    sharded, reference).
+    """
+    return (covered_q.mean(), count_q.min(),
+            jnp.where(covered_q, count_q, n_workers).min())
+
+
+def _tau_pair(min_counts, min_cov_counts, n_workers: int):
+    """Cap the over-rounds mins at N -> (tau_star, tau_covered)."""
+    n_cap = jnp.asarray(n_workers, min_counts.dtype)
+    return (jnp.minimum(n_cap, min_counts.min()),
+            jnp.minimum(n_cap, min_cov_counts.min()))
 
 
 _ROUND_STATIC = ("num_rounds", "num_regions", "policy", "mu", "lr",
@@ -148,25 +198,27 @@ def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, *, num_rounds: int,
             else:
                 step = g / project_diag(hdiag, mu)
             x = x - lr * step
-        cov = M.any(axis=0)
-        covered_counts = jnp.where(cov, M.sum(axis=0), N)
-        return (x, C), (x, cov.mean(), Mx.sum(), covered_counts.min())
+        cov_mean, min_count, min_cov_count = _round_diagnostics(
+            M.any(axis=0), M.sum(axis=0), N)
+        return (x, C), (x, cov_mean, Mx.sum(), min_count, min_cov_count)
 
     x0 = jnp.zeros(d)
     if num_rounds > 0:
         ts = jnp.arange(1, num_rounds + 1)
-        _, (xs_t, cov, comm, min_counts) = jax.lax.scan(body, (x1, C0), ts)
+        _, (xs_t, cov, comm, min_counts, min_cov_counts) = jax.lax.scan(
+            body, (x1, C0), ts)
         xs = jnp.concatenate([jnp.stack([x0, x1]), xs_t], axis=0)
-        tau = jnp.minimum(jnp.asarray(N, min_counts.dtype), min_counts.min())
+        tau, tau_cov = _tau_pair(min_counts, min_cov_counts, N)
     else:
         xs = jnp.stack([x0, x1])
         cov = jnp.zeros((0,))
         comm = jnp.zeros((0,), jnp.int32)
         tau = jnp.asarray(N, jnp.int32)
+        tau_cov = jnp.asarray(N, jnp.int32)
 
     dist = jnp.sum((xs - problem.x_star[None, :]) ** 2, axis=1)
     losses = jax.vmap(problem.loss)(xs)
-    return xs, dist, losses, cov, comm, tau
+    return xs, dist, losses, cov, comm, tau, tau_cov
 
 
 _rounds_jit = functools.partial(
@@ -272,14 +324,16 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, *,
             step = g / project_diag(hdiag, mu)
         x = x - lr * step
         comm = jax.lax.psum(Mx.sum(), axis_name)
-        covered_counts = jnp.where(covered_q, count_q, N)
-        return (x, C), (x, covered_q.mean(), comm, covered_counts.min())
+        cov_mean, min_count, min_cov_count = _round_diagnostics(
+            covered_q, count_q, N)
+        return (x, C), (x, cov_mean, comm, min_count, min_cov_count)
 
     ts = jnp.arange(1, num_rounds + 1)
-    _, (xs_t, cov, comm, min_counts) = jax.lax.scan(body, (x1, C0), ts)
+    _, (xs_t, cov, comm, min_counts, min_cov_counts) = jax.lax.scan(
+        body, (x1, C0), ts)
     xs = jnp.concatenate([jnp.stack([jnp.zeros(d), x1]), xs_t], axis=0)
-    tau = jnp.minimum(jnp.asarray(N, min_counts.dtype), min_counts.min())
-    return xs, cov, comm, tau
+    tau, tau_cov = _tau_pair(min_counts, min_cov_counts, N)
+    return xs, cov, comm, tau, tau_cov
 
 
 _SHARDED_STATIC = ("mesh", "axis_name", "num_rounds", "num_regions",
@@ -302,7 +356,7 @@ def _sharded_engine(problem, k_loop, x1, C0, cho_c, hdiag, *, mesh,
     # the psum); check_rep=False because the replication checker cannot
     # track the axis_index-based worker slicing
     fn = shard_map(body, mesh=mesh, in_specs=in_specs,
-                   out_specs=(P(), P(), P(), P()), check_rep=False)
+                   out_specs=(P(), P(), P(), P(), P()), check_rep=False)
     return fn(problem, k_loop, x1, C0, cho_c, hdiag)
 
 
@@ -368,11 +422,12 @@ def run_ranl_sharded(problem, key, *, mesh, num_rounds: int = 30,
         problem, key, mesh=mesh, axis_name=axis_name, num_rounds=num_rounds,
         num_regions=num_regions, policy=policy, mu=mu, lr=lr,
         curvature=curvature, hutchinson_samples=hutchinson_samples)
-    xs, cov, comm, tau = _sharded_jit(*args, **static)
+    xs, cov, comm, tau, tau_cov = _sharded_jit(*args, **static)
     dist = jnp.sum((xs - problem.x_star[None, :]) ** 2, axis=1)
     losses = jax.vmap(problem.loss)(xs)
     return RanlResult(xs=xs, dist_sq=dist, losses=losses, coverage=cov,
-                      comm_floats=comm, tau_star=int(tau))
+                      comm_floats=comm, tau_star=int(tau),
+                      tau_covered=int(tau_cov))
 
 
 def lower_ranl_sharded(problem, key, *, mesh, num_rounds: int = 30,
@@ -393,6 +448,375 @@ def lower_ranl_sharded(problem, key, *, mesh, num_rounds: int = 30,
         num_regions=num_regions, policy=policy, mu=mu, lr=lr,
         curvature=curvature, hutchinson_samples=hutchinson_samples)
     return _sharded_jit.lower(*args, **static)
+
+
+# --------------------------------------------------------------------------
+# dimension-sharded engine: ("data", "model") mesh — the worker axis is
+# partitioned over "data" exactly as in run_ranl_sharded, and the parameter
+# dimension d is partitioned over "model": each device holds d/n_model-row
+# slices of the gradient memory C, the pruned gradients G, hdiag, the
+# region coordinate masks, and — for curvature="dense" — a (d/n_model, d)
+# row panel of the Cholesky factor of [H]_μ, so no device ever holds a
+# d×d curvature buffer.
+# --------------------------------------------------------------------------
+
+def _factor_sharded2d_body(h_panel, *, model_axis: str, n_model: int):
+    """Blocked right-looking Cholesky over row panels (under shard_map).
+
+    Each device holds the (p, d) row panel of [H]_μ for its model shard
+    and finishes holding the same rows of the lower factor L — the
+    ``blocked_cholesky`` schedule with the column-block loop mapped onto
+    devices.  Iteration j: device j factors its diagonal block (broadcast
+    as a (p, p) psum), every device below panel-solves its piece of
+    column block j, the finished column block is gathered once, and the
+    trailing update is applied locally.  Per-device peak state is the
+    (p, d) panel plus one transient (d, p) column block (the "block
+    slack" in the memory budget).
+    """
+    me = jax.lax.axis_index(model_axis)
+    p = h_panel.shape[0]
+    W = h_panel
+    for j in range(n_model):
+        s = j * p
+        blk = jax.lax.dynamic_slice(W, (0, s), (p, p))
+        diag_j = jax.lax.psum(jnp.where(me == j, blk, 0.0), model_axis)
+        l_jj = jnp.linalg.cholesky(diag_j)
+        below = jax.scipy.linalg.solve_triangular(l_jj, blk.T, lower=True).T
+        # rows above block j are strictly upper triangle -> 0 in L
+        col = jnp.where(me == j, l_jj, jnp.where(me > j, below, 0.0))
+        W = jax.lax.dynamic_update_slice(W, col, (0, s))
+        if j + 1 < n_model:
+            col_all = jax.lax.all_gather(col, model_axis).reshape(-1, p)
+            e = (j + 1) * p
+            W = W.at[:, e:].add(-(col @ col_all[e:, :].T))
+    return W
+
+
+def _factor_sharded2d(h_mu, *, mesh, model_axis: str, n_model: int):
+    body = functools.partial(_factor_sharded2d_body, model_axis=model_axis,
+                             n_model=n_model)
+    fn = shard_map(body, mesh=mesh, in_specs=(P(model_axis, None),),
+                   out_specs=P(model_axis, None), check_rep=False)
+    return fn(h_mu)
+
+
+_factor2d_jit = functools.partial(
+    jax.jit, static_argnames=("mesh", "model_axis", "n_model"))(
+    _factor_sharded2d)
+
+
+def _blocked_solve_panels(l_panel, g_local, *, model_axis: str,
+                          n_model: int, me, row_start, dim: int):
+    """Solve (L Lᵀ) s = g across row panels; returns the FULL (d,) step.
+
+    ``l_panel``: this device's (p, d) rows of L; ``g_local``: its (p,)
+    gradient shard (already data-axis reduced).  Block forward/backward
+    substitution with the block loop over model shards: every collective
+    is a model-axis psum of at most d floats (the freshly solved block, or
+    the running Lᵀs product) — the d axis never gathers, and the backward
+    sweep's broadcasts assemble the full step for free, which the caller
+    needs anyway to advance the replicated iterate.
+    """
+    p = l_panel.shape[0]
+    diag = jax.lax.dynamic_slice(l_panel, (0, row_start), (p, p))
+    zeros = jnp.zeros((dim,), l_panel.dtype)
+
+    y = zeros                                    # forward: L y = g
+    for j in range(n_model):
+        # on device j: g_j - sum_{k<j} L_jk y_k (unsolved blocks of y are 0)
+        rhs = g_local - l_panel @ y
+        cand = jax.scipy.linalg.solve_triangular(diag, rhs, lower=True)
+        mine = jnp.where(me == j, cand, 0.0)
+        y = y + jax.lax.psum(
+            jax.lax.dynamic_update_slice(zeros, mine, (row_start,)),
+            model_axis)
+
+    y_local = jax.lax.dynamic_slice(y, (row_start,), (p,))
+    s = zeros                                    # backward: Lᵀ s = y
+    for j in reversed(range(n_model)):
+        s_local = jax.lax.dynamic_slice(s, (row_start,), (p,))
+        lts = jax.lax.psum(l_panel.T @ s_local, model_axis)   # full Lᵀ s
+        rhs = y_local - jax.lax.dynamic_slice(lts, (row_start,), (p,))
+        cand = jax.scipy.linalg.solve_triangular(diag.T, rhs, lower=False)
+        mine = jnp.where(me == j, cand, 0.0)
+        s = s + jax.lax.psum(
+            jax.lax.dynamic_update_slice(zeros, mine, (row_start,)),
+            model_axis)
+    return s
+
+
+def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, *,
+                           data_axis: str, model_axis: str, num_rounds: int,
+                           num_regions: int, policy: PolicyConfig, mu: float,
+                           lr: float, curvature: str, use_kernel: bool,
+                           interpret: bool | None, num_workers: int,
+                           n_data: int, n_model: int):
+    """Per-device round loop on the 2-D mesh (runs under ``shard_map``).
+
+    ``problem``/``C0`` arrive worker-sharded over ``data_axis`` and (for
+    O(d²) problem state and C) dimension-sharded over ``model_axis``;
+    ``x1`` is replicated (the gradient oracles need the full iterate);
+    ``chol``/``hdiag`` are row-sharded over ``model_axis``.  Each round
+    issues one region-sized psum (coverage counts) and exactly ONE
+    param-SHARD-sized psum over the DATA axis (the single-reduction
+    aggregate of d/n_model floats); the dense solve adds model-axis-only
+    block broadcasts.  C never leaves the device that owns its
+    (worker, dimension) tile.
+    """
+    from ..kernels.region_aggregate import local_region_ids
+    N, Q = num_workers, num_regions
+    d = x1.shape[0]
+    p = d // n_model
+    n_local = problem.num_workers         # workers held by this shard
+    me_d = jax.lax.axis_index(data_axis)
+    me_m = jax.lax.axis_index(model_axis)
+    wstart = me_d * n_local
+    row_start = me_m * p
+    region_ids = contiguous_regions(d, Q)
+    region_ids_loc = local_region_ids(d, Q, row_start, p)
+    sizes_q = region_sizes(region_ids, Q)           # (Q,) static
+    local_ids = jnp.arange(n_local)
+    grad_rows = jax.vmap(
+        lambda i, xp, k: problem.worker_grad_rows(i, xp, k, row_start, p))
+    # the fused Pallas kernel aggregates over the workers it can see, so it
+    # is exact only when this device sees ALL workers (pure model-parallel
+    # meshes); otherwise the collective jnp form is used.
+    kernel_ok = use_kernel and curvature == "diag" and n_data == 1
+
+    def body(carry, t):
+        x, C = carry                  # x: (d,) replicated; C: (n_local, p)
+        kt = jax.random.fold_in(k_loop, t)
+        # Sample the FULL (N, Q) mask and key batch on every device (tiny,
+        # keeps the PRNG stream bit-identical to the single-device engine),
+        # then slice out this shard's workers.
+        M_full = sample_masks(policy, kt, t, N, Q)
+        gk_full = jax.random.split(jax.random.fold_in(kt, 7), N)
+        M = jax.lax.dynamic_slice_in_dim(M_full, wstart, n_local)
+        gk = jax.lax.dynamic_slice_in_dim(gk_full, wstart, n_local)
+        Mx_full = expand_mask(M, region_ids)        # (n_local, d)
+        Mx = expand_mask(M, region_ids_loc)         # (n_local, p) local cols
+        x_pruned = jnp.where(Mx_full, x[None, :], 0.0)
+        G = grad_rows(local_ids, x_pruned, gk) * Mx  # local gradient rows
+        # coverage counts: region-sized reduction (Q ints — negligible)
+        count_q = jax.lax.psum(M.sum(axis=0), data_axis)
+        covered_q = count_q > 0
+        count_x = jnp.take(count_q, region_ids_loc)
+        covered_x = jnp.take(covered_q, region_ids_loc)
+        if kernel_ok:
+            from ..kernels.region_aggregate import ranl_update
+            # all workers are local: the fused aggregate + projected-Newton
+            # kernel runs on this device's d-slice unchanged
+            x_loc = jax.lax.dynamic_slice(x, (row_start,), (p,))
+            x_loc, C = ranl_update(x_loc, hdiag, G, Mx, C, mu=mu, lr=lr,
+                                   interpret=interpret)
+            x = jax.lax.psum(
+                jax.lax.dynamic_update_slice(jnp.zeros_like(x), x_loc,
+                                             (row_start,)), model_axis)
+        else:
+            # single-reduction aggregation on the local d-slice: the
+            # worker-axis sum below is the round's ONE data-axis
+            # param-shard all-reduce (d/n_model floats)
+            denom = jnp.maximum(count_x, 1).astype(G.dtype)
+            contrib = jnp.where(covered_x[None, :], G / denom, C / N)
+            g_loc = jax.lax.psum(contrib.sum(axis=0), data_axis)
+            C = jnp.where(Mx, G, C)                 # device-local tile
+            if curvature == "dense":
+                step = _blocked_solve_panels(
+                    chol, g_loc, model_axis=model_axis, n_model=n_model,
+                    me=me_m, row_start=row_start, dim=d)
+            else:
+                step_loc = g_loc / project_diag(hdiag, mu)
+                step = jax.lax.psum(
+                    jax.lax.dynamic_update_slice(jnp.zeros_like(x), step_loc,
+                                                 (row_start,)), model_axis)
+            x = x - lr * step
+        # uplink floats, from the already-global counts (no extra psum)
+        comm = (count_q * sizes_q).sum()
+        cov_mean, min_count, min_cov_count = _round_diagnostics(
+            covered_q, count_q, N)
+        return (x, C), (x, cov_mean, comm, min_count, min_cov_count)
+
+    ts = jnp.arange(1, num_rounds + 1)
+    _, (xs_t, cov, comm, min_counts, min_cov_counts) = jax.lax.scan(
+        body, (x1, C0), ts)
+    xs = jnp.concatenate([jnp.stack([jnp.zeros(d), x1]), xs_t], axis=0)
+    tau, tau_cov = _tau_pair(min_counts, min_cov_counts, N)
+    return xs, cov, comm, tau, tau_cov
+
+
+_SHARDED2D_STATIC = ("mesh", "data_axis", "model_axis", "num_rounds",
+                     "num_regions", "policy", "mu", "lr", "curvature",
+                     "use_kernel", "interpret", "num_workers", "n_data",
+                     "n_model")
+
+
+def _sharded2d_engine(problem, k_loop, x1, C0, chol, hdiag, *, mesh,
+                      data_axis, model_axis, num_rounds, num_regions,
+                      policy, mu, lr, curvature, use_kernel, interpret,
+                      num_workers, n_data, n_model):
+    from ..launch.shard import ranl2d_pspecs
+    body = functools.partial(
+        _sharded2d_rounds_body, data_axis=data_axis, model_axis=model_axis,
+        num_rounds=num_rounds, num_regions=num_regions, policy=policy,
+        mu=mu, lr=lr, curvature=curvature, use_kernel=use_kernel,
+        interpret=interpret, num_workers=num_workers, n_data=n_data,
+        n_model=n_model)
+    specs = ranl2d_pspecs(problem, worker_axis=data_axis,
+                          dim_axis=model_axis)
+    in_specs = (specs["problem"], _replicated_specs(k_loop),
+                _replicated_specs(x1), specs["memory"],
+                specs["chol"] if chol is not None else None,
+                specs["hdiag"] if hdiag is not None else None)
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs,
+                   out_specs=(P(), P(), P(), P(), P()), check_rep=False)
+    return fn(problem, k_loop, x1, C0, chol, hdiag)
+
+
+_sharded2d_jit = functools.partial(
+    jax.jit, static_argnames=_SHARDED2D_STATIC)(_sharded2d_engine)
+
+
+def _check_mesh2d(problem, mesh, data_axis: str, model_axis: str):
+    for ax in (data_axis, model_axis):
+        if ax not in mesh.axis_names:
+            raise ValueError(f"mesh {mesh.axis_names} has no {ax!r} axis "
+                             f"— run_ranl_sharded2d needs a "
+                             f"({data_axis!r}, {model_axis!r}) mesh")
+    n_data = mesh.shape[data_axis]
+    n_model = mesh.shape[model_axis]
+    if problem.num_workers % n_data:
+        raise ValueError(
+            f"num_workers={problem.num_workers} must divide evenly across "
+            f"the {n_data} devices of the {data_axis!r} mesh axis")
+    if problem.dim % n_model:
+        raise ValueError(
+            f"dim={problem.dim} must divide evenly across the {n_model} "
+            f"devices of the {model_axis!r} mesh axis")
+    return n_data, n_model
+
+
+def _sharded2d_args(problem, key, *, mesh, data_axis, model_axis,
+                    num_rounds, num_regions, policy, mu, lr, curvature,
+                    use_kernel, hutchinson_samples, abstract: bool = False):
+    n_data, n_model = _check_mesh2d(problem, mesh, data_axis, model_axis)
+    cfg = _config(problem, mu=mu, lr=lr, curvature=curvature,
+                  hutchinson_samples=hutchinson_samples)
+    hutch = cfg.pop("hutch_samples")
+
+    # Init phase (Alg. 1 lines 1-8) runs replicated, identical to run_ranl:
+    # the Definition-4 projection is a global eigendecomposition, so [H]_μ
+    # exists once at init regardless — but the FACTORIZATION is blocked and
+    # model-sharded, and only the (d/n_model, d) row panels flow into the
+    # round loop.  At true d >> memory scale use curvature="diag", whose
+    # init state is O(d).  The dense path does factor [H]_μ twice at init
+    # (_init_phase's cho_factor for the x¹ step, then the blocked panels):
+    # the replicated potrf is ~3% of the eigh's flops in the same init and
+    # keeps x¹ bit-identical to run_ranl's, so the duplication is kept.
+    def make_args(problem, key):
+        k_init, k_loop = jax.random.split(key)
+        x1, C0, _, _, hdiag, h_mu = _init_phase(
+            problem, k_init, mu=cfg["mu"], lr=cfg["lr"],
+            curvature=cfg["curvature"], hutch_samples=hutch, with_h_mu=True)
+        chol = None
+        if cfg["curvature"] == "dense":
+            chol = _factor2d_jit(h_mu, mesh=mesh, model_axis=model_axis,
+                                 n_model=n_model)
+        return problem, k_loop, x1, C0, chol, hdiag
+
+    if abstract:
+        # lowering only needs avals: trace the init to shapes/dtypes
+        # instead of paying its O(N d²) Hessians + O(d³) eigh/factorize
+        args = jax.eval_shape(make_args, problem, key)
+    else:
+        args = make_args(problem, key)
+    static = dict(mesh=mesh, data_axis=data_axis, model_axis=model_axis,
+                  num_rounds=int(num_rounds), num_regions=int(num_regions),
+                  policy=policy, use_kernel=bool(use_kernel),
+                  interpret=None, num_workers=problem.num_workers,
+                  n_data=n_data, n_model=n_model, **cfg)
+    return args, static
+
+
+def run_ranl_sharded2d(problem, key, *, mesh, num_rounds: int = 30,
+                       num_regions: int = 8,
+                       policy: PolicyConfig = PolicyConfig(),
+                       mu: float | None = None, curvature: str = "dense",
+                       lr: float = 1.0, use_kernel: bool = True,
+                       hutchinson_samples: int = 8,
+                       data_axis: str = "data", model_axis: str = "model"):
+    """Algorithm 1 with workers AND the parameter dimension sharded.
+
+    2-D ``(data_axis, model_axis)`` mesh: the worker axis partitions over
+    ``data_axis`` exactly as in ``run_ranl_sharded``; the parameter
+    dimension d partitions over ``model_axis`` — per-device slices of the
+    gradient memory C, the pruned gradients G, ``hdiag``, and the region
+    coordinate masks, with the per-round param all-reduce shrunk to a
+    psum of d/n_model floats over ONLY the data axis.
+
+    ``curvature="dense"`` replaces the replicated Cholesky with a blocked
+    right-looking factorization plus blocked triangular solves over
+    d-axis row panels: no device holds a d×d curvature buffer in the
+    round loop (per-device curvature bytes = d²/n_model plus one column
+    block of slack), and the solves communicate only model-axis block
+    broadcasts.  Caveat: the one-time dense INIT still materializes
+    [H]_μ replicated — the Definition-4 projection is a global
+    eigendecomposition — so the d-beyond-one-device regime needs
+    ``curvature="diag"``, whose init state is O(d) and whose Hutchinson
+    estimate and fused Pallas ``ranl_update`` kernel run on local
+    d-slices unchanged (the kernel engages on pure model-parallel
+    meshes, where every worker is device-local).
+
+    Trajectories match ``run_ranl`` to blocked-solve reorder tolerance
+    (parity-pinned at 1e-5 in tests/test_multidevice.py on 1x1, 2x2 and
+    1x4 emulated meshes).  Requires ``num_workers`` divisible by the data
+    axis extent and ``dim`` divisible by the model axis extent.
+    """
+    if num_rounds <= 0:       # no rounds -> nothing to shard
+        _check_mesh2d(problem, mesh, data_axis, model_axis)
+        return run_ranl(problem, key, num_rounds=num_rounds,
+                        num_regions=num_regions, policy=policy, mu=mu,
+                        curvature=curvature, lr=lr,
+                        hutchinson_samples=hutchinson_samples)
+    args, static = _sharded2d_args(
+        problem, key, mesh=mesh, data_axis=data_axis,
+        model_axis=model_axis, num_rounds=num_rounds,
+        num_regions=num_regions, policy=policy, mu=mu, lr=lr,
+        curvature=curvature, use_kernel=use_kernel,
+        hutchinson_samples=hutchinson_samples)
+    xs, cov, comm, tau, tau_cov = _sharded2d_jit(*args, **static)
+    dist = jnp.sum((xs - problem.x_star[None, :]) ** 2, axis=1)
+    losses = jax.vmap(problem.loss)(xs)
+    return RanlResult(xs=xs, dist_sq=dist, losses=losses, coverage=cov,
+                      comm_floats=comm, tau_star=int(tau),
+                      tau_covered=int(tau_cov))
+
+
+def lower_ranl_sharded2d(problem, key, *, mesh, num_rounds: int = 30,
+                         num_regions: int = 8,
+                         policy: PolicyConfig = PolicyConfig(),
+                         mu: float | None = None, curvature: str = "dense",
+                         lr: float = 1.0, use_kernel: bool = True,
+                         hutchinson_samples: int = 8,
+                         data_axis: str = "data",
+                         model_axis: str = "model"):
+    """Lower (without running) the 2-D sharded round loop.
+
+    Genuinely compile-time: the init phase and factorization are traced
+    to avals with ``jax.eval_shape`` (no Hessian evaluation, eigh, or
+    factorization executes), so configs far beyond this host's memory
+    can be inspected.  ``.compile().as_text()`` is the partitioned HLO on
+    which ``launch.hlo_analysis`` proves the per-ROUND memory and
+    communication claims: no per-device curvature buffer above
+    ~d²/n_model bytes, and exactly one data-axis param-shard all-reduce
+    per round.
+    """
+    args, static = _sharded2d_args(
+        problem, key, mesh=mesh, data_axis=data_axis,
+        model_axis=model_axis, num_rounds=num_rounds,
+        num_regions=num_regions, policy=policy, mu=mu, lr=lr,
+        curvature=curvature, use_kernel=use_kernel,
+        hutchinson_samples=hutchinson_samples, abstract=True)
+    return _sharded2d_jit.lower(*args, **static)
 
 
 def _config(problem, *, mu, lr, curvature, hutchinson_samples):
@@ -422,13 +846,14 @@ def run_ranl(problem, key, *, num_rounds: int = 30, num_regions: int = 8,
     x1, C0, cho_c, cho_lower, hdiag = _init_phase(
         problem, k_init, mu=cfg["mu"], lr=cfg["lr"],
         curvature=cfg["curvature"], hutch_samples=hutch)
-    xs, dist, losses, cov, comm, tau = _rounds_jit(
+    xs, dist, losses, cov, comm, tau, tau_cov = _rounds_jit(
         problem, k_loop, x1, C0, cho_c, hdiag,
         num_rounds=int(num_rounds), num_regions=int(num_regions),
         policy=policy, use_kernel=bool(use_kernel),
         interpret=None, cho_lower=cho_lower, **cfg)
     return RanlResult(xs=xs, dist_sq=dist, losses=losses, coverage=cov,
-                      comm_floats=comm, tau_star=int(tau))
+                      comm_floats=comm, tau_star=int(tau),
+                      tau_covered=int(tau_cov))
 
 
 def run_ranl_batch(problem, keys, *, num_rounds: int = 30,
@@ -463,12 +888,12 @@ def run_ranl_batch(problem, keys, *, num_rounds: int = 30,
         problem = jax.device_put(problem, NamedSharding(mesh, P()))
     cfg = _config(problem, mu=mu, lr=lr, curvature=curvature,
                   hutchinson_samples=hutchinson_samples)
-    xs, dist, losses, cov, comm, tau = _batch_jit(
+    xs, dist, losses, cov, comm, tau, tau_cov = _batch_jit(
         problem, keys, num_rounds=int(num_rounds),
         num_regions=int(num_regions), policy=policy,
         use_kernel=bool(use_kernel), interpret=None, **cfg)
     return RanlResult(xs=xs, dist_sq=dist, losses=losses, coverage=cov,
-                      comm_floats=comm, tau_star=tau)
+                      comm_floats=comm, tau_star=tau, tau_covered=tau_cov)
 
 
 def run_ranl_reference(problem, key, *, num_rounds: int = 30,
@@ -501,7 +926,7 @@ def run_ranl_reference(problem, key, *, num_rounds: int = 30,
     grad_all = jax.vmap(problem.worker_grad, in_axes=(0, 0, 0))
 
     xs = [x0, x]
-    min_cov = N
+    min_cov, min_cov_covered = N, N
     cov_hist, comm_hist = [], []
     for t in range(1, num_rounds + 1):
         kt = jax.random.fold_in(k_loop, t)
@@ -514,11 +939,12 @@ def run_ranl_reference(problem, key, *, num_rounds: int = 30,
         x = x - solve_projected(H_mu, g)
         xs.append(x)
 
-        cov = M.any(axis=0)
-        cov_hist.append(cov.mean())
+        cov_mean, min_count, min_cov_count = _round_diagnostics(
+            M.any(axis=0), M.sum(axis=0), N)
+        cov_hist.append(cov_mean)
         comm_hist.append(Mx.sum())                       # uplink floats
-        covered_counts = jnp.where(cov, M.sum(axis=0), N)
-        min_cov = min(min_cov, int(covered_counts.min()))
+        min_cov = min(min_cov, int(min_count))
+        min_cov_covered = min(min_cov_covered, int(min_cov_count))
 
     xs = jnp.stack(xs)
     dist = jnp.sum((xs - problem.x_star[None, :]) ** 2, axis=1)
@@ -526,4 +952,4 @@ def run_ranl_reference(problem, key, *, num_rounds: int = 30,
     return RanlResult(xs=xs, dist_sq=dist, losses=losses,
                       coverage=jnp.stack(cov_hist),
                       comm_floats=jnp.stack(comm_hist),
-                      tau_star=min_cov)
+                      tau_star=min_cov, tau_covered=min_cov_covered)

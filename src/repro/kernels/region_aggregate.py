@@ -24,6 +24,23 @@ from jax.experimental import pallas as pl
 BLOCK_D = 512
 
 
+def local_region_ids(dim: int, num_regions: int, offset, size: int):
+    """Region id per coordinate of the slice [offset, offset+size) of a
+    ``dim``-coordinate vector partitioned into ``num_regions`` contiguous
+    regions.
+
+    Slice-offset-aware: a dimension-sharded engine expands its (N, Q)
+    region masks into *local* coordinate masks with these ids, so the
+    kernels in this module (and the jnp aggregation oracle) operate on
+    d-slices without ever materializing the full coordinate mask row.
+    ``offset`` may be a traced index (e.g. derived from
+    ``jax.lax.axis_index``); ``dim``/``num_regions``/``size`` are static.
+    """
+    from ..core.regions import contiguous_regions
+    ids = contiguous_regions(dim, num_regions)
+    return jax.lax.dynamic_slice_in_dim(ids, offset, size)
+
+
 def _resolve_interpret(interpret: bool | None) -> bool:
     """None -> interpret everywhere except real TPUs (compiled there)."""
     if interpret is None:

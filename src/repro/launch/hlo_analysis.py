@@ -11,6 +11,16 @@ loop condition's LT-compare constant; nesting multiplies).  Operand sizes
 come from the definition table (HLO prints shapes at definitions only).
 ``/*index=N*/`` comments (emitted inside wide tuple types) are stripped
 before matching — they otherwise break instruction parsing.
+
+Collectives additionally carry their parsed ``replica_groups`` so
+multi-axis meshes can attribute each one to a mesh axis:
+``mesh_axis_groups`` computes the device groups a reduction over one axis
+of a row-major mesh produces, and ``groups_reduce_over`` matches a
+record against them — how the 2-D RANL engine proves "exactly one
+DATA-axis param-shard all-reduce per round" while its model-axis solve
+broadcasts ride in the same loop.  ``max_array_bytes`` reports the
+largest single (non-tuple) buffer in the partitioned module — the
+per-device memory claim (no d×d curvature buffer) is asserted on it.
 """
 
 from __future__ import annotations
@@ -35,6 +45,89 @@ _INSTR_RE = re.compile(
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 _OPERAND_RE = re.compile(r"%([\w\.\-]+)")
 _COMMENT_RE = re.compile(r"/\*.*?\*/")
+_GROUPS_BRACES_RE = re.compile(r"replica_groups=\{(\{[\d,\{\}]*\})\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+
+
+def parse_replica_groups(line: str):
+    """``replica_groups=...`` of a collective -> tuple of id tuples.
+
+    Handles both HLO spellings: explicit braces ``{{0,2},{1,3}}`` and the
+    iota form ``[G,S]<=[dims]T(perm)`` (arange over the source dims,
+    transposed by ``perm``, reshaped to G groups of S).  Returns None when
+    the line carries no replica_groups (single-replica modules).
+    """
+    m = _GROUPS_BRACES_RE.search(line)
+    if m:
+        return tuple(
+            tuple(int(x) for x in grp.split(",") if x)
+            for grp in re.findall(r"\{([\d,]*)\}", m.group(1)))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        perm = ([int(x) for x in m.group(4).split(",")] if m.group(4)
+                else list(range(len(dims))))
+        n = 1
+        for dim in dims:
+            n *= dim
+        # arange(n).reshape(dims).transpose(perm).reshape(g, s), in pure
+        # python (row-major strides)
+        strides = [1] * len(dims)
+        for i in range(len(dims) - 2, -1, -1):
+            strides[i] = strides[i + 1] * dims[i + 1]
+        pdims = [dims[p] for p in perm]
+        pstrides = [strides[p] for p in perm]
+        flat = []
+        idx = [0] * len(pdims)
+        for _ in range(n):
+            flat.append(sum(i * st for i, st in zip(idx, pstrides)))
+            for ax in range(len(pdims) - 1, -1, -1):
+                idx[ax] += 1
+                if idx[ax] < pdims[ax]:
+                    break
+                idx[ax] = 0
+        return tuple(tuple(flat[i * s:(i + 1) * s]) for i in range(g))
+    return None
+
+
+def mesh_axis_groups(axis_sizes, axis: int):
+    """Device-id groups of a reduction over mesh axis ``axis``.
+
+    ``axis_sizes``: the mesh shape, devices laid out row-major (the
+    ``Mesh(np.array(devices).reshape(shape), names)`` convention).  Each
+    group holds the linearized ids that share every OTHER axis coordinate
+    — exactly the replica_groups a ``psum`` over that one axis lowers to.
+    """
+    sizes = list(axis_sizes)
+    strides = [1] * len(sizes)
+    for i in range(len(sizes) - 2, -1, -1):
+        strides[i] = strides[i + 1] * sizes[i + 1]
+    other = [i for i in range(len(sizes)) if i != axis]
+    groups = []
+    coords = [0] * len(other)
+    while True:
+        base = sum(c * strides[o] for c, o in zip(coords, other))
+        groups.append(tuple(base + k * strides[axis]
+                            for k in range(sizes[axis])))
+        for i in range(len(other) - 1, -1, -1):
+            coords[i] += 1
+            if coords[i] < sizes[other[i]]:
+                break
+            coords[i] = 0
+        else:
+            break
+    return tuple(groups)
+
+
+def groups_reduce_over(record_groups, axis_sizes, axis: int) -> bool:
+    """True iff a collective's replica_groups reduce over mesh axis
+    ``axis`` (group membership compared as sets, order-insensitive)."""
+    if record_groups is None:
+        return False
+    want = {frozenset(g) for g in mesh_axis_groups(axis_sizes, axis)}
+    return {frozenset(g) for g in record_groups} == want
 
 
 def shape_bytes(type_str: str) -> int:
@@ -59,6 +152,7 @@ class Instr:
     result_bytes: int
     operands: list[str]
     line: str
+    tuple_result: bool = False
 
 
 @dataclass
@@ -69,10 +163,14 @@ class CollectiveRecord:
     result_bytes: int
     multiplier: int
     count: int = 1
+    replica_groups: tuple | None = None
 
     @property
     def total_bytes(self) -> int:
         return self.operand_bytes * self.multiplier * self.count
+
+    def reduces_over(self, axis_sizes, axis: int) -> bool:
+        return groups_reduce_over(self.replica_groups, axis_sizes, axis)
 
 
 def parse_module(text: str):
@@ -97,7 +195,8 @@ def parse_module(text: str):
         ops = _OPERAND_RE.findall(paren.split("),", 1)[0])
         instrs[name] = Instr(name=name, comp=current, opcode=opcode,
                              result_bytes=shape_bytes(rtype),
-                             operands=ops, line=line.strip())
+                             operands=ops, line=line.strip(),
+                             tuple_result=rtype.strip().startswith("("))
         comp_instrs.setdefault(current, []).append(name)
     return instrs, comp_instrs
 
@@ -176,8 +275,24 @@ def collect_collectives(text: str, default_trip: int = 1):
         records.append(CollectiveRecord(
             kind=base, comp=ins.comp, operand_bytes=operand_bytes,
             result_bytes=ins.result_bytes,
-            multiplier=mult.get(ins.comp, 1)))
+            multiplier=mult.get(ins.comp, 1),
+            replica_groups=parse_replica_groups(ins.line)))
     return records
+
+
+def max_array_bytes(text: str) -> int:
+    """Largest single (non-tuple) buffer any instruction produces.
+
+    Tuple-typed results (while carries, wide parameters, multi-output
+    fusions) are aggregates of separately-allocated buffers, so they are
+    skipped; their elements are counted where they are produced.  On a
+    partitioned module this bounds per-device array residency — the
+    dimension-sharded engine asserts no device sees a d×d curvature
+    buffer with it.
+    """
+    instrs, _ = parse_module(text)
+    return max((i.result_bytes for i in instrs.values()
+                if not i.tuple_result), default=0)
 
 
 def summarize_collectives(records):

@@ -8,6 +8,26 @@ import, ordinary runs see the real (single) device.
 from __future__ import annotations
 
 import jax
+import numpy as np
+
+
+def make_engine_mesh(data_shards: int, model_shards: int = 1):
+    """("data", "model") mesh over the first data*model visible devices.
+
+    Row-major (data-major) device order — the layout the RANL engines
+    assume and that ``hlo_analysis.mesh_axis_groups`` reproduces when
+    classifying collectives by mesh axis.  ``model_shards=1`` degenerates
+    to the worker-only sharding of ``run_ranl_sharded`` (plus a size-1
+    model axis).
+    """
+    n = data_shards * model_shards
+    if jax.device_count() < n:
+        raise ValueError(
+            f"mesh ({data_shards}, {model_shards}) needs {n} devices but "
+            f"jax sees {jax.device_count()}; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={n} to emulate them")
+    devs = np.array(jax.devices()[:n]).reshape(data_shards, model_shards)
+    return jax.sharding.Mesh(devs, ("data", "model"))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -160,6 +160,30 @@ def ranl_state_pspecs(params, model_shards: int = 1, fsdp_shards=None,
     }
 
 
+def ranl2d_pspecs(problem, *, worker_axis: str = "data",
+                  dim_axis: str = "model"):
+    """PartitionSpecs for the dimension-sharded convex RANL engine.
+
+    One dict per moving pytree of ``run_ranl_sharded2d``'s round loop on a
+    ``(worker_axis, dim_axis)`` mesh:
+
+      * ``problem`` — the problem's own leaf rules (worker axes over
+        ``worker_axis``; O(d²) per-worker state additionally row-sharded
+        over ``dim_axis`` — see each problem's ``dim_sharded_specs``);
+      * ``memory`` — gradient memory C (N, d): workers × dimension;
+      * ``chol`` — the lower Cholesky factor of [H]_μ (d, d) as row
+        panels over ``dim_axis`` (d²/n_model per device, the engine's
+        curvature budget);
+      * ``hdiag`` — diagonal curvature (d,) over ``dim_axis``.
+    """
+    return {
+        "problem": problem.dim_sharded_specs(worker_axis, dim_axis),
+        "memory": P(worker_axis, dim_axis),
+        "chol": P(dim_axis, None),
+        "hdiag": P(dim_axis),
+    }
+
+
 def batch_pspecs(batch_specs, batch_shards: int = 1):
     def one(path, leaf):
         names = _names(path)

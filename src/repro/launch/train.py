@@ -7,9 +7,14 @@ dry-run lowers at production scale.  Example:
       --steps 20 --batch 8 --seq 64 --workers 4
 
 With ``--data-shards N`` the RANL worker/batch axes shard over an
-(N,)-device ``("data",)`` mesh (workers and batch must divide by N); on a
-laptop/CI set ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to
-emulate the devices.
+(N,)-device ``("data",)`` mesh (workers and batch must divide by N).
+Adding ``--model-shards M`` upgrades it to an (N, M) ``("data","model")``
+mesh: the parameter/tensor axes additionally shard over "model" via the
+PartitionSpec rules in ``launch/shard.py``, so per-device optimizer state
+(params, curvature, the N×params gradient memory) drops by ~M on top of
+the worker split.  On a laptop/CI set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N*M`` to emulate the
+devices.
 """
 
 from __future__ import annotations
@@ -51,6 +56,10 @@ def run(argv=None):
     ap.add_argument("--data-shards", type=int, default=1,
                     help="shard the worker/batch axes over this many "
                          "devices of a ('data',) mesh (1 = unsharded)")
+    ap.add_argument("--model-shards", type=int, default=1,
+                    help="additionally shard parameter/tensor axes over "
+                         "this many devices of the 'model' axis of a "
+                         "('data','model') mesh (1 = data-parallel only)")
     ap.add_argument("--keep-prob", type=float, default=0.7)
     ap.add_argument("--mu", type=float, default=1e-4)
     ap.add_argument("--lr", type=float, default=1.0)
@@ -65,7 +74,15 @@ def run(argv=None):
     if args.smoke:
         cfg = smoke_variant(cfg)
     mesh = None
-    if args.data_shards > 1:
+    if args.model_shards > 1:
+        from .mesh import make_engine_mesh
+        try:
+            mesh = make_engine_mesh(args.data_shards, args.model_shards)
+        except ValueError as e:
+            raise SystemExit(str(e)) from e
+        print(f"mesh: ({args.data_shards}, {args.model_shards}) "
+              f"('data','model') over {jax.devices()[0].platform}")
+    elif args.data_shards > 1:
         ndev = jax.device_count()
         if ndev < args.data_shards:
             raise SystemExit(

@@ -6,12 +6,14 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (PolicyConfig, ensure_coverage, expand_mask,
+from repro.core import (PolicyConfig, blocked_cho_solve, blocked_cholesky,
+                        ensure_coverage, expand_mask,
                         contiguous_regions, make_quadratic, project_psd,
                         region_sizes, rounds_to_tol, run_gd,
                         run_newton_zero, run_ranl, run_ranl_batch,
                         run_ranl_reference, sample_masks,
                         server_aggregate, solve_projected)
+from repro.core.masks import worker_keep_probs
 
 KEY = jax.random.PRNGKey(0)
 
@@ -59,6 +61,28 @@ def test_solve_projected_matches_inverse():
                                jnp.linalg.solve(a, g), rtol=2e-4)
 
 
+@pytest.mark.parametrize("d", [1, 5, 37, 48, 63])
+@pytest.mark.parametrize("block", [1, 7, 16, 64])
+def test_blocked_cholesky_matches_jax_scipy(d, block):
+    """Blocked right-looking factorization + blocked triangular solves ==
+    the jax.scipy dense path, across odd / non-divisible d and block
+    sizes (incl. block > d) — the schedule the dimension-sharded engine
+    distributes over the model axis."""
+    a = project_psd(jax.random.normal(jax.random.fold_in(KEY, 13 * d), (d, d)),
+                    0.4)
+    L = blocked_cholesky(a, block)
+    np.testing.assert_allclose(np.asarray(L),
+                               np.asarray(jnp.linalg.cholesky(a)),
+                               rtol=2e-4, atol=1e-5)
+    g = jax.random.normal(jax.random.fold_in(KEY, d), (d,))
+    x = blocked_cho_solve(L, g, block)
+    ref = jax.scipy.linalg.cho_solve(jax.scipy.linalg.cho_factor(a), g)
+    np.testing.assert_allclose(np.asarray(x), np.asarray(ref),
+                               rtol=2e-4, atol=1e-5)
+    # the factor is genuinely lower triangular (no junk above the diagonal)
+    assert np.allclose(np.triu(np.asarray(L), 1), 0.0)
+
+
 # --------------------------------------------------------------------------
 # regions / masks
 # --------------------------------------------------------------------------
@@ -81,10 +105,35 @@ def test_region_partition_covers_every_coordinate(d, q):
 def test_ensure_coverage_guarantees_tau(n, q, tau, seed):
     tau = min(tau, n)
     m = jax.random.uniform(jax.random.PRNGKey(seed), (n, q)) < 0.2
-    fixed = ensure_coverage(m, jax.random.PRNGKey(seed), tau)
+    fixed = ensure_coverage(m, tau)
     assert (np.asarray(fixed.sum(axis=0)) >= tau).all()
     # repair only adds coverage, never removes
     assert bool(jnp.all(fixed | ~m))
+
+
+def test_ensure_coverage_rejects_impossible_tau():
+    """tau_star > N is unsatisfiable: the old code silently capped the
+    repair at N (counts of 3 for tau_star=5, N=3) — it must raise."""
+    m = jnp.zeros((3, 4), bool)
+    with pytest.raises(ValueError, match="tau_star=5 exceeds num_workers=3"):
+        ensure_coverage(m, 5)
+    # boundary: tau_star == N is fine and fully covers
+    full = ensure_coverage(m, 3)
+    assert (np.asarray(full.sum(axis=0)) == 3).all()
+
+
+def test_worker_keep_probs_mean_is_base():
+    """Docstring promise: the heterogeneous draw has mean ``base`` for all
+    base in (0, 1] — the old one-sided clip at 1.0 biased base > 2/3 low."""
+    n = 40_000
+    for base in (0.2, 0.5, 0.7, 0.8, 0.9, 0.95, 1.0):
+        probs = np.asarray(worker_keep_probs(KEY, n, base, True))
+        assert (probs >= 0.0).all() and (probs <= 1.0).all(), base
+        width = min(base / 2, 1.0 - base)        # uniform on base +- width
+        tol = 3 * (2 * width) / np.sqrt(12 * n) + 1e-6
+        assert abs(probs.mean() - base) < tol, (base, probs.mean())
+    # homogeneous path: exactly base
+    assert (np.asarray(worker_keep_probs(KEY, 8, 0.9, False)) == 0.9).all()
 
 
 def test_mask_policies_shapes_and_determinism():
@@ -286,6 +335,34 @@ def test_diag_batch_runs_under_vmap():
                          curvature="diag")
     assert bat.xs.shape == (3, 7, 16)
     assert np.isfinite(np.asarray(bat.dist_sq)).all()
+
+
+def test_tau_star_zero_when_region_goes_uncovered():
+    """Regression (confirmed repro): uncovered regions used to map to N in
+    the per-round min, so tau_star reported >= 1 even while 6/8 staleness
+    rounds left region 0 with zero coverage.  tau_star must be 0 the
+    moment ANY region goes uncovered; tau_covered keeps the covered-only
+    (memory-fallback) min."""
+    prob = make_quadratic(KEY, num_workers=4, dim=32, kappa=20.0,
+                          coupling=0.0, num_regions=4)
+    pol = PolicyConfig(name="staleness", stale_period=3)
+    res = run_ranl(prob, KEY, num_rounds=8, num_regions=4, policy=pol)
+    cov = np.asarray(res.coverage)
+    assert (cov < 1.0).any(), "staleness policy must uncover region 0"
+    assert res.tau_star == 0
+    assert res.tau_covered >= 1            # covered regions stayed covered
+    # engine agreement: host-loop reference and batch engine report the same
+    ref = run_ranl_reference(prob, KEY, num_rounds=8, num_regions=4,
+                             policy=pol)
+    assert ref.tau_star == 0 and ref.tau_covered == res.tau_covered
+    bat = run_ranl_batch(prob, jnp.asarray(KEY)[None], num_rounds=8,
+                         num_regions=4, policy=pol)
+    assert int(bat.tau_star[0]) == res.tau_star
+    assert int(bat.tau_covered[0]) == res.tau_covered
+    # fully-covered runs are unchanged: tau_star == tau_covered >= 1
+    full = run_ranl(prob, KEY, num_rounds=8, num_regions=4,
+                    policy=PolicyConfig(name="full"))
+    assert full.tau_star == full.tau_covered == 4
 
 
 def test_staleness_floor_monotone():

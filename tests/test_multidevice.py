@@ -29,7 +29,8 @@ import numpy as np
 import pytest
 
 from repro.core import (PolicyConfig, make_quadratic, run_ranl,
-                        run_ranl_batch, run_ranl_sharded)
+                        run_ranl_batch, run_ranl_sharded,
+                        run_ranl_sharded2d)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -89,6 +90,47 @@ def test_sharded_mesh_validation_errors():
     with pytest.raises(ValueError, match="data"):
         run_ranl_batch(prob, jax.random.split(KEY, 2), num_rounds=2,
                        mesh=no_data)
+
+
+def test_sharded2d_single_device_mesh_matches_run_ranl():
+    """On a degenerate 1x1 ("data","model") mesh the dimension-sharded
+    engine must reproduce run_ranl (<= 1e-5; the dense solve goes through
+    the blocked factorization, so bit-exactness is not promised) with
+    exact diagnostics — including the fixed tau_star/tau_covered split
+    under an adversarial staleness policy."""
+    prob = make_quadratic(KEY, num_workers=8, dim=48, kappa=80.0,
+                          coupling=0.0, num_regions=6, grad_noise=0.1,
+                          hess_noise=0.1)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    for pol, curv in ((PolicyConfig(keep_prob=0.5, tau_star=1,
+                                    heterogeneous=False), "dense"),
+                      (PolicyConfig(name="staleness", stale_period=3),
+                       "dense"),
+                      (PolicyConfig(keep_prob=0.5, tau_star=1,
+                                    heterogeneous=False), "diag")):
+        kw = dict(num_rounds=8, num_regions=6, policy=pol, curvature=curv)
+        sh = run_ranl_sharded2d(prob, KEY, mesh=mesh, **kw)
+        ref = run_ranl(prob, KEY, use_kernel=(curv == "diag"), **kw)
+        assert np.abs(np.asarray(sh.xs) - np.asarray(ref.xs)).max() <= 1e-5
+        np.testing.assert_array_equal(np.asarray(sh.comm_floats),
+                                      np.asarray(ref.comm_floats))
+        np.testing.assert_array_equal(np.asarray(sh.coverage),
+                                      np.asarray(ref.coverage))
+        assert sh.tau_star == ref.tau_star
+        assert sh.tau_covered == ref.tau_covered
+        if pol.name == "staleness":
+            assert sh.tau_star == 0 and sh.tau_covered >= 1
+
+
+def test_sharded2d_mesh_validation_errors():
+    prob = make_quadratic(KEY, num_workers=4, dim=16, kappa=10.0,
+                          coupling=0.0, num_regions=4)
+    with pytest.raises(ValueError, match="model"):
+        run_ranl_sharded2d(prob, KEY, mesh=jax.make_mesh((1,), ("data",)),
+                           num_rounds=2)
+    with pytest.raises(ValueError, match="data"):
+        run_ranl_sharded2d(prob, KEY, mesh=jax.make_mesh((1,), ("model",)),
+                           num_rounds=2)
 
 
 # --------------------------------------------------------------------------
@@ -171,6 +213,123 @@ print(json.dumps(out))
     assert hlo["param_sized_multipliers"] == [hlo["rounds"]], hlo
     # the remaining in-loop reductions are the (Q,) counts + scalar comm
     assert all(b <= 256 for b in hlo["small_in_loop_bytes"]), hlo
+
+
+_PRELUDE4 = _PRELUDE.replace("device_count=8", "device_count=4").replace(
+    "jax.device_count() == 8", "jax.device_count() == 4")
+
+
+@pytest.mark.slow
+def test_sharded2d_parity_and_hlo_memory_claims():
+    """Dimension-sharded engine on emulated 2-D meshes:
+
+    * trajectory parity vs run_ranl (<= 1e-5) on 2x2 and 1x4
+      ("data","model") meshes, dense AND diag curvature (the 1x4 diag run
+      exercises the fused Pallas kernel on local d-slices);
+    * worker/dim divisibility guards;
+    * the compiled-HLO memory + communication claims on a 2x2 mesh:
+      exactly ONE data-axis param-SHARD all-reduce (d/n_model floats) per
+      round, model-axis solve broadcasts <= d floats each, no in-loop
+      gather-style collectives, and no single per-device buffer at or
+      above d x d x 4 bytes — the largest is the (d/n_model, d) Cholesky
+      row panel (curvature bytes == d^2/n_model, plus block slack).
+    """
+    code = _PRELUDE4 + r"""
+from repro.core import (PolicyConfig, make_quadratic, run_ranl,
+                        run_ranl_sharded2d, lower_ranl_sharded2d)
+from repro.launch.hlo_analysis import (collect_collectives, max_array_bytes)
+from repro.launch.mesh import make_engine_mesh
+
+prob = make_quadratic(KEY, num_workers=8, dim=48, kappa=80.0, coupling=0.0,
+                      num_regions=6, grad_noise=0.1, hess_noise=0.1)
+pol = PolicyConfig(keep_prob=0.5, tau_star=1, heterogeneous=False)
+out = {"parity": {}}
+for curv in ("dense", "diag"):
+    kw = dict(num_rounds=12, num_regions=6, policy=pol, curvature=curv)
+    ref = run_ranl(prob, KEY, use_kernel=False, **kw)
+    for shape in ((2, 2), (1, 4)):
+        mesh = make_engine_mesh(*shape)
+        sh = run_ranl_sharded2d(prob, KEY, mesh=mesh, **kw)
+        out["parity"]["%s_%dx%d" % ((curv,) + shape)] = {
+            "xs_err": float(np.abs(np.asarray(sh.xs)
+                                   - np.asarray(ref.xs)).max()),
+            "cov_err": float(np.abs(np.asarray(sh.coverage)
+                                    - np.asarray(ref.coverage)).max()),
+            "comm_eq": bool((np.asarray(sh.comm_floats)
+                             == np.asarray(ref.comm_floats)).all()),
+            "tau_eq": bool(sh.tau_star == ref.tau_star
+                           and sh.tau_covered == ref.tau_covered),
+        }
+
+# divisibility guards
+mesh22 = make_engine_mesh(2, 2)
+bad_w = make_quadratic(KEY, num_workers=3, dim=16, kappa=10.0, coupling=0.0)
+bad_d = make_quadratic(KEY, num_workers=4, dim=15, kappa=10.0, coupling=0.0)
+out["bad_workers_raises"] = out["bad_dim_raises"] = False
+try:
+    run_ranl_sharded2d(bad_w, KEY, mesh=mesh22, num_rounds=2)
+except ValueError:
+    out["bad_workers_raises"] = True
+try:
+    run_ranl_sharded2d(bad_d, KEY, mesh=mesh22, num_rounds=2)
+except ValueError:
+    out["bad_dim_raises"] = True
+
+# HLO memory + communication claims (compile only, d=512 on a 2x2 mesh:
+# param shard p = 256; N=2 so the per-device problem shard stays < d^2)
+D, T, NM = 512, 7, 2
+prob_h = make_quadratic(KEY, num_workers=2, dim=D, kappa=10.0,
+                        coupling=0.0, num_regions=8)
+txt = lower_ranl_sharded2d(prob_h, KEY, mesh=mesh22, num_rounds=T,
+                           num_regions=8, policy=pol).compile().as_text()
+recs = collect_collectives(txt, default_trip=1)
+P_SHARD = D // NM
+in_loop = [r for r in recs if r.multiplier > 1]
+ar = [r for r in in_loop if r.kind == 'all-reduce']
+data_ar = [r for r in ar if r.reduces_over((2, 2), 0)]
+model_ar = [r for r in ar if r.reduces_over((2, 2), 1)]
+out["hlo"] = {
+    "n_in_loop": len(in_loop),
+    "n_ar": len(ar),
+    "n_data_param_shard": len([r for r in data_ar
+                               if r.operand_bytes >= P_SHARD * 4]),
+    "data_param_shard_ok": [
+        (r.operand_bytes, r.multiplier) for r in data_ar
+        if r.operand_bytes >= P_SHARD * 4] == [(P_SHARD * 4, T)],
+    "small_data_bytes": [r.operand_bytes for r in data_ar
+                         if r.operand_bytes < P_SHARD * 4],
+    "model_ar_max_bytes": max([r.operand_bytes for r in model_ar],
+                              default=0),
+    "all_classified": len(data_ar) + len(model_ar) == len(ar),
+    "n_gatherlike_in_loop": len([r for r in in_loop
+                                 if r.kind != 'all-reduce']),
+    "max_array_bytes": max_array_bytes(txt),
+    "panel_bytes": D * D * 4 // NM,
+    "dxd_bytes": D * D * 4,
+}
+print(json.dumps(out))
+"""
+    res = _run_subprocess(code)
+    for name, r in res["parity"].items():
+        assert r["xs_err"] <= 1e-5, (name, res)
+        assert r["cov_err"] == 0.0, (name, res)
+        assert r["comm_eq"] and r["tau_eq"], (name, res)
+    assert res["bad_workers_raises"] and res["bad_dim_raises"], res
+    hlo = res["hlo"]
+    # exactly ONE data-axis param-shard all-reduce per round...
+    assert hlo["n_data_param_shard"] == 1 and hlo["data_param_shard_ok"], hlo
+    # ...the only other data-axis reduction is the (Q,) coverage counts...
+    assert all(b <= 256 for b in hlo["small_data_bytes"]), hlo
+    # ...solve broadcasts stay on the model axis at <= d floats each, and
+    # nothing in the loop gathers
+    assert hlo["all_classified"], hlo
+    assert 0 < hlo["model_ar_max_bytes"] <= 512 * 4, hlo
+    assert hlo["n_gatherlike_in_loop"] == 0, hlo
+    # no device holds a d x d curvature buffer: the largest per-device
+    # array is the Cholesky row panel at d^2/n_model (+ block slack)
+    assert hlo["panel_bytes"] <= hlo["max_array_bytes"] \
+        <= hlo["panel_bytes"] + 64 * 1024, hlo
+    assert hlo["max_array_bytes"] < hlo["dxd_bytes"], hlo
 
 
 @pytest.mark.slow
