@@ -299,3 +299,79 @@ def bench_diag_kernel_path(smoke: bool = False):
     return [{"name": "engine/diag_pallas_path", "us_per_call": us_k,
              "derived": (f"jnp_oracle_us={us_r:.0f};max_err={err:.1e};"
                          f"final={float(res_k.dist_sq[-1]):.2e}")}]
+
+
+def bench_init_projection(smoke: bool = False):
+    """Definition-4 init projection: replicated eigh vs the matmul-only
+    Newton-Schulz form, single-device and panel-sharded.
+
+    ``engine/init_dense_d{D}`` times the old replicated path (eigh on the
+    mean Hessian — what every device used to pay at init);
+    ``engine/init_sharded_d{D}`` times ``project_psd_sharded`` over the
+    widest model-axis mesh the visible devices allow, with the NS oracle
+    time and the max deviation from eigh in ``derived``.  On one device
+    the sharded row measures pure shard_map/psum overhead; on a real
+    mesh it is the d-beyond-one-device init path (per-device memory
+    d²/n_model instead of d²).
+    """
+    from repro.core import project_psd, project_psd_ns, project_psd_sharded
+    d = 96 if smoke else 384
+    prob = make_quadratic(KEY, num_workers=4, dim=d, kappa=100.0,
+                          coupling=0.0, num_regions=8, hess_noise=0.1)
+    h = prob.mean_hessian()
+    mu = float(prob.mu)
+    eigh_fn = jax.jit(lambda a: project_psd(a, mu))
+    ns_fn = jax.jit(lambda a: project_psd_ns(a, mu))
+    jax.block_until_ready(eigh_fn(h)); jax.block_until_ready(ns_fn(h))
+    ref, us_eigh = _timed(lambda: eigh_fn(h))
+    ns, us_ns = _timed(lambda: ns_fn(h))
+    err_ns = float(jnp.abs(ns - ref).max())
+    n_model = max(k for k in range(1, d + 1)
+                  if d % k == 0 and k <= jax.device_count())
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:n_model]), ("model",))
+    sh_fn = lambda: project_psd_sharded(h, mu, mesh=mesh)
+    jax.block_until_ready(sh_fn())
+    sh, us_sh = _timed(sh_fn)
+    err_sh = float(jnp.abs(sh - ref).max())
+    return [
+        {"name": f"engine/init_dense_d{d}", "us_per_call": us_eigh,
+         "derived": (f"ns_us={us_ns:.0f};ns_speedup={us_eigh / us_ns:.2f}x;"
+                     f"ns_max_err={err_ns:.1e}")},
+        {"name": f"engine/init_sharded_d{d}", "us_per_call": us_sh,
+         "derived": (f"model_shards={n_model};eigh_us={us_eigh:.0f};"
+                     f"max_err_vs_eigh={err_sh:.1e}")},
+    ]
+
+
+def bench_overlap(smoke: bool = False):
+    """Overlapped (double-buffered) round collectives vs the sequential
+    loop on the worker-sharded engine — identical trajectories (the
+    pipelining moves only x-independent work into the param-psum
+    window), so ``derived`` pins the max deviation alongside the timing.
+    On one device the pair measures restructure overhead; on a real
+    multi-device mesh the ``overlap_on`` row is the latency win of
+    hiding the all-reduce behind next-round sampling.
+    """
+    dim, rounds = (32, 10) if smoke else (64, 30)
+    N = 16
+    prob = make_quadratic(KEY, num_workers=N, dim=dim, kappa=100.0,
+                          coupling=0.0, num_regions=8)
+    pol = PolicyConfig(keep_prob=0.5, tau_star=1, heterogeneous=False)
+    kw = dict(num_rounds=rounds, num_regions=8, policy=pol)
+    ndev = max(k for k in range(1, N + 1)
+               if N % k == 0 and k <= jax.device_count())
+    mesh = jax.sharding.Mesh(np.array(jax.devices()[:ndev]), ("data",))
+    run_ranl_sharded(prob, KEY, mesh=mesh, **kw)              # compile
+    run_ranl_sharded(prob, KEY, mesh=mesh, overlap=True, **kw)
+    res_off, us_off = _timed(
+        lambda: run_ranl_sharded(prob, KEY, mesh=mesh, **kw))
+    res_on, us_on = _timed(
+        lambda: run_ranl_sharded(prob, KEY, mesh=mesh, overlap=True, **kw))
+    err = float(np.abs(np.asarray(res_on.xs) - np.asarray(res_off.xs)).max())
+    return [
+        {"name": "engine/overlap_off", "us_per_call": us_off,
+         "derived": f"devices={ndev};rounds={rounds}"},
+        {"name": "engine/overlap_on", "us_per_call": us_on,
+         "derived": (f"devices={ndev};seq_us={us_off:.0f};"
+                     f"speedup={us_off / us_on:.2f}x;max_err={err:.1e}")},
+    ]

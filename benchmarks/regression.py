@@ -1,0 +1,96 @@
+"""Engine perf-trajectory regression gate.
+
+Compares a freshly measured ``--engine-json`` row set against the
+committed baseline (``BENCH_engine.json`` at the repo root) and fails
+when any shared row got slower than ``--tolerance`` times its baseline
+``us_per_call`` plus ``--slack-us`` of absolute headroom — a
+deliberately generous bound (default 2x + 2ms) so shared CI runners'
+timing noise doesn't flake, while a genuinely quadratic regression
+(e.g. the O(d³) eigh sneaking back into the init path) still trips it.  Rows present only in the baseline are hard failures too: a
+tracked benchmark silently disappearing is itself a regression.  Rows
+only in the fresh set are reported as new and pass.
+
+Usage (the CI bench-smoke job):
+
+  python -m benchmarks.run --smoke --engine-json fresh-engine.json
+  python -m benchmarks.regression --baseline BENCH_engine.json \
+      --fresh fresh-engine.json [--tolerance 2.0]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    with open(path) as f:
+        rows = json.load(f)
+    return {r["name"]: r for r in rows}
+
+
+def compare(baseline: dict[str, dict], fresh: dict[str, dict],
+            tolerance: float, slack_us: float = 2000.0):
+    """-> (failures, report_lines). A failure is (name, reason).
+
+    A row fails only when ``new > tolerance * base + slack_us``: the
+    multiplicative bound catches real complexity regressions on the
+    millisecond-scale engine rows, while the absolute slack keeps
+    microsecond-scale rows (single-call timings dominated by dispatch
+    overhead, e.g. the ~100us init-projection rows) from flaking on a
+    scheduler hiccup or a slower CI runner."""
+    failures = []
+    lines = []
+    for name in sorted(baseline):
+        base_us = float(baseline[name]["us_per_call"])
+        if name not in fresh:
+            failures.append((name, "missing from fresh run"))
+            lines.append(f"MISSING  {name} (baseline {base_us:.0f}us)")
+            continue
+        new_us = float(fresh[name]["us_per_call"])
+        limit_us = tolerance * base_us + slack_us
+        status = "OK" if new_us <= limit_us else "REGRESSED"
+        lines.append(f"{status:9s}{name}: {new_us:.0f}us vs baseline "
+                     f"{base_us:.0f}us (limit {limit_us:.0f}us = "
+                     f"{tolerance:.1f}x + {slack_us:.0f}us)")
+        if new_us > limit_us:
+            failures.append(
+                (name, f"{new_us:.0f}us > {tolerance:.1f}x baseline "
+                       f"+ {slack_us:.0f}us = {limit_us:.0f}us"))
+    for name in sorted(set(fresh) - set(baseline)):
+        lines.append(f"NEW      {name}: {float(fresh[name]['us_per_call']):.0f}us "
+                     f"(no baseline yet — commit a refreshed "
+                     f"BENCH_engine.json to start tracking it)")
+    return failures, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default="BENCH_engine.json")
+    ap.add_argument("--fresh", required=True)
+    ap.add_argument("--tolerance", type=float, default=2.0,
+                    help="fail when fresh exceeds this multiple of the "
+                         "baseline (plus --slack-us)")
+    ap.add_argument("--slack-us", type=float, default=2000.0,
+                    help="absolute microseconds of headroom on top of "
+                         "the ratio — keeps dispatch-overhead-sized "
+                         "rows from flaking")
+    args = ap.parse_args(argv)
+    failures, lines = compare(load_rows(args.baseline),
+                              load_rows(args.fresh), args.tolerance,
+                              args.slack_us)
+    print("\n".join(lines))
+    if failures:
+        print(f"\n{len(failures)} engine bench regression(s):",
+              file=sys.stderr)
+        for name, why in failures:
+            print(f"  {name}: {why}", file=sys.stderr)
+        return 1
+    print(f"\nall {len(lines)} tracked rows within {args.tolerance:.1f}x "
+          "of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -47,7 +47,9 @@ def main() -> None:
                    claims.bench_batch_seeds,
                    claims.bench_sharded_engine,
                    claims.bench_sharded2d_engine,
-                   claims.bench_diag_kernel_path):
+                   claims.bench_diag_kernel_path,
+                   claims.bench_init_projection,
+                   claims.bench_overlap):
             rows.extend(fn(smoke=args.smoke))
     if args.only in (None, "kernels"):
         from . import kernels_bench as kb

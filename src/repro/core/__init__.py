@@ -16,6 +16,8 @@ from .hessian import (  # noqa: F401
     hutchinson_diag,
     project_diag,
     project_psd,
+    project_psd_ns,
+    project_psd_sharded,
     solve_projected,
 )
 from .masks import PolicyConfig, ensure_coverage, sample_masks  # noqa: F401

@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .hessian import project_psd, solve_projected
+from .hessian import project_psd, running_mean_hessian, solve_projected
 
 
 def _trajectory(problem, xs):
@@ -54,8 +54,7 @@ def run_newton_exact(problem, key, *, num_rounds: int = 30,
     for t in range(num_rounds):
         kt = jax.random.fold_in(key, t)
         hkeys = jax.random.split(jax.random.fold_in(kt, 0), N)
-        H = jnp.stack([problem.worker_hessian(i, x, hkeys[i])
-                       for i in range(N)]).mean(axis=0)
+        H = running_mean_hessian(problem, x, hkeys)
         gk = jax.random.split(jax.random.fold_in(kt, 1), N)
         g = grad_all(ids, x, gk).mean(axis=0)
         x = x - solve_projected(project_psd(H, mu), g)
@@ -72,9 +71,7 @@ def run_newton_zero(problem, key, *, num_rounds: int = 30,
     ids = jnp.arange(N)
     k_init, k_loop = jax.random.split(key)
     hkeys = jax.random.split(jax.random.fold_in(k_init, 0), N)
-    H = jnp.stack([problem.worker_hessian(i, x, hkeys[i])
-                   for i in range(N)]).mean(axis=0)
-    H_mu = project_psd(H, mu)
+    H_mu = project_psd(running_mean_hessian(problem, x, hkeys), mu)
     gkeys = jax.random.split(jax.random.fold_in(k_init, 1), N)
     grad_all = jax.vmap(problem.worker_grad, in_axes=(0, None, 0))
     g0 = grad_all(ids, x, gkeys).mean(axis=0)

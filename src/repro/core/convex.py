@@ -18,6 +18,49 @@ import jax.numpy as jnp
 import numpy as np
 
 
+def _noise_row(key, r, d: int):
+    """Row r of the symmetric-noise base matrix z (one fold per row)."""
+    return jax.random.normal(jax.random.fold_in(key, r), (d,)) / d
+
+
+def _sym_noise(key, d: int):
+    """Symmetric Hessian noise (z + zᵀ)/2 with z rows drawn per-row-key.
+
+    E‖(z+zᵀ)/2‖_F² = 1 (matching the old single-draw construction), but
+    every row of z is its own PRNG stream — which is what lets
+    ``_sym_noise_rows`` reproduce an arbitrary row panel bit-identically
+    without ever materializing the d×d matrix.
+    """
+    z = jax.vmap(lambda r: _noise_row(key, r, d))(jnp.arange(d))
+    return 0.5 * (z + z.T)
+
+
+def _sym_noise_rows(key, d: int, row_start, num_rows: int):
+    """Rows [row_start, row_start+num_rows) of ``_sym_noise(key, d)``.
+
+    Peak memory O(num_rows·d): the panel needs z's rows (generated
+    directly) and z's COLUMNS at the panel (entry [c, r] lives in row c's
+    stream), which are produced ``num_rows`` source-rows at a time —
+    each chunk generates a (num_rows, d) slab and keeps its (num_rows,
+    num_rows) slice, so no intermediate exceeds the output panel.
+    ``row_start`` may be traced; ``num_rows`` must be static.
+    """
+    rows = jax.vmap(lambda r: _noise_row(key, r, d))(
+        row_start + jnp.arange(num_rows))                 # z[panel, :]
+
+    def col_slice(c):
+        return jax.lax.dynamic_slice(_noise_row(key, c, d),
+                                     (row_start,), (num_rows,))
+
+    if d % num_rows == 0:
+        chunks = jnp.arange(d).reshape(d // num_rows, num_rows)
+        cols = jax.lax.map(lambda cc: jax.vmap(col_slice)(cc),
+                           chunks).reshape(d, num_rows)   # z[:, panel]
+    else:
+        cols = jax.lax.map(col_slice, jnp.arange(d))
+    return 0.5 * (rows + cols.T)
+
+
 @dataclass(frozen=True)
 class Quadratic:
     """f_i(x) = ½ (x − b_i)ᵀ A_i (x − b_i);  f = mean_i f_i."""
@@ -49,11 +92,28 @@ class Quadratic:
         return g + noise
 
     def worker_hessian(self, i, x, key):
-        """Stochastic ∇²F_i(x⁰, ξ): exact + symmetric noise (Frobenius σ)."""
-        d = self.dim
-        n = jax.random.normal(key, (d, d)) / d        # E‖n‖_F² = 1
-        n = 0.5 * (n + n.T)
-        return self.A[i] + self.hess_noise * n
+        """Stochastic ∇²F_i(x⁰, ξ): exact + symmetric noise (Frobenius σ).
+
+        The noise rows are per-row-key streams (``_sym_noise``) so that
+        ``worker_hessian_rows`` can reproduce any row panel bit-identically
+        on a dimension shard.
+        """
+        return self.A[i] + self.hess_noise * _sym_noise(key, self.dim)
+
+    def worker_hessian_rows(self, i, x, key, row_start, num_rows: int):
+        """Rows [row_start, row_start+num_rows) of ``worker_hessian``.
+
+        Like ``worker_grad_rows``, computable from a row panel of A — the
+        dimension-sharded engine hands each device ``self`` with ``A``
+        already sliced to its ``(N_local, num_rows, d)`` panel, and the
+        symmetric noise panel is generated at O(num_rows·d) peak from the
+        same per-row streams as the full oracle.  The init phase
+        accumulates these panels into the mean Hessian without any device
+        ever holding a d×d buffer.  ``num_rows`` must be static.
+        """
+        d = self.A.shape[-1]                          # GLOBAL dim (last axis)
+        return self.A[i] + self.hess_noise * _sym_noise_rows(
+            key, d, row_start, num_rows)
 
     def worker_grad_rows(self, i, x, key, row_start, num_rows: int):
         """Rows [row_start, row_start+num_rows) of ``worker_grad(i, x, key)``.
@@ -178,9 +238,26 @@ class Logistic:
         z = (Xi @ x) * yi
         s = jax.nn.sigmoid(z) * jax.nn.sigmoid(-z)     # σ'(z)
         H = (Xi.T * s) @ Xi / yi.shape[0] + self.lam * jnp.eye(self.dim)
+        return H + self.hess_noise * _sym_noise(key, self.dim)
+
+    def worker_hessian_rows(self, i, x, key, row_start, num_rows: int):
+        """Rows [row_start, row_start+num_rows) of ``worker_hessian``.
+
+        The Gauss–Newton rows come from a column slice of the worker's
+        design matrix — (Xᵢ[:, rows]ᵀ·σ′) @ Xᵢ is O(n·d) flops and
+        O(num_rows·d) memory, never d×d — and the symmetric noise panel
+        from the shared per-row streams.  ``num_rows`` must be static.
+        """
+        Xi, yi = self.X[i], self.y[i]
+        z = (Xi @ x) * yi
+        s = jax.nn.sigmoid(z) * jax.nn.sigmoid(-z)
+        Xr = jax.lax.dynamic_slice_in_dim(Xi, row_start, num_rows, axis=1)
+        rows = (Xr.T * s) @ Xi / yi.shape[0]
         d = self.dim
-        n = jax.random.normal(key, (d, d)) / d
-        return H + self.hess_noise * 0.5 * (n + n.T)
+        eye_rows = (jnp.arange(d)[None, :]
+                    == (row_start + jnp.arange(num_rows))[:, None])
+        return rows + self.lam * eye_rows + self.hess_noise * \
+            _sym_noise_rows(key, d, row_start, num_rows)
 
     def worker_grad_rows(self, i, x, key, row_start, num_rows: int):
         """Rows [row_start, row_start+num_rows) of ``worker_grad``.

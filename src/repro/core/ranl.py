@@ -38,17 +38,34 @@ Engine layout:
   G, hdiag and the region masks, the param all-reduce shrunk to a
   d/n_model-float psum over only the data axis, and (dense path) the
   replicated Cholesky replaced by a blocked right-looking factorization +
-  blocked triangular solves over row panels, so the per-ROUND curvature
-  state is never a d×d buffer on any device (the one-time dense init
-  still materializes [H]_μ once — the Definition-4 eigen-projection is
-  inherently global; at true d >> memory scale use ``curvature="diag"``,
-  whose init is O(d)).  ``lower_ranl_sharded2d`` exposes the partitioned
-  HLO for the memory/communication assertions.
+  blocked triangular solves over row panels.  The dense INIT is sharded
+  too: the mean worker Hessian is accumulated as model-axis row panels
+  (``worker_hessian_rows`` oracles, scan over local workers), the
+  Definition-4 projection runs as the matmul-only Newton–Schulz iteration
+  over those panels (``hessian.project_psd_ns_panels`` — no eigh, no
+  replicated buffer), and the blocked factorization + first Newton step
+  complete the phase, so with ``curvature="dense"`` NO device ever
+  materializes a d×d buffer at ANY phase — init included, proven on the
+  compiled HLO via ``hlo_analysis.max_array_bytes``.
+  ``lower_ranl_sharded2d`` exposes the partitioned HLO (the whole
+  program for dense) for the memory/communication assertions;
+* both sharded engines take ``overlap=True``: a double-buffered
+  (software-pipelined) round loop in which each round's param-shard
+  ``psum`` is issued and, while it is in flight, the NEXT round's
+  x-independent work — mask/key sampling and its coverage-count psum —
+  plus this round's memory update and diagnostics are computed, the psum
+  result being consumed only by the final Newton step.  Identical math
+  (same values, same reductions), so parity with the sequential loop is
+  exact; the restructure is what lets the XLA latency-hiding scheduler
+  turn the all-reduce into an async start/done pair that hides behind
+  compute on real links.
 
 For single runs the init phase executes eagerly (op-by-op, exactly the
 reference sequence) so the trajectory reproduces ``run_ranl_reference`` —
 the original host-loop driver kept below as the semantic oracle — on a
-fixed key; parity tests pin this.
+fixed key; parity tests pin this.  ``projection="ns"`` swaps the init
+eigh for the same Newton–Schulz projection the 2-D engine shards — the
+single-device oracle the 2-D dense parity tests compare against.
 """
 
 from __future__ import annotations
@@ -63,6 +80,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .aggregation import server_aggregate
 from .hessian import hutchinson_diag, project_diag, project_psd, \
+    project_psd_ns, project_psd_ns_panels, running_mean_hessian, \
     solve_projected
 from .masks import PolicyConfig, sample_masks
 from .regions import contiguous_regions, expand_mask, region_sizes
@@ -88,16 +106,18 @@ class RanlResult:
 
 
 def _init_phase(problem, k_init, *, mu: float, lr: float, curvature: str,
-                hutch_samples: int, with_h_mu: bool = False):
-    """Alg. 1 lines 1–8, worker evaluations vmapped.
+                hutch_samples: int, projection: str = "eigh",
+                ns_iters: int = 60):
+    """Alg. 1 lines 1–8, worker evaluations vmapped/scanned.
 
     Returns (x1, C0, cho_c, cho_lower, hdiag): the post-init iterate, the
     seeded gradient memory, and the curvature state — a Cholesky factor of
     [H]_μ for the dense path, a projected diagonal estimate for the diag
-    path (the unused one is None).  With ``with_h_mu`` the projected
-    Hessian itself rides along as a sixth element (None on the diag path)
-    so the dimension-sharded engine can hand its row panels to the blocked
-    factorization; it is dead (traced away) otherwise.
+    path (the unused one is None).  ``projection`` picks the Definition-4
+    implementation on the dense path: ``"eigh"`` (the paper-literal
+    eigenvalue clamp, and the reference-parity default) or ``"ns"`` (the
+    matmul-only Newton–Schulz form — the single-device oracle of the
+    dimension-sharded init).
     """
     N, d = problem.num_workers, problem.dim
     worker_ids = jnp.arange(N)
@@ -108,11 +128,16 @@ def _init_phase(problem, k_init, *, mu: float, lr: float, curvature: str,
     gkeys = jax.random.split(jax.random.fold_in(k_init, 1), N)
     g0 = grad_at(worker_ids, x0, gkeys)          # (N, d)
 
-    h_mu = None
     if curvature == "dense":
-        H = jax.vmap(problem.worker_hessian,
-                     in_axes=(0, None, 0))(worker_ids, x0, hkeys).mean(axis=0)
-        h_mu = project_psd(H, mu)
+        # O(d²)-peak shared fold (see running_mean_hessian: the eager
+        # left-to-right order is what keeps reference parity bit-tight;
+        # the sharded2d dense init, whose oracle tolerance is 1e-5, uses
+        # lax.scan for its panel accumulation instead).
+        H = running_mean_hessian(problem, x0, hkeys)
+        if projection == "ns":
+            h_mu = project_psd_ns(H, mu, num_iters=ns_iters)
+        else:
+            h_mu = project_psd(H, mu)
         cho_c, cho_lower = jax.scipy.linalg.cho_factor(h_mu)
         hdiag = None
         step0 = jax.scipy.linalg.cho_solve((cho_c, cho_lower),
@@ -133,8 +158,6 @@ def _init_phase(problem, k_init, *, mu: float, lr: float, curvature: str,
         raise ValueError(f"unknown curvature {curvature!r}")
 
     x1 = x0 - lr * step0
-    if with_h_mu:
-        return x1, g0, cho_c, cho_lower, hdiag, h_mu
     return x1, g0, cho_c, cho_lower, hdiag
 
 
@@ -225,17 +248,19 @@ _rounds_jit = functools.partial(
     jax.jit, static_argnames=_ROUND_STATIC)(_scan_rounds)
 
 _BATCH_STATIC = ("num_rounds", "num_regions", "policy", "mu", "lr",
-                 "curvature", "use_kernel", "interpret", "hutch_samples")
+                 "curvature", "use_kernel", "interpret", "hutch_samples",
+                 "projection", "ns_iters")
 
 
 def _ranl_batch_engine(problem, keys, *, num_rounds, num_regions, policy,
                        mu, lr, curvature, use_kernel, interpret,
-                       hutch_samples):
+                       hutch_samples, projection, ns_iters):
     def one(key):
         k_init, k_loop = jax.random.split(key)
         x1, C0, cho_c, cho_lower, hdiag = _init_phase(
             problem, k_init, mu=mu, lr=lr, curvature=curvature,
-            hutch_samples=hutch_samples)
+            hutch_samples=hutch_samples, projection=projection,
+            ns_iters=ns_iters)
         return _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag,
                             num_rounds=num_rounds, num_regions=num_regions,
                             policy=policy, mu=mu, lr=lr, curvature=curvature,
@@ -272,7 +297,8 @@ def _worker_sharded_specs(problem, axis_name: str):
 def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, *,
                          axis_name: str, num_rounds: int, num_regions: int,
                          policy: PolicyConfig, mu: float, lr: float,
-                         curvature: str, cho_lower: bool, num_workers: int):
+                         curvature: str, cho_lower: bool, num_workers: int,
+                         overlap: bool):
     """Per-device round loop (runs under ``shard_map``).
 
     ``problem``/``C0`` arrive worker-sharded (N/n_dev local workers);
@@ -280,6 +306,15 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, *,
     region-sized ``psum`` (coverage counts) and ONE param-sized ``psum``
     (the single-reduction aggregate) — the memory C never leaves the
     device that owns its workers.
+
+    ``overlap=True`` software-pipelines the loop: round t's mask/key
+    sampling and coverage-count psum move into iteration t−1's carry, so
+    inside each iteration the param-sized psum is issued right after the
+    local gradient compute and its result is consumed only by the final
+    solve — everything in between (next round's sampling + count psum,
+    the memory update, diagnostics) is independent work the scheduler can
+    run while the all-reduce is in flight.  Same values, same reductions:
+    the trajectory is identical to the sequential loop.
     """
     N = num_workers                       # global worker count
     d = x1.shape[0]
@@ -290,47 +325,81 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, *,
     local_ids = jnp.arange(n_local)
     grad_pruned = jax.vmap(problem.worker_grad, in_axes=(0, 0, 0))
 
-    def body(carry, t):
-        x, C = carry
+    def sample_round(t):
+        """Everything x-independent about round t: sample the FULL (N, Q)
+        mask and key batch on every device (tiny, and it keeps the PRNG
+        stream bit-identical to the single-device engine), slice out this
+        shard's workers, and reduce the coverage counts (Q ints)."""
         kt = jax.random.fold_in(k_loop, t)
-        # Sample the FULL (N, Q) mask and key batch on every device (tiny,
-        # and it keeps the PRNG stream bit-identical to the single-device
-        # engine), then slice out this shard's workers.
         M_full = sample_masks(policy, kt, t, N, Q)
         gk_full = jax.random.split(jax.random.fold_in(kt, 7), N)
         start = shard * n_local
         M = jax.lax.dynamic_slice_in_dim(M_full, start, n_local)
         gk = jax.lax.dynamic_slice_in_dim(gk_full, start, n_local)
+        count_q = jax.lax.psum(M.sum(axis=0), axis_name)
+        return M, gk, count_q
+
+    def round_update(x, C, M, gk, count_q):
+        """The x-dependent half, up to issuing the round's ONE param-sized
+        all-reduce: pruned local gradients, then the single-reduction
+        aggregation (masked_aggregate's form) — covered fresh-mean and
+        uncovered memory-mean folded into one per-worker contribution, so
+        the worker-axis sum is the round's only param-sized psum.  G is
+        exactly zero outside each worker's mask, so no re-masking is
+        needed."""
         Mx = expand_mask(M, region_ids)                  # (n_local, d)
         x_pruned = jnp.where(Mx, x[None, :], 0.0)
         G = grad_pruned(local_ids, x_pruned, gk) * Mx
-        # coverage counts: region-sized reduction (Q ints — negligible)
-        count_q = jax.lax.psum(M.sum(axis=0), axis_name)
-        covered_q = count_q > 0
         count_x = jnp.take(count_q, region_ids)
-        covered_x = jnp.take(covered_q, region_ids)
-        # single-reduction aggregation (masked_aggregate's form): fold the
-        # covered fresh-mean and the uncovered memory-mean fallback into
-        # one per-worker contribution, so the worker-axis sum below is the
-        # round's ONE param-sized all-reduce.  G is exactly zero outside
-        # each worker's mask, so no re-masking is needed.
+        covered_x = jnp.take(count_q > 0, region_ids)
         denom = jnp.maximum(count_x, 1).astype(G.dtype)
         contrib = jnp.where(covered_x[None, :], G / denom, C / N)
         g = jax.lax.psum(contrib.sum(axis=0), axis_name)
         C = jnp.where(Mx, G, C)                          # device-local
+        return g, C, Mx
+
+    def finish_step(x, g):
         if curvature == "dense":
             step = jax.scipy.linalg.cho_solve((cho_c, cho_lower), g)
         else:
             step = g / project_diag(hdiag, mu)
-        x = x - lr * step
+        return x - lr * step
+
+    def diagnostics(Mx, count_q):
         comm = jax.lax.psum(Mx.sum(), axis_name)
         cov_mean, min_count, min_cov_count = _round_diagnostics(
-            covered_q, count_q, N)
-        return (x, C), (x, cov_mean, comm, min_count, min_cov_count)
+            count_q > 0, count_q, N)
+        return comm, cov_mean, min_count, min_cov_count
+
+    if overlap:
+        def body(carry, t):
+            x, C, M, gk, count_q = carry
+            g, C, Mx = round_update(x, C, M, gk, count_q)   # psum issued
+            # overlap window: round t+1's sampling + count psum and round
+            # t's memory/diagnostics — none of it touches g
+            nxt = sample_round(t + 1)
+            comm, cov_mean, min_count, min_cov_count = diagnostics(
+                Mx, count_q)
+            x = finish_step(x, g)             # first consumer of the psum
+            return (x, C) + nxt, (x, cov_mean, comm, min_count,
+                                  min_cov_count)
+
+        init_carry = (x1, C0) + sample_round(1)
+    else:
+        def body(carry, t):
+            x, C = carry
+            M, gk, count_q = sample_round(t)
+            g, C, Mx = round_update(x, C, M, gk, count_q)
+            x = finish_step(x, g)
+            comm, cov_mean, min_count, min_cov_count = diagnostics(
+                Mx, count_q)
+            return (x, C), (x, cov_mean, comm, min_count, min_cov_count)
+
+        init_carry = (x1, C0)
 
     ts = jnp.arange(1, num_rounds + 1)
     _, (xs_t, cov, comm, min_counts, min_cov_counts) = jax.lax.scan(
-        body, (x1, C0), ts)
+        body, init_carry, ts)
     xs = jnp.concatenate([jnp.stack([jnp.zeros(d), x1]), xs_t], axis=0)
     tau, tau_cov = _tau_pair(min_counts, min_cov_counts, N)
     return xs, cov, comm, tau, tau_cov
@@ -338,16 +407,17 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, *,
 
 _SHARDED_STATIC = ("mesh", "axis_name", "num_rounds", "num_regions",
                    "policy", "mu", "lr", "curvature", "cho_lower",
-                   "num_workers")
+                   "num_workers", "overlap")
 
 
 def _sharded_engine(problem, k_loop, x1, C0, cho_c, hdiag, *, mesh,
                     axis_name, num_rounds, num_regions, policy, mu, lr,
-                    curvature, cho_lower, num_workers):
+                    curvature, cho_lower, num_workers, overlap):
     body = functools.partial(
         _sharded_rounds_body, axis_name=axis_name, num_rounds=num_rounds,
         num_regions=num_regions, policy=policy, mu=mu, lr=lr,
-        curvature=curvature, cho_lower=cho_lower, num_workers=num_workers)
+        curvature=curvature, cho_lower=cho_lower, num_workers=num_workers,
+        overlap=overlap)
     in_specs = (_worker_sharded_specs(problem, axis_name),
                 _replicated_specs(k_loop), _replicated_specs(x1),
                 P(axis_name, None), _replicated_specs(cho_c),
@@ -377,20 +447,24 @@ def _check_mesh(problem, mesh, axis_name: str):
 
 
 def _sharded_args(problem, key, *, mesh, axis_name, num_rounds, num_regions,
-                  policy, mu, lr, curvature, hutchinson_samples):
+                  policy, mu, lr, curvature, hutchinson_samples, projection,
+                  ns_iters, overlap):
     _check_mesh(problem, mesh, axis_name)
     cfg = _config(problem, mu=mu, lr=lr, curvature=curvature,
-                  hutchinson_samples=hutchinson_samples)
+                  hutchinson_samples=hutchinson_samples,
+                  projection=projection)
     hutch = cfg.pop("hutch_samples")
     k_init, k_loop = jax.random.split(key)
     x1, C0, cho_c, cho_lower, hdiag = _init_phase(
         problem, k_init, mu=cfg["mu"], lr=cfg["lr"],
-        curvature=cfg["curvature"], hutch_samples=hutch)
+        curvature=cfg["curvature"], hutch_samples=hutch,
+        projection=projection, ns_iters=ns_iters)
     args = (problem, k_loop, x1, C0, cho_c, hdiag)
     static = dict(mesh=mesh, axis_name=axis_name,
                   num_rounds=int(num_rounds), num_regions=int(num_regions),
                   policy=policy, cho_lower=cho_lower,
-                  num_workers=problem.num_workers, **cfg)
+                  num_workers=problem.num_workers, overlap=bool(overlap),
+                  **cfg)
     return args, static
 
 
@@ -399,14 +473,19 @@ def run_ranl_sharded(problem, key, *, mesh, num_rounds: int = 30,
                      policy: PolicyConfig = PolicyConfig(),
                      mu: float | None = None, curvature: str = "dense",
                      lr: float = 1.0, hutchinson_samples: int = 8,
-                     axis_name: str = "data"):
+                     axis_name: str = "data", projection: str = "eigh",
+                     ns_iters: int = 60, overlap: bool = False):
     """Algorithm 1 with the worker axis sharded across ``mesh`` devices.
 
-    The init phase runs replicated (identical to ``run_ranl``); the round
-    loop runs under ``shard_map`` with ``problem``'s worker-indexed leaves
-    and the gradient memory C partitioned over ``axis_name`` and server
-    aggregation expressed as ``psum`` collectives.  Trajectories match
-    ``run_ranl`` to reduction-reorder tolerance (parity-pinned at 1e-6 in
+    The init phase runs replicated (identical to ``run_ranl``, including
+    its ``projection`` knob); the round loop runs under ``shard_map`` with
+    ``problem``'s worker-indexed leaves and the gradient memory C
+    partitioned over ``axis_name`` and server aggregation expressed as
+    ``psum`` collectives.  ``overlap=True`` selects the double-buffered
+    round loop (next round's mask sampling and coverage-count psum
+    pipelined into the param-psum window — identical math, see
+    ``_sharded_rounds_body``).  Trajectories match ``run_ranl`` to
+    reduction-reorder tolerance (parity-pinned at 1e-6 in
     tests/test_multidevice.py).  The aggregation is always the pure-jnp
     collective form — ``use_kernel`` has no sharded counterpart.
 
@@ -417,11 +496,13 @@ def run_ranl_sharded(problem, key, *, mesh, num_rounds: int = 30,
         return run_ranl(problem, key, num_rounds=num_rounds,
                         num_regions=num_regions, policy=policy, mu=mu,
                         curvature=curvature, lr=lr,
-                        hutchinson_samples=hutchinson_samples)
+                        hutchinson_samples=hutchinson_samples,
+                        projection=projection, ns_iters=ns_iters)
     args, static = _sharded_args(
         problem, key, mesh=mesh, axis_name=axis_name, num_rounds=num_rounds,
         num_regions=num_regions, policy=policy, mu=mu, lr=lr,
-        curvature=curvature, hutchinson_samples=hutchinson_samples)
+        curvature=curvature, hutchinson_samples=hutchinson_samples,
+        projection=projection, ns_iters=ns_iters, overlap=overlap)
     xs, cov, comm, tau, tau_cov = _sharded_jit(*args, **static)
     dist = jnp.sum((xs - problem.x_star[None, :]) ** 2, axis=1)
     losses = jax.vmap(problem.loss)(xs)
@@ -435,18 +516,22 @@ def lower_ranl_sharded(problem, key, *, mesh, num_rounds: int = 30,
                        policy: PolicyConfig = PolicyConfig(),
                        mu: float | None = None, curvature: str = "dense",
                        lr: float = 1.0, hutchinson_samples: int = 8,
-                       axis_name: str = "data"):
+                       axis_name: str = "data", projection: str = "eigh",
+                       ns_iters: int = 60, overlap: bool = False):
     """Lower (without running) the sharded round loop.
 
     Returns the ``jax.stages.Lowered`` for the same computation
     ``run_ranl_sharded`` executes; ``.compile().as_text()`` is the
     partitioned HLO that ``launch.hlo_analysis`` can inventory — the
-    one-param-sized-all-reduce-per-round invariant is asserted on it.
+    one-param-sized-all-reduce-per-round invariant is asserted on it
+    (``overlap=True`` included: pipelining moves collectives across
+    iteration boundaries but never adds one).
     """
     args, static = _sharded_args(
         problem, key, mesh=mesh, axis_name=axis_name, num_rounds=num_rounds,
         num_regions=num_regions, policy=policy, mu=mu, lr=lr,
-        curvature=curvature, hutchinson_samples=hutchinson_samples)
+        curvature=curvature, hutchinson_samples=hutchinson_samples,
+        projection=projection, ns_iters=ns_iters, overlap=overlap)
     return _sharded_jit.lower(*args, **static)
 
 
@@ -490,19 +575,6 @@ def _factor_sharded2d_body(h_panel, *, model_axis: str, n_model: int):
             e = (j + 1) * p
             W = W.at[:, e:].add(-(col @ col_all[e:, :].T))
     return W
-
-
-def _factor_sharded2d(h_mu, *, mesh, model_axis: str, n_model: int):
-    body = functools.partial(_factor_sharded2d_body, model_axis=model_axis,
-                             n_model=n_model)
-    fn = shard_map(body, mesh=mesh, in_specs=(P(model_axis, None),),
-                   out_specs=P(model_axis, None), check_rep=False)
-    return fn(h_mu)
-
-
-_factor2d_jit = functools.partial(
-    jax.jit, static_argnames=("mesh", "model_axis", "n_model"))(
-    _factor_sharded2d)
 
 
 def _blocked_solve_panels(l_panel, g_local, *, model_axis: str,
@@ -550,8 +622,9 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, *,
                            num_regions: int, policy: PolicyConfig, mu: float,
                            lr: float, curvature: str, use_kernel: bool,
                            interpret: bool | None, num_workers: int,
-                           n_data: int, n_model: int):
-    """Per-device round loop on the 2-D mesh (runs under ``shard_map``).
+                           n_data: int, n_model: int, overlap: bool):
+    """Per-device round loop on the 2-D mesh (runs under ``shard_map`` for
+    the diag path, called inline by ``_sharded2d_dense_body`` for dense).
 
     ``problem``/``C0`` arrive worker-sharded over ``data_axis`` and (for
     O(d²) problem state and C) dimension-sharded over ``model_axis``;
@@ -562,6 +635,11 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, *,
     aggregate of d/n_model floats); the dense solve adds model-axis-only
     block broadcasts.  C never leaves the device that owns its
     (worker, dimension) tile.
+
+    ``overlap=True`` software-pipelines the loop exactly like the 1-D
+    engine: round t+1's mask/key sampling and coverage-count psum run in
+    the window between issuing round t's param-shard psum and consuming
+    it in the solve — identical values, identical reductions.
     """
     from ..kernels.region_aggregate import local_region_ids
     N, Q = num_workers, num_regions
@@ -583,25 +661,36 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, *,
     # meshes); otherwise the collective jnp form is used.
     kernel_ok = use_kernel and curvature == "diag" and n_data == 1
 
-    def body(carry, t):
-        x, C = carry                  # x: (d,) replicated; C: (n_local, p)
+    def sample_round(t):
+        """Everything x-independent about round t: sample the FULL (N, Q)
+        mask and key batch on every device (tiny, keeps the PRNG stream
+        bit-identical to the single-device engine), slice out this
+        shard's workers, and reduce the coverage counts (Q ints)."""
         kt = jax.random.fold_in(k_loop, t)
-        # Sample the FULL (N, Q) mask and key batch on every device (tiny,
-        # keeps the PRNG stream bit-identical to the single-device engine),
-        # then slice out this shard's workers.
         M_full = sample_masks(policy, kt, t, N, Q)
         gk_full = jax.random.split(jax.random.fold_in(kt, 7), N)
         M = jax.lax.dynamic_slice_in_dim(M_full, wstart, n_local)
         gk = jax.lax.dynamic_slice_in_dim(gk_full, wstart, n_local)
+        count_q = jax.lax.psum(M.sum(axis=0), data_axis)
+        return M, gk, count_q
+
+    def scatter_rows(vec_loc):
+        """Assemble a replicated (d,) vector from local rows — one
+        model-axis psum of d floats."""
+        return jax.lax.psum(
+            jax.lax.dynamic_update_slice(jnp.zeros(d, vec_loc.dtype),
+                                         vec_loc, (row_start,)), model_axis)
+
+    def round_update(x, C, M, gk, count_q):
+        """The x-dependent half, up to issuing the round's main
+        collective.  Returns (x_new, C, g_loc): for the kernel path the
+        new iterate directly (its model-axis assembly psum issued),
+        otherwise ``g_loc`` — the result of the round's ONE data-axis
+        param-shard all-reduce — for ``finish_step`` to consume."""
         Mx_full = expand_mask(M, region_ids)        # (n_local, d)
         Mx = expand_mask(M, region_ids_loc)         # (n_local, p) local cols
         x_pruned = jnp.where(Mx_full, x[None, :], 0.0)
         G = grad_rows(local_ids, x_pruned, gk) * Mx  # local gradient rows
-        # coverage counts: region-sized reduction (Q ints — negligible)
-        count_q = jax.lax.psum(M.sum(axis=0), data_axis)
-        covered_q = count_q > 0
-        count_x = jnp.take(count_q, region_ids_loc)
-        covered_x = jnp.take(covered_q, region_ids_loc)
         if kernel_ok:
             from ..kernels.region_aggregate import ranl_update
             # all workers are local: the fused aggregate + projected-Newton
@@ -609,36 +698,64 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, *,
             x_loc = jax.lax.dynamic_slice(x, (row_start,), (p,))
             x_loc, C = ranl_update(x_loc, hdiag, G, Mx, C, mu=mu, lr=lr,
                                    interpret=interpret)
-            x = jax.lax.psum(
-                jax.lax.dynamic_update_slice(jnp.zeros_like(x), x_loc,
-                                             (row_start,)), model_axis)
+            return scatter_rows(x_loc), C, None
+        # single-reduction aggregation on the local d-slice: the
+        # worker-axis sum below is the round's ONE data-axis param-shard
+        # all-reduce (d/n_model floats)
+        count_x = jnp.take(count_q, region_ids_loc)
+        covered_x = jnp.take(count_q > 0, region_ids_loc)
+        denom = jnp.maximum(count_x, 1).astype(G.dtype)
+        contrib = jnp.where(covered_x[None, :], G / denom, C / N)
+        g_loc = jax.lax.psum(contrib.sum(axis=0), data_axis)
+        C = jnp.where(Mx, G, C)                     # device-local tile
+        return None, C, g_loc
+
+    def finish_step(x, g_loc):
+        if curvature == "dense":
+            step = _blocked_solve_panels(
+                chol, g_loc, model_axis=model_axis, n_model=n_model,
+                me=me_m, row_start=row_start, dim=d)
         else:
-            # single-reduction aggregation on the local d-slice: the
-            # worker-axis sum below is the round's ONE data-axis
-            # param-shard all-reduce (d/n_model floats)
-            denom = jnp.maximum(count_x, 1).astype(G.dtype)
-            contrib = jnp.where(covered_x[None, :], G / denom, C / N)
-            g_loc = jax.lax.psum(contrib.sum(axis=0), data_axis)
-            C = jnp.where(Mx, G, C)                 # device-local tile
-            if curvature == "dense":
-                step = _blocked_solve_panels(
-                    chol, g_loc, model_axis=model_axis, n_model=n_model,
-                    me=me_m, row_start=row_start, dim=d)
-            else:
-                step_loc = g_loc / project_diag(hdiag, mu)
-                step = jax.lax.psum(
-                    jax.lax.dynamic_update_slice(jnp.zeros_like(x), step_loc,
-                                                 (row_start,)), model_axis)
-            x = x - lr * step
+            step = scatter_rows(g_loc / project_diag(hdiag, mu))
+        return x - lr * step
+
+    def diagnostics(count_q):
         # uplink floats, from the already-global counts (no extra psum)
         comm = (count_q * sizes_q).sum()
         cov_mean, min_count, min_cov_count = _round_diagnostics(
-            covered_q, count_q, N)
-        return (x, C), (x, cov_mean, comm, min_count, min_cov_count)
+            count_q > 0, count_q, N)
+        return comm, cov_mean, min_count, min_cov_count
+
+    if overlap:
+        def body(carry, t):
+            x, C, M, gk, count_q = carry
+            x_new, C, g_loc = round_update(x, C, M, gk, count_q)
+            # overlap window: round t+1's sampling + count psum and round
+            # t's diagnostics — none of it touches the in-flight psum
+            nxt = sample_round(t + 1)
+            comm, cov_mean, min_count, min_cov_count = diagnostics(count_q)
+            if x_new is None:
+                x_new = finish_step(x, g_loc)     # first psum consumer
+            return (x_new, C) + nxt, (x_new, cov_mean, comm, min_count,
+                                      min_cov_count)
+
+        init_carry = (x1, C0) + sample_round(1)
+    else:
+        def body(carry, t):
+            x, C = carry                # x: (d,) replicated; C: (n_local, p)
+            M, gk, count_q = sample_round(t)
+            x_new, C, g_loc = round_update(x, C, M, gk, count_q)
+            if x_new is None:
+                x_new = finish_step(x, g_loc)
+            comm, cov_mean, min_count, min_cov_count = diagnostics(count_q)
+            return (x_new, C), (x_new, cov_mean, comm, min_count,
+                                min_cov_count)
+
+        init_carry = (x1, C0)
 
     ts = jnp.arange(1, num_rounds + 1)
     _, (xs_t, cov, comm, min_counts, min_cov_counts) = jax.lax.scan(
-        body, (x1, C0), ts)
+        body, init_carry, ts)
     xs = jnp.concatenate([jnp.stack([jnp.zeros(d), x1]), xs_t], axis=0)
     tau, tau_cov = _tau_pair(min_counts, min_cov_counts, N)
     return xs, cov, comm, tau, tau_cov
@@ -647,33 +764,128 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, *,
 _SHARDED2D_STATIC = ("mesh", "data_axis", "model_axis", "num_rounds",
                      "num_regions", "policy", "mu", "lr", "curvature",
                      "use_kernel", "interpret", "num_workers", "n_data",
-                     "n_model")
+                     "n_model", "overlap")
 
 
-def _sharded2d_engine(problem, k_loop, x1, C0, chol, hdiag, *, mesh,
+def _sharded2d_engine(problem, k_loop, x1, C0, hdiag, *, mesh,
                       data_axis, model_axis, num_rounds, num_regions,
                       policy, mu, lr, curvature, use_kernel, interpret,
-                      num_workers, n_data, n_model):
+                      num_workers, n_data, n_model, overlap):
+    """Diag-curvature 2-D engine: host-side O(d) init, sharded rounds."""
     from ..launch.shard import ranl2d_pspecs
-    body = functools.partial(
-        _sharded2d_rounds_body, data_axis=data_axis, model_axis=model_axis,
-        num_rounds=num_rounds, num_regions=num_regions, policy=policy,
-        mu=mu, lr=lr, curvature=curvature, use_kernel=use_kernel,
-        interpret=interpret, num_workers=num_workers, n_data=n_data,
-        n_model=n_model)
+
+    def body(problem, k_loop, x1, C0, hdiag):
+        return _sharded2d_rounds_body(
+            problem, k_loop, x1, C0, None, hdiag, data_axis=data_axis,
+            model_axis=model_axis, num_rounds=num_rounds,
+            num_regions=num_regions, policy=policy, mu=mu, lr=lr,
+            curvature=curvature, use_kernel=use_kernel, interpret=interpret,
+            num_workers=num_workers, n_data=n_data, n_model=n_model,
+            overlap=overlap)
+
     specs = ranl2d_pspecs(problem, worker_axis=data_axis,
                           dim_axis=model_axis)
     in_specs = (specs["problem"], _replicated_specs(k_loop),
-                _replicated_specs(x1), specs["memory"],
-                specs["chol"] if chol is not None else None,
-                specs["hdiag"] if hdiag is not None else None)
+                _replicated_specs(x1), specs["memory"], specs["hdiag"])
     fn = shard_map(body, mesh=mesh, in_specs=in_specs,
                    out_specs=(P(), P(), P(), P(), P()), check_rep=False)
-    return fn(problem, k_loop, x1, C0, chol, hdiag)
+    return fn(problem, k_loop, x1, C0, hdiag)
 
 
 _sharded2d_jit = functools.partial(
     jax.jit, static_argnames=_SHARDED2D_STATIC)(_sharded2d_engine)
+
+
+def _sharded2d_dense_body(problem, key, *, data_axis, model_axis,
+                          num_rounds, num_regions, policy, mu, lr,
+                          ns_iters, overlap, num_workers, n_data, n_model):
+    """Dense-curvature 2-D program, init INCLUDED (runs under shard_map).
+
+    Alg. 1 lines 1–8 with every d-sized object as model-axis row panels:
+
+    * the mean worker Hessian accumulates as a running sum of
+      ``worker_hessian_rows`` panels (``lax.scan`` over local workers,
+      one data-axis psum) — peak O(d²/n_model), never O(N·d²);
+    * the Definition-4 projection is the matmul-only Newton–Schulz
+      iteration over those panels (``project_psd_ns_panels``) — no eigh,
+      no replicated d×d buffer, the panel-product psums stay on the
+      model axis;
+    * the blocked right-looking factorization and the blocked-solve first
+      Newton step complete the phase, and the round loop continues with
+      the factor's row panels in place.
+
+    The largest per-device buffer across the WHOLE program is the
+    (d/n_model, d) panel — asserted on the compiled HLO by
+    tests via ``hlo_analysis.max_array_bytes``.
+    """
+    N = num_workers
+    d = problem.dim
+    p = d // n_model
+    n_local = problem.num_workers         # workers held by this shard
+    me_d = jax.lax.axis_index(data_axis)
+    me_m = jax.lax.axis_index(model_axis)
+    wstart = me_d * n_local
+    row_start = me_m * p
+    local_ids = jnp.arange(n_local)
+    k_init, k_loop = jax.random.split(key)
+    x0 = jnp.zeros(d)
+    hkeys = jax.lax.dynamic_slice_in_dim(
+        jax.random.split(jax.random.fold_in(k_init, 0), N), wstart, n_local)
+    gkeys = jax.lax.dynamic_slice_in_dim(
+        jax.random.split(jax.random.fold_in(k_init, 1), N), wstart, n_local)
+
+    def acc(h_sum, ik):
+        i, k = ik
+        return h_sum + problem.worker_hessian_rows(i, x0, k, row_start,
+                                                   p), None
+
+    h_panel, _ = jax.lax.scan(acc, jnp.zeros((p, d)), (local_ids, hkeys))
+    h_panel = jax.lax.psum(h_panel, data_axis) / N
+    hmu_panel = project_psd_ns_panels(h_panel, mu, axis_name=model_axis,
+                                      n_model=n_model, num_iters=ns_iters)
+    chol = _factor_sharded2d_body(hmu_panel, model_axis=model_axis,
+                                  n_model=n_model)
+    g0 = jax.vmap(lambda i, k: problem.worker_grad_rows(
+        i, x0, k, row_start, p))(local_ids, gkeys)       # (n_local, p)
+    gbar_loc = jax.lax.psum(g0.sum(axis=0), data_axis) / N
+    step0 = _blocked_solve_panels(chol, gbar_loc, model_axis=model_axis,
+                                  n_model=n_model, me=me_m,
+                                  row_start=row_start, dim=d)
+    x1 = x0 - lr * step0
+    return _sharded2d_rounds_body(
+        problem, k_loop, x1, g0, chol, None, data_axis=data_axis,
+        model_axis=model_axis, num_rounds=num_rounds,
+        num_regions=num_regions, policy=policy, mu=mu, lr=lr,
+        curvature="dense", use_kernel=False, interpret=None,
+        num_workers=N, n_data=n_data, n_model=n_model, overlap=overlap)
+
+
+_SHARDED2D_DENSE_STATIC = ("mesh", "data_axis", "model_axis", "num_rounds",
+                           "num_regions", "policy", "mu", "lr", "ns_iters",
+                           "overlap", "num_workers", "n_data", "n_model")
+
+
+def _sharded2d_dense_engine(problem, key, *, mesh, data_axis, model_axis,
+                            num_rounds, num_regions, policy, mu, lr,
+                            ns_iters, overlap, num_workers, n_data,
+                            n_model):
+    from ..launch.shard import ranl2d_pspecs
+    body = functools.partial(
+        _sharded2d_dense_body, data_axis=data_axis, model_axis=model_axis,
+        num_rounds=num_rounds, num_regions=num_regions, policy=policy,
+        mu=mu, lr=lr, ns_iters=ns_iters, overlap=overlap,
+        num_workers=num_workers, n_data=n_data, n_model=n_model)
+    specs = ranl2d_pspecs(problem, worker_axis=data_axis,
+                          dim_axis=model_axis)
+    in_specs = (specs["problem"], _replicated_specs(key))
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs,
+                   out_specs=(P(), P(), P(), P(), P()), check_rep=False)
+    return fn(problem, key)
+
+
+_sharded2d_dense_jit = functools.partial(
+    jax.jit, static_argnames=_SHARDED2D_DENSE_STATIC)(
+    _sharded2d_dense_engine)
 
 
 def _check_mesh2d(problem, mesh, data_axis: str, model_axis: str):
@@ -697,35 +909,41 @@ def _check_mesh2d(problem, mesh, data_axis: str, model_axis: str):
 
 def _sharded2d_args(problem, key, *, mesh, data_axis, model_axis,
                     num_rounds, num_regions, policy, mu, lr, curvature,
-                    use_kernel, hutchinson_samples, abstract: bool = False):
+                    use_kernel, hutchinson_samples, ns_iters, overlap,
+                    abstract: bool = False):
+    """-> (jitted_engine, args, static) for the requested curvature.
+
+    Dense: the ENTIRE program — init included — is one shard_map'd
+    computation over (problem, key), so lowering it exposes every phase
+    to the HLO memory/communication assertions and nothing replicated
+    ever materializes host-side.  Diag: the O(d)-state Hutchinson init
+    runs host-side exactly as in ``run_ranl`` and only the round loop is
+    shard_map'd (with ``abstract=True`` the init is traced to avals via
+    ``jax.eval_shape`` so lowering pays no compute).
+    """
     n_data, n_model = _check_mesh2d(problem, mesh, data_axis, model_axis)
     cfg = _config(problem, mu=mu, lr=lr, curvature=curvature,
                   hutchinson_samples=hutchinson_samples)
     hutch = cfg.pop("hutch_samples")
 
-    # Init phase (Alg. 1 lines 1-8) runs replicated, identical to run_ranl:
-    # the Definition-4 projection is a global eigendecomposition, so [H]_μ
-    # exists once at init regardless — but the FACTORIZATION is blocked and
-    # model-sharded, and only the (d/n_model, d) row panels flow into the
-    # round loop.  At true d >> memory scale use curvature="diag", whose
-    # init state is O(d).  The dense path does factor [H]_μ twice at init
-    # (_init_phase's cho_factor for the x¹ step, then the blocked panels):
-    # the replicated potrf is ~3% of the eigh's flops in the same init and
-    # keeps x¹ bit-identical to run_ranl's, so the duplication is kept.
+    if cfg["curvature"] == "dense":
+        static = dict(mesh=mesh, data_axis=data_axis, model_axis=model_axis,
+                      num_rounds=int(num_rounds),
+                      num_regions=int(num_regions), policy=policy,
+                      mu=cfg["mu"], lr=cfg["lr"], ns_iters=int(ns_iters),
+                      overlap=bool(overlap),
+                      num_workers=problem.num_workers,
+                      n_data=n_data, n_model=n_model)
+        return _sharded2d_dense_jit, (problem, key), static
+
     def make_args(problem, key):
         k_init, k_loop = jax.random.split(key)
-        x1, C0, _, _, hdiag, h_mu = _init_phase(
+        x1, C0, _, _, hdiag = _init_phase(
             problem, k_init, mu=cfg["mu"], lr=cfg["lr"],
-            curvature=cfg["curvature"], hutch_samples=hutch, with_h_mu=True)
-        chol = None
-        if cfg["curvature"] == "dense":
-            chol = _factor2d_jit(h_mu, mesh=mesh, model_axis=model_axis,
-                                 n_model=n_model)
-        return problem, k_loop, x1, C0, chol, hdiag
+            curvature=cfg["curvature"], hutch_samples=hutch)
+        return problem, k_loop, x1, C0, hdiag
 
     if abstract:
-        # lowering only needs avals: trace the init to shapes/dtypes
-        # instead of paying its O(N d²) Hessians + O(d³) eigh/factorize
         args = jax.eval_shape(make_args, problem, key)
     else:
         args = make_args(problem, key)
@@ -733,8 +951,9 @@ def _sharded2d_args(problem, key, *, mesh, data_axis, model_axis,
                   num_rounds=int(num_rounds), num_regions=int(num_regions),
                   policy=policy, use_kernel=bool(use_kernel),
                   interpret=None, num_workers=problem.num_workers,
-                  n_data=n_data, n_model=n_model, **cfg)
-    return args, static
+                  n_data=n_data, n_model=n_model, overlap=bool(overlap),
+                  **cfg)
+    return _sharded2d_jit, args, static
 
 
 def run_ranl_sharded2d(problem, key, *, mesh, num_rounds: int = 30,
@@ -743,7 +962,8 @@ def run_ranl_sharded2d(problem, key, *, mesh, num_rounds: int = 30,
                        mu: float | None = None, curvature: str = "dense",
                        lr: float = 1.0, use_kernel: bool = True,
                        hutchinson_samples: int = 8,
-                       data_axis: str = "data", model_axis: str = "model"):
+                       data_axis: str = "data", model_axis: str = "model",
+                       ns_iters: int = 60, overlap: bool = False):
     """Algorithm 1 with workers AND the parameter dimension sharded.
 
     2-D ``(data_axis, model_axis)`` mesh: the worker axis partitions over
@@ -753,37 +973,48 @@ def run_ranl_sharded2d(problem, key, *, mesh, num_rounds: int = 30,
     coordinate masks, with the per-round param all-reduce shrunk to a
     psum of d/n_model floats over ONLY the data axis.
 
-    ``curvature="dense"`` replaces the replicated Cholesky with a blocked
-    right-looking factorization plus blocked triangular solves over
-    d-axis row panels: no device holds a d×d curvature buffer in the
-    round loop (per-device curvature bytes = d²/n_model plus one column
-    block of slack), and the solves communicate only model-axis block
-    broadcasts.  Caveat: the one-time dense INIT still materializes
-    [H]_μ replicated — the Definition-4 projection is a global
-    eigendecomposition — so the d-beyond-one-device regime needs
-    ``curvature="diag"``, whose init state is O(d) and whose Hutchinson
+    ``curvature="dense"`` runs the WHOLE dense path sharded, init
+    included: the mean Hessian accumulates as model-axis row panels
+    (``worker_hessian_rows``), the Definition-4 projection is the
+    matmul-only Newton–Schulz iteration over those panels (``ns_iters``
+    controls its step count — see ``hessian.project_psd_ns``), and the
+    blocked right-looking factorization + blocked triangular solves
+    replace the replicated Cholesky.  No device materializes a d×d
+    buffer at ANY phase (per-device curvature bytes = d²/n_model plus
+    one column block of slack), proven on compiled HLO.  The
+    single-device oracle of this path is ``run_ranl(projection="ns")``.
+    ``curvature="diag"`` keeps the O(d)-state Hutchinson init; its
     estimate and fused Pallas ``ranl_update`` kernel run on local
     d-slices unchanged (the kernel engages on pure model-parallel
     meshes, where every worker is device-local).
 
-    Trajectories match ``run_ranl`` to blocked-solve reorder tolerance
-    (parity-pinned at 1e-5 in tests/test_multidevice.py on 1x1, 2x2 and
-    1x4 emulated meshes).  Requires ``num_workers`` divisible by the data
-    axis extent and ``dim`` divisible by the model axis extent.
+    ``overlap=True`` selects the double-buffered round loop: the next
+    round's mask sampling and coverage-count psum run while the current
+    round's param-shard psum is in flight — identical math, pinned
+    exactly equal in tests.
+
+    Trajectories match the matching single-device oracle to blocked-
+    solve/NS reorder tolerance (parity-pinned at 1e-5 in
+    tests/test_multidevice.py on 1x1, 2x2 and 1x4 emulated meshes).
+    Requires ``num_workers`` divisible by the data axis extent and
+    ``dim`` divisible by the model axis extent.
     """
     if num_rounds <= 0:       # no rounds -> nothing to shard
         _check_mesh2d(problem, mesh, data_axis, model_axis)
         return run_ranl(problem, key, num_rounds=num_rounds,
                         num_regions=num_regions, policy=policy, mu=mu,
                         curvature=curvature, lr=lr,
-                        hutchinson_samples=hutchinson_samples)
-    args, static = _sharded2d_args(
+                        hutchinson_samples=hutchinson_samples,
+                        projection="ns" if curvature == "dense" else "eigh",
+                        ns_iters=ns_iters)
+    engine, args, static = _sharded2d_args(
         problem, key, mesh=mesh, data_axis=data_axis,
         model_axis=model_axis, num_rounds=num_rounds,
         num_regions=num_regions, policy=policy, mu=mu, lr=lr,
         curvature=curvature, use_kernel=use_kernel,
-        hutchinson_samples=hutchinson_samples)
-    xs, cov, comm, tau, tau_cov = _sharded2d_jit(*args, **static)
+        hutchinson_samples=hutchinson_samples, ns_iters=ns_iters,
+        overlap=overlap)
+    xs, cov, comm, tau, tau_cov = engine(*args, **static)
     dist = jnp.sum((xs - problem.x_star[None, :]) ** 2, axis=1)
     losses = jax.vmap(problem.loss)(xs)
     return RanlResult(xs=xs, dist_sq=dist, losses=losses, coverage=cov,
@@ -798,30 +1029,36 @@ def lower_ranl_sharded2d(problem, key, *, mesh, num_rounds: int = 30,
                          lr: float = 1.0, use_kernel: bool = True,
                          hutchinson_samples: int = 8,
                          data_axis: str = "data",
-                         model_axis: str = "model"):
-    """Lower (without running) the 2-D sharded round loop.
+                         model_axis: str = "model", ns_iters: int = 60,
+                         overlap: bool = False):
+    """Lower (without running) the 2-D sharded program.
 
-    Genuinely compile-time: the init phase and factorization are traced
-    to avals with ``jax.eval_shape`` (no Hessian evaluation, eigh, or
-    factorization executes), so configs far beyond this host's memory
-    can be inspected.  ``.compile().as_text()`` is the partitioned HLO on
-    which ``launch.hlo_analysis`` proves the per-ROUND memory and
-    communication claims: no per-device curvature buffer above
-    ~d²/n_model bytes, and exactly one data-axis param-shard all-reduce
-    per round.
+    Genuinely compile-time: for ``curvature="dense"`` the whole program
+    (sharded init + rounds) is lowered directly — nothing executes, so
+    configs far beyond this host's memory can be inspected — and the
+    resulting ``.compile().as_text()`` partitioned HLO carries EVERY
+    phase, which is how ``launch.hlo_analysis`` proves the end-to-end
+    memory claim: no per-device buffer above ~d²/n_model bytes anywhere,
+    init included, plus exactly one data-axis param-shard all-reduce per
+    round.  For diag the host-side init is traced to avals with
+    ``jax.eval_shape`` and the round loop is lowered as before.
     """
-    args, static = _sharded2d_args(
+    engine, args, static = _sharded2d_args(
         problem, key, mesh=mesh, data_axis=data_axis,
         model_axis=model_axis, num_rounds=num_rounds,
         num_regions=num_regions, policy=policy, mu=mu, lr=lr,
         curvature=curvature, use_kernel=use_kernel,
-        hutchinson_samples=hutchinson_samples, abstract=True)
-    return _sharded2d_jit.lower(*args, **static)
+        hutchinson_samples=hutchinson_samples, ns_iters=ns_iters,
+        overlap=overlap, abstract=True)
+    return engine.lower(*args, **static)
 
 
-def _config(problem, *, mu, lr, curvature, hutchinson_samples):
+def _config(problem, *, mu, lr, curvature, hutchinson_samples,
+            projection: str = "eigh"):
     if curvature not in ("dense", "diag"):
         raise ValueError(f"unknown curvature {curvature!r}")
+    if projection not in ("eigh", "ns"):
+        raise ValueError(f"unknown projection {projection!r}")
     return dict(mu=float(problem.mu) if mu is None else float(mu),
                 lr=float(lr), curvature=curvature,
                 hutch_samples=int(hutchinson_samples))
@@ -831,21 +1068,28 @@ def run_ranl(problem, key, *, num_rounds: int = 30, num_regions: int = 8,
              policy: PolicyConfig = PolicyConfig(), mu: float | None = None,
              record_every: int = 1, curvature: str = "dense",
              lr: float = 1.0, use_kernel: bool = True,
-             hutchinson_samples: int = 8):
+             hutchinson_samples: int = 8, projection: str = "eigh",
+             ns_iters: int = 60):
     """Run Algorithm 1 on a convex problem. Returns RanlResult.
 
-    ``curvature="dense"`` (default) keeps the exact Definition-4 eigenvalue
-    projection; ``"diag"`` uses a Hutchinson diagonal estimate and the fused
-    Pallas update kernel (set ``use_kernel=False`` for the pure-jnp oracle).
+    ``curvature="dense"`` (default) keeps the exact Definition-4
+    projection — ``projection="eigh"`` (default) via eigenvalue clamping,
+    ``projection="ns"`` via the matmul-only Newton–Schulz form
+    (``ns_iters`` steps; the single-device oracle of the dimension-
+    sharded engine's init).  ``"diag"`` uses a Hutchinson diagonal
+    estimate and the fused Pallas update kernel (set ``use_kernel=False``
+    for the pure-jnp oracle).
     """
     del record_every  # retained for API compatibility
     cfg = _config(problem, mu=mu, lr=lr, curvature=curvature,
-                  hutchinson_samples=hutchinson_samples)
+                  hutchinson_samples=hutchinson_samples,
+                  projection=projection)
     hutch = cfg.pop("hutch_samples")
     k_init, k_loop = jax.random.split(key)
     x1, C0, cho_c, cho_lower, hdiag = _init_phase(
         problem, k_init, mu=cfg["mu"], lr=cfg["lr"],
-        curvature=cfg["curvature"], hutch_samples=hutch)
+        curvature=cfg["curvature"], hutch_samples=hutch,
+        projection=projection, ns_iters=ns_iters)
     xs, dist, losses, cov, comm, tau, tau_cov = _rounds_jit(
         problem, k_loop, x1, C0, cho_c, hdiag,
         num_rounds=int(num_rounds), num_regions=int(num_regions),
@@ -862,7 +1106,8 @@ def run_ranl_batch(problem, keys, *, num_rounds: int = 30,
                    mu: float | None = None, curvature: str = "dense",
                    lr: float = 1.0, use_kernel: bool = True,
                    hutchinson_samples: int = 8, mesh=None,
-                   axis_name: str = "data"):
+                   axis_name: str = "data", projection: str = "eigh",
+                   ns_iters: int = 60):
     """Batched multi-seed runs: one compilation, vmapped over ``keys``.
 
     ``keys``: (B,)-stacked PRNG keys (``jax.random.split(key, B)``).
@@ -887,11 +1132,13 @@ def run_ranl_batch(problem, keys, *, num_rounds: int = 30,
         keys = jax.device_put(keys, NamedSharding(mesh, P(axis_name)))
         problem = jax.device_put(problem, NamedSharding(mesh, P()))
     cfg = _config(problem, mu=mu, lr=lr, curvature=curvature,
-                  hutchinson_samples=hutchinson_samples)
+                  hutchinson_samples=hutchinson_samples,
+                  projection=projection)
     xs, dist, losses, cov, comm, tau, tau_cov = _batch_jit(
         problem, keys, num_rounds=int(num_rounds),
         num_regions=int(num_regions), policy=policy,
-        use_kernel=bool(use_kernel), interpret=None, **cfg)
+        use_kernel=bool(use_kernel), interpret=None,
+        projection=projection, ns_iters=int(ns_iters), **cfg)
     return RanlResult(xs=xs, dist_sq=dist, losses=losses, coverage=cov,
                       comm_floats=comm, tau_star=tau, tau_covered=tau_cov)
 
@@ -915,9 +1162,7 @@ def run_ranl_reference(problem, key, *, num_rounds: int = 30,
     x0 = jnp.zeros(d)
     hkeys = jax.random.split(jax.random.fold_in(k_init, 0), N)
     gkeys = jax.random.split(jax.random.fold_in(k_init, 1), N)
-    H = jnp.stack([problem.worker_hessian(i, x0, hkeys[i])
-                   for i in range(N)]).mean(axis=0)
-    H_mu = project_psd(H, mu)
+    H_mu = project_psd(running_mean_hessian(problem, x0, hkeys), mu)
     g0 = jnp.stack([problem.worker_grad(i, x0, gkeys[i]) for i in range(N)])
     C = g0
     x = x0 - solve_projected(H_mu, g0.mean(axis=0))

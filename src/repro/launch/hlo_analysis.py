@@ -306,3 +306,24 @@ def summarize_collectives(records):
             d["in_loop_bytes"] += r.total_bytes
     total = sum(d["bytes"] for d in by_kind.values())
     return {"total_bytes": total, "by_kind": by_kind}
+
+
+def module_report(text: str, default_trip: int = 1) -> dict:
+    """One-call memory + communication report for a partitioned module.
+
+    Returns ``{"max_array_bytes", "collectives": summarize_collectives
+    output, "records": per-collective rows}`` — what the engines' HLO
+    tests assert piecewise, packaged for human consumption (the
+    ``launch.train --dump-hlo`` CLI prints it so an operator can check
+    the per-device buffer ceiling and all-reduce budget of a config
+    without reading HLO text).
+    """
+    records = collect_collectives(text, default_trip)
+    return {
+        "max_array_bytes": max_array_bytes(text),
+        "collectives": summarize_collectives(records),
+        "records": [
+            {"kind": r.kind, "operand_bytes": r.operand_bytes,
+             "multiplier": r.multiplier, "comp": r.comp}
+            for r in sorted(records, key=lambda r: -r.total_bytes)],
+    }

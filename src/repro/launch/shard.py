@@ -164,22 +164,25 @@ def ranl2d_pspecs(problem, *, worker_axis: str = "data",
                   dim_axis: str = "model"):
     """PartitionSpecs for the dimension-sharded convex RANL engine.
 
-    One dict per moving pytree of ``run_ranl_sharded2d``'s round loop on a
+    One dict per moving pytree of ``run_ranl_sharded2d`` on a
     ``(worker_axis, dim_axis)`` mesh:
 
       * ``problem`` — the problem's own leaf rules (worker axes over
         ``worker_axis``; O(d²) per-worker state additionally row-sharded
         over ``dim_axis`` — see each problem's ``dim_sharded_specs``);
-      * ``memory`` — gradient memory C (N, d): workers × dimension;
-      * ``chol`` — the lower Cholesky factor of [H]_μ (d, d) as row
-        panels over ``dim_axis`` (d²/n_model per device, the engine's
-        curvature budget);
+      * ``memory`` — gradient memory C (N, d): workers × dimension (the
+        diag path's host-seeded init; the dense path seeds C in-program
+        from ``worker_grad_rows`` and needs no spec for it);
       * ``hdiag`` — diagonal curvature (d,) over ``dim_axis``.
+
+    The dense curvature state carries no spec at all anymore: the
+    Cholesky row panels are produced INSIDE the shard_map'd program
+    (sharded mean-Hessian accumulation → Newton–Schulz projection →
+    blocked factorization), so they never cross a pjit boundary.
     """
     return {
         "problem": problem.dim_sharded_specs(worker_axis, dim_axis),
         "memory": P(worker_axis, dim_axis),
-        "chol": P(dim_axis, None),
         "hdiag": P(dim_axis),
     }
 

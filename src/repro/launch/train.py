@@ -60,6 +60,13 @@ def run(argv=None):
                     help="additionally shard parameter/tensor axes over "
                          "this many devices of the 'model' axis of a "
                          "('data','model') mesh (1 = data-parallel only)")
+    ap.add_argument("--dump-hlo", default="", metavar="PATH",
+                    help="lower + compile the train step, write the "
+                         "partitioned HLO text to PATH, print the "
+                         "hlo_analysis report (largest per-device buffer, "
+                         "collective inventory), and exit without "
+                         "training — the CLI form of the memory/"
+                         "communication assertions the engine tests pin")
     ap.add_argument("--keep-prob", type=float, default=0.7)
     ap.add_argument("--mu", type=float, default=1e-4)
     ap.add_argument("--lr", type=float, default=1.0)
@@ -69,6 +76,10 @@ def run(argv=None):
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args(argv)
+    if args.dump_hlo and args.optimizer != "ranl":
+        raise SystemExit("--dump-hlo reports the RANL train step; rerun "
+                         "with --optimizer ranl (the baseline optimizers "
+                         "have no lowered step to analyze here)")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -110,6 +121,17 @@ def run(argv=None):
         state = init_state(params, loss_fn, batch0, rcfg, ko, mesh=mesh)
         step_fn = jax.jit(partial(train_step, loss_fn=loss_fn, cfg=rcfg,
                                   mesh=mesh))
+        if args.dump_hlo:
+            from .hlo_analysis import module_report
+            txt = step_fn.lower(params, state, batch0, ko) \
+                .compile().as_text()
+            with open(args.dump_hlo, "w") as f:
+                f.write(txt)
+            rep = module_report(txt)
+            rep["records"] = rep["records"][:12]      # top movers only
+            print(f"wrote partitioned HLO to {args.dump_hlo}")
+            print(json.dumps(rep, indent=2))
+            return rep
         for t in range(args.steps):
             batch = make_batch(cfg, jax.random.fold_in(kd, t + 1),
                                args.batch, args.seq, pattern=args.pattern)

@@ -8,7 +8,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import (PolicyConfig, blocked_cho_solve, blocked_cholesky,
                         ensure_coverage, expand_mask,
-                        contiguous_regions, make_quadratic, project_psd,
+                        contiguous_regions, fisher_diag, make_quadratic,
+                        project_psd, project_psd_ns, project_psd_sharded,
                         region_sizes, rounds_to_tol, run_gd,
                         run_newton_zero, run_ranl, run_ranl_batch,
                         run_ranl_reference, sample_masks,
@@ -54,6 +55,62 @@ def test_projection_lemma1_contraction():
         assert float(lhs) <= float(rhs) + 1e-5
 
 
+def _straddling_matrix(d: int, mu: float, seed: int, *, gap: float = 1e-3,
+                       top: float = 4.0):
+    """Symmetric matrix with eigenvalues on BOTH sides of μ, including one
+    exactly at μ and clusters ``gap`` away — the projection's interesting
+    regime (everything strictly above μ is a no-op, everything below
+    clamps)."""
+    q, _ = jnp.linalg.qr(jax.random.normal(jax.random.PRNGKey(seed),
+                                           (d, d)))
+    lo = jnp.linspace(mu - top / 2, mu - gap, d // 2)
+    hi = jnp.linspace(mu + gap, mu + top, d - d // 2 - 1)
+    w = jnp.concatenate([lo, jnp.array([mu]), hi])
+    return (q * w) @ q.T
+
+
+def test_project_psd_ns_matches_eigh_across_regimes():
+    """The matmul-only Newton–Schulz projection must agree with the eigh
+    oracle to <= 1e-5 on matrices whose eigenvalues straddle μ — wide
+    spreads, tight gaps (|λ−μ| = 1e-3), an eigenvalue exactly at μ, and
+    asymmetric inputs (both symmetrize first)."""
+    for d, mu, seed in ((8, 0.5, 0), (33, 1.0, 1), (64, 0.3, 2)):
+        a = _straddling_matrix(d, mu, seed)
+        ref = project_psd(a, mu)
+        ns = project_psd_ns(a, mu)
+        assert float(jnp.abs(ns - ref).max()) <= 1e-5, (d, mu)
+        # the floor really holds
+        w = np.linalg.eigvalsh(np.asarray(ns))
+        assert w.min() >= mu - 1e-4
+        # tol early-exit returns the same operator
+        ns_tol = project_psd_ns(a, mu, tol=1e-7)
+        assert float(jnp.abs(ns_tol - ref).max()) <= 1e-5
+    # ill-conditioned: eigenvalues hugging mu at 1e-4 from both sides
+    a = _straddling_matrix(32, 1.0, 3, gap=1e-4, top=10.0)
+    assert float(jnp.abs(project_psd_ns(a, 1.0)
+                         - project_psd(a, 1.0)).max()) <= 1e-5
+    # asymmetric input goes through sym() exactly like project_psd
+    r = jax.random.normal(KEY, (16, 16))
+    assert float(jnp.abs(project_psd_ns(r, 0.4)
+                         - project_psd(r, 0.4)).max()) <= 1e-5
+    # all-zero input projects to exactly mu*I
+    z = project_psd_ns(jnp.zeros((6, 6)), 0.7)
+    np.testing.assert_allclose(z, 0.7 * jnp.eye(6), atol=1e-6)
+
+
+def test_project_psd_sharded_single_device_matches_oracles():
+    """On a 1-device mesh the panel-sharded projection must match the
+    single-device NS oracle (same iteration, degenerate psums) and the
+    eigh oracle to NS tolerance.  (The non-dividing-dim guard needs a
+    multi-device model axis and is exercised in tests/test_multidevice.py
+    alongside the engine's divisibility guards.)"""
+    mesh = jax.make_mesh((1,), ("model",))
+    a = _straddling_matrix(24, 0.6, 4)
+    sh = project_psd_sharded(a, 0.6, mesh=mesh)
+    assert float(jnp.abs(sh - project_psd_ns(a, 0.6)).max()) <= 1e-6
+    assert float(jnp.abs(sh - project_psd(a, 0.6)).max()) <= 1e-5
+
+
 def test_solve_projected_matches_inverse():
     a = project_psd(jax.random.normal(KEY, (8, 8)), 0.3)
     g = jax.random.normal(jax.random.fold_in(KEY, 1), (8,))
@@ -81,6 +138,82 @@ def test_blocked_cholesky_matches_jax_scipy(d, block):
                                rtol=2e-4, atol=1e-5)
     # the factor is genuinely lower triangular (no junk above the diagonal)
     assert np.allclose(np.triu(np.asarray(L), 1), 0.0)
+
+
+def test_blocked_cholesky_edge_blocks():
+    """Explicit edge regimes: block_size=1 degenerates to the scalar
+    right-looking algorithm; block_size > d factors in one shot equal to
+    the library call; block_size < 1 is rejected by factor AND solve."""
+    d = 9
+    a = project_psd(jax.random.normal(KEY, (d, d)), 0.5)
+    g = jax.random.normal(jax.random.fold_in(KEY, 2), (d,))
+    ref_l = jnp.linalg.cholesky(a)
+    ref_x = jax.scipy.linalg.cho_solve(jax.scipy.linalg.cho_factor(a), g)
+    # block_size = 1: d scalar pivots, still the exact factor
+    L1 = blocked_cholesky(a, 1)
+    np.testing.assert_allclose(np.asarray(L1), np.asarray(ref_l),
+                               rtol=2e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(blocked_cho_solve(L1, g, 1)),
+                               np.asarray(ref_x), rtol=2e-4, atol=1e-5)
+    # block_size > d: single block, bitwise the library factorization
+    Lbig = blocked_cholesky(a, d + 5)
+    np.testing.assert_array_equal(np.asarray(Lbig), np.asarray(ref_l))
+    np.testing.assert_allclose(
+        np.asarray(blocked_cho_solve(Lbig, g, d + 5)), np.asarray(ref_x),
+        rtol=2e-4, atol=1e-5)
+    # mixed block sizes between factor and solve compose fine
+    np.testing.assert_allclose(
+        np.asarray(blocked_cho_solve(L1, g, d + 5)), np.asarray(ref_x),
+        rtol=2e-4, atol=1e-5)
+    for bad in (0, -3):
+        with pytest.raises(ValueError, match="block_size"):
+            blocked_cholesky(a, bad)
+        with pytest.raises(ValueError, match="block_size"):
+            blocked_cho_solve(ref_l, g, bad)
+
+
+def test_fisher_diag_matches_manual_mean_of_squared_grads():
+    """fisher_diag == mean over keys of elementwise-squared grads, with
+    the params pytree structure preserved (previously untested)."""
+    params = {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.ones(4)}
+
+    def grad_fn(p, key):
+        k1, k2 = jax.random.split(key)
+        return {"w": p["w"] * jax.random.normal(k1, p["w"].shape),
+                "b": p["b"] + jax.random.normal(k2, p["b"].shape)}
+
+    keys = jax.random.split(KEY, 5)
+    out = fisher_diag(grad_fn, params, keys)
+    assert set(out) == {"w", "b"}
+    assert out["w"].shape == (2, 3) and out["b"].shape == (4,)
+    want_w = np.mean([np.asarray(grad_fn(params, k)["w"]) ** 2
+                      for k in keys], axis=0)
+    want_b = np.mean([np.asarray(grad_fn(params, k)["b"]) ** 2
+                      for k in keys], axis=0)
+    np.testing.assert_allclose(np.asarray(out["w"]), want_w, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(out["b"]), want_b, rtol=1e-5)
+
+
+def test_fisher_diag_accepts_key_list_and_is_nonnegative():
+    """``keys`` may be any stackable sequence; the estimate is a mean of
+    squares, so it is elementwise >= 0, and a single key reproduces that
+    key's squared gradient exactly."""
+    params = (jnp.array([1.0, -2.0, 3.0]),)
+
+    def grad_fn(p, key):
+        return (p[0] * jax.random.rademacher(key, p[0].shape,
+                                             dtype=p[0].dtype),)
+
+    keys = [jax.random.fold_in(KEY, i) for i in range(3)]
+    out = fisher_diag(grad_fn, params, keys)
+    assert (np.asarray(out[0]) >= 0).all()
+    # rademacher^2 == 1, so the fisher diagonal is exactly params^2
+    np.testing.assert_allclose(np.asarray(out[0]),
+                               np.asarray(params[0]) ** 2, rtol=1e-6)
+    one = fisher_diag(grad_fn, params, [KEY])
+    g = grad_fn(params, KEY)[0]
+    np.testing.assert_allclose(np.asarray(one[0]), np.asarray(g) ** 2,
+                               rtol=1e-6)
 
 
 # --------------------------------------------------------------------------

@@ -6,16 +6,25 @@ at first import — same pattern as ``test_subprocess_mini_dryrun``) and pin:
 
 * ``run_ranl_sharded`` trajectory parity (<= 1e-6; diagnostics exact)
   against ``run_ranl`` on 1/2/8-device ``("data",)`` meshes, dense and
-  diag curvature;
+  diag curvature — and ``overlap=True`` (the double-buffered loop)
+  exactly equal to the sequential loop;
+* ``run_ranl_sharded2d`` parity: the dense path (whole program sharded,
+  init included — Newton–Schulz projection, no eigh) against
+  ``run_ranl(projection="ns")``, the diag path against the diag oracle;
 * ``run_ranl_batch(mesh=...)`` parity against the unsharded batch engine,
   with the seed axis actually partitioned across devices;
 * ``ranl_llm.train_step(mesh=...)`` parity against the single-device step
   on 1/2/8-device meshes (params to reduction-reorder tolerance);
 * the communication claim, on compiled partitioned HLO via
   ``launch.hlo_analysis``: the core round loop issues exactly ONE
-  param-sized all-reduce per round (plus a region-sized count reduce),
-  and a full ``train_step`` moves one gradient-sized reduction pass total
-  — the ``masked_aggregate`` single-reduction comment as an invariant.
+  param-sized all-reduce per round (plus a region-sized count reduce) —
+  with and without overlap — and a full ``train_step`` moves one
+  gradient-sized reduction pass total — the ``masked_aggregate``
+  single-reduction comment as an invariant;
+* the memory claim, now END TO END: with ``curvature="dense"`` on a 2-D
+  mesh the largest per-device buffer across the WHOLE compiled program
+  (init included) is the (d/n_model, d) panel — no replicated d×d
+  buffer exists at any phase.
 """
 
 import json
@@ -64,7 +73,9 @@ KEY = jax.random.PRNGKey(0)
 
 def test_sharded_single_device_mesh_matches_run_ranl():
     """On a degenerate 1-device mesh the shard_map engine must reproduce
-    run_ranl bit-for-bit (same PRNG stream, same reduction order)."""
+    run_ranl bit-for-bit (same PRNG stream, same reduction order) — and
+    the double-buffered ``overlap=True`` loop must match the sequential
+    one exactly (identical values, only the schedule moves)."""
     prob = make_quadratic(KEY, num_workers=8, dim=48, kappa=80.0,
                           coupling=0.0, num_regions=6, grad_noise=0.1,
                           hess_noise=0.1)
@@ -79,6 +90,15 @@ def test_sharded_single_device_mesh_matches_run_ranl():
     np.testing.assert_array_equal(np.asarray(sh.coverage),
                                   np.asarray(ref.coverage))
     assert sh.tau_star == ref.tau_star
+    ov = run_ranl_sharded(prob, KEY, mesh=mesh, num_rounds=8,
+                          num_regions=6, policy=pol, overlap=True)
+    np.testing.assert_array_equal(np.asarray(ov.xs), np.asarray(sh.xs))
+    np.testing.assert_array_equal(np.asarray(ov.comm_floats),
+                                  np.asarray(sh.comm_floats))
+    np.testing.assert_array_equal(np.asarray(ov.coverage),
+                                  np.asarray(sh.coverage))
+    assert ov.tau_star == sh.tau_star
+    assert ov.tau_covered == sh.tau_covered
 
 
 def test_sharded_mesh_validation_errors():
@@ -94,10 +114,12 @@ def test_sharded_mesh_validation_errors():
 
 def test_sharded2d_single_device_mesh_matches_run_ranl():
     """On a degenerate 1x1 ("data","model") mesh the dimension-sharded
-    engine must reproduce run_ranl (<= 1e-5; the dense solve goes through
-    the blocked factorization, so bit-exactness is not promised) with
-    exact diagnostics — including the fixed tau_star/tau_covered split
-    under an adversarial staleness policy."""
+    engine must reproduce its single-device oracle (<= 1e-5): for dense
+    that is now ``run_ranl(projection="ns")`` — the whole 2-D dense
+    program, init included, runs the matmul-only Newton–Schulz
+    projection, never an eigh — and for diag the diag path.  Diagnostics
+    exact, including the tau_star/tau_covered split under an adversarial
+    staleness policy; ``overlap=True`` exactly equal to sequential."""
     prob = make_quadratic(KEY, num_workers=8, dim=48, kappa=80.0,
                           coupling=0.0, num_regions=6, grad_noise=0.1,
                           hess_noise=0.1)
@@ -110,7 +132,9 @@ def test_sharded2d_single_device_mesh_matches_run_ranl():
                                     heterogeneous=False), "diag")):
         kw = dict(num_rounds=8, num_regions=6, policy=pol, curvature=curv)
         sh = run_ranl_sharded2d(prob, KEY, mesh=mesh, **kw)
-        ref = run_ranl(prob, KEY, use_kernel=(curv == "diag"), **kw)
+        ref = run_ranl(prob, KEY, use_kernel=(curv == "diag"),
+                       projection="ns" if curv == "dense" else "eigh",
+                       **kw)
         assert np.abs(np.asarray(sh.xs) - np.asarray(ref.xs)).max() <= 1e-5
         np.testing.assert_array_equal(np.asarray(sh.comm_floats),
                                       np.asarray(ref.comm_floats))
@@ -120,6 +144,11 @@ def test_sharded2d_single_device_mesh_matches_run_ranl():
         assert sh.tau_covered == ref.tau_covered
         if pol.name == "staleness":
             assert sh.tau_star == 0 and sh.tau_covered >= 1
+        ov = run_ranl_sharded2d(prob, KEY, mesh=mesh, overlap=True, **kw)
+        np.testing.assert_array_equal(np.asarray(ov.xs), np.asarray(sh.xs))
+        np.testing.assert_array_equal(np.asarray(ov.comm_floats),
+                                      np.asarray(sh.comm_floats))
+        assert ov.tau_star == sh.tau_star
 
 
 def test_sharded2d_mesh_validation_errors():
@@ -215,6 +244,74 @@ print(json.dumps(out))
     assert all(b <= 256 for b in hlo["small_in_loop_bytes"]), hlo
 
 
+@pytest.mark.slow
+def test_overlap_sharded_parity_and_hlo():
+    """``overlap=True`` (the double-buffered round loop) on an 8-device
+    ("data",) mesh: trajectories and diagnostics exactly equal to the
+    sequential loop — the pipelining only moves x-independent work into
+    the param-psum window, it never changes a value — and the compiled
+    HLO still issues exactly ONE param-sized all-reduce per round."""
+    code = _PRELUDE + r"""
+from repro.core import (PolicyConfig, make_quadratic, run_ranl_sharded,
+                        lower_ranl_sharded)
+from repro.launch.hlo_analysis import collect_collectives
+
+prob = make_quadratic(KEY, num_workers=8, dim=48, kappa=80.0, coupling=0.0,
+                      num_regions=6, grad_noise=0.1, hess_noise=0.1)
+pol = PolicyConfig(keep_prob=0.5, tau_star=1, heterogeneous=False)
+mesh8 = jax.make_mesh((8,), ('data',))
+out = {}
+kw = dict(num_rounds=12, num_regions=6, policy=pol)
+seq = run_ranl_sharded(prob, KEY, mesh=mesh8, **kw)
+ov = run_ranl_sharded(prob, KEY, mesh=mesh8, overlap=True, **kw)
+out["xs_eq"] = bool((np.asarray(seq.xs) == np.asarray(ov.xs)).all())
+out["comm_eq"] = bool((np.asarray(seq.comm_floats)
+                       == np.asarray(ov.comm_floats)).all())
+out["cov_eq"] = bool((np.asarray(seq.coverage)
+                      == np.asarray(ov.coverage)).all())
+out["tau_eq"] = bool(seq.tau_star == ov.tau_star
+                     and seq.tau_covered == ov.tau_covered)
+seq_d = run_ranl_sharded(prob, KEY, mesh=mesh8, curvature='diag', **kw)
+ov_d = run_ranl_sharded(prob, KEY, mesh=mesh8, curvature='diag',
+                        overlap=True, **kw)
+out["diag_xs_eq"] = bool((np.asarray(seq_d.xs)
+                          == np.asarray(ov_d.xs)).all())
+
+# HLO: pipelining shifts the coverage-count psum across the iteration
+# boundary but never adds a param-sized collective
+D, T = 512, 7
+prob_h = make_quadratic(KEY, num_workers=8, dim=D, kappa=10.0,
+                        coupling=0.0, num_regions=8)
+txt = lower_ranl_sharded(prob_h, KEY, mesh=mesh8, num_rounds=T,
+                         num_regions=8, policy=pol,
+                         overlap=True).compile().as_text()
+recs = collect_collectives(txt, default_trip=1)
+in_loop = [r for r in recs if r.kind == 'all-reduce' and r.multiplier > 1]
+param_sized = [r for r in in_loop if r.operand_bytes >= D * 4]
+out["hlo"] = {
+    "n_param_sized_in_loop": len(param_sized),
+    "param_sized_multipliers": [r.multiplier for r in param_sized],
+    # the count psum may ride in the same (combined) all-reduce as the
+    # contribution psum now that they are independent — allow the tuple
+    "param_sized_bytes_slack": [r.operand_bytes - D * 4
+                                for r in param_sized],
+    "small_in_loop_bytes": [r.operand_bytes for r in in_loop
+                            if r.operand_bytes < D * 4],
+    "rounds": T,
+}
+print(json.dumps(out))
+"""
+    res = _run_subprocess(code)
+    assert res["xs_eq"] and res["comm_eq"] and res["cov_eq"] \
+        and res["tau_eq"], res
+    assert res["diag_xs_eq"], res
+    hlo = res["hlo"]
+    assert hlo["n_param_sized_in_loop"] == 1, hlo
+    assert hlo["param_sized_multipliers"] == [hlo["rounds"]], hlo
+    assert all(0 <= s <= 256 for s in hlo["param_sized_bytes_slack"]), hlo
+    assert all(b <= 256 for b in hlo["small_in_loop_bytes"]), hlo
+
+
 _PRELUDE4 = _PRELUDE.replace("device_count=8", "device_count=4").replace(
     "jax.device_count() == 8", "jax.device_count() == 4")
 
@@ -223,16 +320,21 @@ _PRELUDE4 = _PRELUDE.replace("device_count=8", "device_count=4").replace(
 def test_sharded2d_parity_and_hlo_memory_claims():
     """Dimension-sharded engine on emulated 2-D meshes:
 
-    * trajectory parity vs run_ranl (<= 1e-5) on 2x2 and 1x4
-      ("data","model") meshes, dense AND diag curvature (the 1x4 diag run
-      exercises the fused Pallas kernel on local d-slices);
+    * trajectory parity (<= 1e-5) on 2x2 and 1x4 ("data","model") meshes
+      vs the matching single-device oracle — ``run_ranl(projection="ns")``
+      for dense (the whole sharded dense program, init included, runs the
+      Newton-Schulz projection, never an eigh), the diag oracle for diag
+      (the 1x4 run exercises the fused Pallas kernel on local d-slices);
+    * ``overlap=True`` exactly equal to the sequential loop on the 2x2
+      mesh, both curvatures;
     * worker/dim divisibility guards;
-    * the compiled-HLO memory + communication claims on a 2x2 mesh:
+    * the compiled-HLO memory + communication claims on a 2x2 mesh, for
+      the WHOLE dense program (init included, overlap on and off):
       exactly ONE data-axis param-SHARD all-reduce (d/n_model floats) per
-      round, model-axis solve broadcasts <= d floats each, no in-loop
-      gather-style collectives, and no single per-device buffer at or
-      above d x d x 4 bytes — the largest is the (d/n_model, d) Cholesky
-      row panel (curvature bytes == d^2/n_model, plus block slack).
+      round, model-axis collectives bounded by the NS panel products
+      (never a d x d payload), no in-loop gather-style collectives, and
+      no single per-device buffer above the (d/n_model, d) panel (+ block
+      slack) ANYWHERE in the program — the last replicated O(d^2) is gone.
     """
     code = _PRELUDE4 + r"""
 from repro.core import (PolicyConfig, make_quadratic, run_ranl,
@@ -243,10 +345,11 @@ from repro.launch.mesh import make_engine_mesh
 prob = make_quadratic(KEY, num_workers=8, dim=48, kappa=80.0, coupling=0.0,
                       num_regions=6, grad_noise=0.1, hess_noise=0.1)
 pol = PolicyConfig(keep_prob=0.5, tau_star=1, heterogeneous=False)
-out = {"parity": {}}
+out = {"parity": {}, "overlap": {}}
 for curv in ("dense", "diag"):
     kw = dict(num_rounds=12, num_regions=6, policy=pol, curvature=curv)
-    ref = run_ranl(prob, KEY, use_kernel=False, **kw)
+    ref = run_ranl(prob, KEY, use_kernel=False,
+                   projection="ns" if curv == "dense" else "eigh", **kw)
     for shape in ((2, 2), (1, 4)):
         mesh = make_engine_mesh(*shape)
         sh = run_ranl_sharded2d(prob, KEY, mesh=mesh, **kw)
@@ -260,6 +363,16 @@ for curv in ("dense", "diag"):
             "tau_eq": bool(sh.tau_star == ref.tau_star
                            and sh.tau_covered == ref.tau_covered),
         }
+        if shape == (2, 2):
+            ov = run_ranl_sharded2d(prob, KEY, mesh=mesh, overlap=True,
+                                    **kw)
+            out["overlap"][curv] = {
+                "xs_eq": bool((np.asarray(ov.xs)
+                               == np.asarray(sh.xs)).all()),
+                "comm_eq": bool((np.asarray(ov.comm_floats)
+                                 == np.asarray(sh.comm_floats)).all()),
+                "tau_eq": bool(ov.tau_star == sh.tau_star),
+            }
 
 # divisibility guards
 mesh22 = make_engine_mesh(2, 2)
@@ -274,39 +387,60 @@ try:
     run_ranl_sharded2d(bad_d, KEY, mesh=mesh22, num_rounds=2)
 except ValueError:
     out["bad_dim_raises"] = True
+from repro.core import project_psd_sharded
+out["proj_bad_dim_raises"] = False
+try:
+    project_psd_sharded(jnp.zeros((5, 5)), 0.1, mesh=mesh22)
+except ValueError:
+    out["proj_bad_dim_raises"] = True
 
 # HLO memory + communication claims (compile only, d=512 on a 2x2 mesh:
-# param shard p = 256; N=2 so the per-device problem shard stays < d^2)
-D, T, NM = 512, 7, 2
+# param shard p = 256; N=2 so the per-device problem shard stays < d^2).
+# The dense lowering now covers the WHOLE program — sharded mean-Hessian
+# accumulation, NS projection (NS_IT iterations, panel-product psums),
+# blocked factorization, first Newton step, and the round loop.
+D, T, NM, NS_IT = 512, 7, 2, 12
 prob_h = make_quadratic(KEY, num_workers=2, dim=D, kappa=10.0,
                         coupling=0.0, num_regions=8)
-txt = lower_ranl_sharded2d(prob_h, KEY, mesh=mesh22, num_rounds=T,
-                           num_regions=8, policy=pol).compile().as_text()
-recs = collect_collectives(txt, default_trip=1)
 P_SHARD = D // NM
-in_loop = [r for r in recs if r.multiplier > 1]
-ar = [r for r in in_loop if r.kind == 'all-reduce']
-data_ar = [r for r in ar if r.reduces_over((2, 2), 0)]
-model_ar = [r for r in ar if r.reduces_over((2, 2), 1)]
-out["hlo"] = {
-    "n_in_loop": len(in_loop),
-    "n_ar": len(ar),
-    "n_data_param_shard": len([r for r in data_ar
-                               if r.operand_bytes >= P_SHARD * 4]),
-    "data_param_shard_ok": [
-        (r.operand_bytes, r.multiplier) for r in data_ar
-        if r.operand_bytes >= P_SHARD * 4] == [(P_SHARD * 4, T)],
-    "small_data_bytes": [r.operand_bytes for r in data_ar
-                         if r.operand_bytes < P_SHARD * 4],
-    "model_ar_max_bytes": max([r.operand_bytes for r in model_ar],
-                              default=0),
-    "all_classified": len(data_ar) + len(model_ar) == len(ar),
-    "n_gatherlike_in_loop": len([r for r in in_loop
-                                 if r.kind != 'all-reduce']),
-    "max_array_bytes": max_array_bytes(txt),
-    "panel_bytes": D * D * 4 // NM,
-    "dxd_bytes": D * D * 4,
-}
+out["hlo"] = {}
+for leg, ov in (("seq", False), ("overlap", True)):
+    txt = lower_ranl_sharded2d(prob_h, KEY, mesh=mesh22, num_rounds=T,
+                               num_regions=8, policy=pol, ns_iters=NS_IT,
+                               overlap=ov).compile().as_text()
+    recs = collect_collectives(txt, default_trip=1)
+    in_loop = [r for r in recs if r.multiplier > 1]
+    ar = [r for r in in_loop if r.kind == 'all-reduce']
+    data_ar = [r for r in ar if r.reduces_over((2, 2), 0)]
+    model_ar = [r for r in ar if r.reduces_over((2, 2), 1)]
+    round_model = [r for r in model_ar if r.multiplier == T]
+    ns_model = [r for r in model_ar if r.multiplier == NS_IT]
+    out["hlo"][leg] = {
+        "n_data_param_shard": len([r for r in data_ar
+                                   if r.operand_bytes >= P_SHARD * 4]),
+        # the overlapped loop may legally combine the (Q,) count psum
+        # into the same all-reduce as the contribution psum (they are
+        # independent there), so allow a small slack on the payload
+        "data_param_shard_ok": all(
+            (r.multiplier == T and
+             P_SHARD * 4 <= r.operand_bytes <= P_SHARD * 4 + 256)
+            for r in data_ar if r.operand_bytes >= P_SHARD * 4),
+        "small_data_bytes": [r.operand_bytes for r in data_ar
+                             if r.operand_bytes < P_SHARD * 4],
+        "round_model_max_bytes": max([r.operand_bytes
+                                      for r in round_model], default=0),
+        "ns_model_max_bytes": max([r.operand_bytes for r in ns_model],
+                                  default=0),
+        "n_ns_model": len(ns_model),
+        "model_mults_known": all(r.multiplier in (T, NS_IT)
+                                 for r in model_ar),
+        "all_classified": len(data_ar) + len(model_ar) == len(ar),
+        "n_gatherlike_in_loop": len([r for r in in_loop
+                                     if r.kind != 'all-reduce']),
+        "max_array_bytes": max_array_bytes(txt),
+        "panel_bytes": D * D * 4 // NM,
+        "dxd_bytes": D * D * 4,
+    }
 print(json.dumps(out))
 """
     res = _run_subprocess(code)
@@ -314,22 +448,34 @@ print(json.dumps(out))
         assert r["xs_err"] <= 1e-5, (name, res)
         assert r["cov_err"] == 0.0, (name, res)
         assert r["comm_eq"] and r["tau_eq"], (name, res)
+    for curv, r in res["overlap"].items():
+        assert r["xs_eq"] and r["comm_eq"] and r["tau_eq"], (curv, res)
     assert res["bad_workers_raises"] and res["bad_dim_raises"], res
-    hlo = res["hlo"]
-    # exactly ONE data-axis param-shard all-reduce per round...
-    assert hlo["n_data_param_shard"] == 1 and hlo["data_param_shard_ok"], hlo
-    # ...the only other data-axis reduction is the (Q,) coverage counts...
-    assert all(b <= 256 for b in hlo["small_data_bytes"]), hlo
-    # ...solve broadcasts stay on the model axis at <= d floats each, and
-    # nothing in the loop gathers
-    assert hlo["all_classified"], hlo
-    assert 0 < hlo["model_ar_max_bytes"] <= 512 * 4, hlo
-    assert hlo["n_gatherlike_in_loop"] == 0, hlo
-    # no device holds a d x d curvature buffer: the largest per-device
-    # array is the Cholesky row panel at d^2/n_model (+ block slack)
-    assert hlo["panel_bytes"] <= hlo["max_array_bytes"] \
-        <= hlo["panel_bytes"] + 64 * 1024, hlo
-    assert hlo["max_array_bytes"] < hlo["dxd_bytes"], hlo
+    assert res["proj_bad_dim_raises"], res
+    for leg in ("seq", "overlap"):
+        hlo = res["hlo"][leg]
+        # exactly ONE data-axis param-shard all-reduce per round...
+        assert hlo["n_data_param_shard"] == 1, (leg, hlo)
+        assert hlo["data_param_shard_ok"], (leg, hlo)
+        # ...the only other data-axis reduction is the (Q,) coverage
+        # counts...
+        assert all(b <= 256 for b in hlo["small_data_bytes"]), (leg, hlo)
+        # ...round-loop model-axis collectives stay <= d floats (solve
+        # block broadcasts); the NS-loop panel products move (p, d)
+        # panels but never a full d x d payload, and nothing gathers
+        assert hlo["all_classified"] and hlo["model_mults_known"], \
+            (leg, hlo)
+        assert 0 < hlo["round_model_max_bytes"] <= 512 * 4, (leg, hlo)
+        assert hlo["n_ns_model"] > 0, (leg, hlo)
+        assert hlo["ns_model_max_bytes"] <= 2 * hlo["panel_bytes"], \
+            (leg, hlo)
+        assert hlo["n_gatherlike_in_loop"] == 0, (leg, hlo)
+        # the END-TO-END memory claim, init included: the largest
+        # per-device array anywhere in the program is the (d/n_model, d)
+        # panel (+ block slack) — no replicated d x d buffer exists
+        assert hlo["panel_bytes"] <= hlo["max_array_bytes"] \
+            <= hlo["panel_bytes"] + 64 * 1024, (leg, hlo)
+        assert hlo["max_array_bytes"] < hlo["dxd_bytes"], (leg, hlo)
 
 
 @pytest.mark.slow
