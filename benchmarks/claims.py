@@ -343,6 +343,47 @@ def bench_init_projection(smoke: bool = False):
     ]
 
 
+def bench_hetero(smoke: bool = False):
+    """Closed-loop heterogeneity: simulated time-to-target-loss on the
+    pareto-straggler scenario, static bernoulli vs the
+    resource-proportional controller.
+
+    Both runs share the problem, seed, mean keep fraction (0.5) and τ*=1;
+    the damped Newton step (lr=0.5) makes convergence take ~13 rounds so
+    per-round time differences integrate.  ``us_per_call`` is wall time
+    (the regression gate's perf trajectory); ``derived`` carries the
+    simulated times — the closed loop reallocates regions away from the
+    stragglers and reaches the target in measurably less simulated
+    wall-clock (the bound a test pins at <= 0.8x).
+    """
+    from repro.hetero import make_controller, make_scenario, time_to_target
+    dim, rounds = (32, 30) if smoke else (64, 60)
+    N = 16
+    prob = make_quadratic(KEY, num_workers=N, dim=dim, kappa=100.0,
+                          coupling=0.0, num_regions=8)
+    scen = make_scenario("pareto-stragglers", jax.random.PRNGKey(101), N)
+    pol = PolicyConfig(keep_prob=0.5, tau_star=1, heterogeneous=True)
+    ctrl = make_controller("resource:keep=0.5,tau=1")
+    kw = dict(num_rounds=rounds, num_regions=8, lr=0.5, cost=scen.cost)
+    run_ranl(prob, KEY, policy=pol, **kw)         # compile both paths
+    run_ranl(prob, KEY, controller=ctrl, **kw)
+    res_s, us_s = _timed(lambda: run_ranl(prob, KEY, policy=pol, **kw))
+    res_c, us_c = _timed(lambda: run_ranl(prob, KEY, controller=ctrl, **kw))
+    target = 1e-8 * float(res_s.dist_sq[0])
+    t_s = time_to_target(res_s.dist_sq, res_s.round_time, target)
+    t_c = time_to_target(res_c.dist_sq, res_c.round_time, target)
+    return [
+        {"name": "engine/hetero_static_bernoulli", "us_per_call": us_s,
+         "derived": (f"sim_time_to_1e-8={t_s:.0f};"
+                     f"mean_round_time="
+                     f"{float(np.mean(np.asarray(res_s.round_time))):.0f}")},
+        {"name": "engine/hetero_resource_ctrl", "us_per_call": us_c,
+         "derived": (f"sim_time_to_1e-8={t_c:.0f};"
+                     f"static_sim_time={t_s:.0f};"
+                     f"sim_speedup={t_s / t_c:.2f}x")},
+    ]
+
+
 def bench_overlap(smoke: bool = False):
     """Overlapped (double-buffered) round collectives vs the sequential
     loop on the worker-sharded engine — identical trajectories (the

@@ -147,11 +147,29 @@ class Quadratic:
         return self.A.mean(axis=0)
 
 
+def _worker_het_scales(heterogeneity: float, worker_weights,
+                       num_workers: int):
+    """(N,) per-worker heterogeneity scales.
+
+    ``worker_weights`` (mean-1 data shares, e.g. Dirichlet — see
+    ``repro.hetero.scenarios.dirichlet_weights``) skew the perturbation
+    1/√w per worker: data-poor workers drift further from the consensus
+    objective, the standard non-IID shard reading.  ``None`` keeps the
+    historical uniform scale bit-exactly."""
+    if worker_weights is None:
+        return jnp.full((num_workers,), heterogeneity)
+    w = jnp.asarray(worker_weights)
+    if w.shape != (num_workers,):
+        raise ValueError(f"worker_weights shape {w.shape} != "
+                         f"({num_workers},)")
+    return heterogeneity / jnp.sqrt(jnp.maximum(w, 1e-3))
+
+
 def make_quadratic(key, *, num_workers: int = 16, dim: int = 64,
                    kappa: float = 100.0, mu: float = 1.0,
                    heterogeneity: float = 0.0, grad_noise: float = 0.0,
                    hess_noise: float = 0.0, coupling: float = 1.0,
-                   num_regions: int = 1) -> Quadratic:
+                   num_regions: int = 1, worker_weights=None) -> Quadratic:
     """Shared eigenbasis, eigenvalues logspace(μ … μκ); per-worker Hessian
     and optimum perturbed at rate ``heterogeneity``.
 
@@ -159,9 +177,14 @@ def make_quadratic(key, *, num_workers: int = 16, dim: int = 64,
     block-diagonal Hessian aligned to ``num_regions`` contiguous regions —
     the regime where pruning whole regions leaves kept-region gradients
     unbiased (the paper's Assumption-4 δ-term vanishes and the clean ½-rate
-    is observable); 1.0 gives a fully-coupled dense eigenbasis."""
+    is observable); 1.0 gives a fully-coupled dense eigenbasis.
+
+    ``worker_weights`` (optional (N,) mean-1 data shares) skew the
+    per-worker perturbations 1/√w — Dirichlet non-IID shards; see
+    ``_worker_het_scales``."""
     kq, kb, kp, ke, kq2 = jax.random.split(key, 5)
     d, N = dim, num_workers
+    het = _worker_het_scales(heterogeneity, worker_weights, N)
 
     def block_orthobasis(k):
         """Block-diagonal orthogonal matrix aligned to the region partition."""
@@ -185,13 +208,15 @@ def make_quadratic(key, *, num_workers: int = 16, dim: int = 64,
         blend = (1.0 - coupling) * qb + coupling * qg
         qmat, _ = jnp.linalg.qr(blend)   # re-orthogonalize the blend
 
-    # per-worker multiplicative eigenvalue jitter (keeps PSD, spreads L_i)
-    jit = 1.0 + heterogeneity * jax.random.uniform(
-        kp, (N, d), minval=-0.5, maxval=0.5)
+    # per-worker multiplicative eigenvalue jitter (kept PSD by the floor,
+    # which is a no-op for the uniform heterogeneity <= 1 regime and only
+    # binds for extreme non-IID worker weights)
+    jit = jnp.maximum(1.0 + het[:, None] * jax.random.uniform(
+        kp, (N, d), minval=-0.5, maxval=0.5), 0.05)
     A = jnp.einsum("ij,nj,kj->nik", qmat, jit * eigs, qmat)
 
     b0 = jax.random.normal(kb, (d,))
-    b = b0[None, :] + heterogeneity * jax.random.normal(ke, (N, d))
+    b = b0[None, :] + het[:, None] * jax.random.normal(ke, (N, d))
 
     Abar = A.mean(axis=0)
     x_star = jnp.linalg.solve(Abar, jnp.einsum("nij,nj->i", A, b) / N)
@@ -298,11 +323,14 @@ def _register_problem_pytrees():
 def make_logistic(key, *, num_workers: int = 16, per_worker: int = 128,
                   dim: int = 32, lam: float = 1e-2,
                   heterogeneity: float = 0.0, grad_noise: float = 0.0,
-                  hess_noise: float = 0.0) -> Logistic:
+                  hess_noise: float = 0.0, worker_weights=None) -> Logistic:
+    """``worker_weights``: optional (N,) mean-1 data shares skewing the
+    per-worker distribution shift 1/√w (see ``_worker_het_scales``)."""
     kw, kx, ky, kshift = jax.random.split(key, 4)
     N, n, d = num_workers, per_worker, dim
+    het = _worker_het_scales(heterogeneity, worker_weights, N)
     w_true = jax.random.normal(kw, (d,)) / jnp.sqrt(d)
-    shifts = heterogeneity * jax.random.normal(kshift, (N, 1, d))
+    shifts = het[:, None, None] * jax.random.normal(kshift, (N, 1, d))
     X = jax.random.normal(kx, (N, n, d)) + shifts
     logits = jnp.einsum("nij,j->ni", X, w_true)
     y = jnp.where(jax.random.uniform(ky, (N, n)) < jax.nn.sigmoid(logits),

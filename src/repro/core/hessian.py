@@ -23,6 +23,7 @@ into a real at-scale path.
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -56,7 +57,38 @@ def _ns_sign_step(x):
     return symmetrize(1.5 * x - 0.5 * (x @ (x @ x)))
 
 
-def project_psd_ns(a, mu: float, *, num_iters: int = 60,
+def ns_auto_iters(dim: int, dtype=jnp.float32) -> int:
+    """Newton–Schulz iteration count from the Frobenius-prescaled
+    spectral bound.
+
+    The iterate starts at ``B/‖B‖_F``, and ``‖B‖_F ≤ √d·‖B‖_2``, so every
+    eigenvalue the projection must resolve (relative magnitude ≥ rtol of
+    the spectral norm, anything smaller contributes ≤ |λ−μ|/2 error by
+    construction — see ``project_psd_ns``) starts at ≥ rtol/√d.  The
+    linear phase of the cubic sign map grows a small eigenvalue by ×1.5
+    per step until it reaches O(1), after which convergence is quadratic
+    (a handful of steps).  ``rtol = eps^0.75`` (≈6e-6 in f32) matches the
+    ≤1e-5-vs-eigh accuracy the fixed-count tests pin, so
+
+        iters = ceil(log(√d / rtol) / log 1.5) + 6
+
+    replaces the conservative fixed 60 with a d-aware count (e.g. 41 at
+    d=48, 44 at d=512), capped at 60 so "auto" is never slower than the
+    old default.
+    """
+    rtol = float(jnp.finfo(dtype).eps) ** 0.75
+    linear = math.log(math.sqrt(float(dim)) / rtol) / math.log(1.5)
+    return min(60, max(10, math.ceil(linear) + 6))
+
+
+def resolve_ns_iters(num_iters, dim: int, dtype=jnp.float32) -> int:
+    """``"auto"`` -> ``ns_auto_iters(dim)``; anything else -> int."""
+    if num_iters == "auto":
+        return ns_auto_iters(dim, dtype)
+    return int(num_iters)
+
+
+def project_psd_ns(a, mu: float, *, num_iters: int | str = 60,
                    tol: float | None = None):
     """[A]_μ by matmuls only: Newton–Schulz |·| instead of ``eigh``.
 
@@ -72,10 +104,13 @@ def project_psd_ns(a, mu: float, *, num_iters: int = 60,
 
     ``tol`` (optional) early-exits when the sign iterate moves less than
     ``tol`` in max-norm — same result, fewer matmuls on well-separated
-    spectra.  Matches ``project_psd`` to ≤1e-5 in the regimes pinned by
-    tests/test_core_ranl.py.
+    spectra.  ``num_iters="auto"`` picks the count from the
+    Frobenius-prescaled spectral bound (``ns_auto_iters``) instead of the
+    conservative fixed 60.  Matches ``project_psd`` to ≤1e-5 in the
+    regimes pinned by tests/test_core_ranl.py.
     """
     d = a.shape[0]
+    num_iters = resolve_ns_iters(num_iters, d, a.dtype)
     b = symmetrize(a) - mu * jnp.eye(d, dtype=a.dtype)
     s = jnp.sqrt(jnp.sum(b * b)) + jnp.finfo(a.dtype).tiny
     x0 = b / s
@@ -141,7 +176,7 @@ def _panel_transpose(x_panel, *, axis_name: str, n_model: int):
 
 
 def project_psd_ns_panels(h_panel, mu: float, *, axis_name: str,
-                          n_model: int, num_iters: int = 60):
+                          n_model: int, num_iters: int | str = 60):
     """``project_psd_ns`` over model-axis row panels (shard_map-inner).
 
     ``h_panel``: this device's ``(p, d)`` rows of sym(A).  Same
@@ -152,6 +187,7 @@ def project_psd_ns_panels(h_panel, mu: float, *, axis_name: str,
     Returns this device's rows of [A]_μ.
     """
     p, d = h_panel.shape
+    num_iters = resolve_ns_iters(num_iters, d, h_panel.dtype)
     row_start = jax.lax.axis_index(axis_name) * p
     eye_panel = (jnp.arange(d)[None, :]
                  == (row_start + jnp.arange(p))[:, None]).astype(
@@ -192,7 +228,7 @@ def _sharded_projection_fn(mesh, axis_name: str, n_model: int,
 
 
 def project_psd_sharded(a, mu: float, *, mesh, axis_name: str = "model",
-                        num_iters: int = 60):
+                        num_iters: int | str = 60):
     """[A]_μ with the d×d matrix sharded as row panels over ``axis_name``.
 
     Host-facing wrapper: shard_maps ``project_psd_ns_panels`` over the
@@ -206,7 +242,9 @@ def project_psd_sharded(a, mu: float, *, mesh, axis_name: str = "model",
         raise ValueError(
             f"dim={a.shape[0]} must divide evenly across the {n_model} "
             f"devices of the {axis_name!r} mesh axis")
-    fn = _sharded_projection_fn(mesh, axis_name, n_model, int(num_iters))
+    fn = _sharded_projection_fn(
+        mesh, axis_name, n_model,
+        resolve_ns_iters(num_iters, a.shape[0], a.dtype))
     return fn(symmetrize(a), jnp.asarray(mu, a.dtype))
 
 

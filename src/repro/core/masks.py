@@ -20,6 +20,7 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclass(frozen=True)
@@ -28,8 +29,10 @@ class PolicyConfig:
     keep_prob: float = 0.5       # bernoulli: mean fraction of regions kept
     heterogeneous: bool = True   # vary resources across workers
     keep_k: int = 1              # fixed_k: regions per worker
-    stale_period: int = 0        # staleness: region 0 untrained for this many
-                                 # consecutive rounds out of each period+1
+    stale_period: int = 0        # staleness: the stale_regions untrained for
+                                 # this many consecutive rounds out of each
+                                 # period+1
+    stale_regions: tuple[int, ...] = (0,)   # staleness: which regions starve
     tau_star: int = 0            # 0 = no coverage repair
 
 
@@ -73,14 +76,20 @@ def sample_masks(policy: PolicyConfig, key, t: int | jnp.ndarray,
         q0 = (jnp.arange(N) + t) % Q
         m = jax.nn.one_hot(q0, Q, dtype=bool)
     elif policy.name == "staleness":
-        # adversarial: region 0 untrained except once per (period+1) rounds
+        # adversarial: the stale_regions untrained except once per
+        # (period+1) rounds
+        if policy.stale_regions and max(policy.stale_regions) >= Q:
+            raise ValueError(
+                f"staleness policy names region "
+                f"{max(policy.stale_regions)} but only {Q} regions exist")
         probs = worker_keep_probs(kp, N, policy.keep_prob,
                                   policy.heterogeneous)
         m = jax.random.uniform(jax.random.fold_in(km, t), (N, Q)) \
             < probs[:, None]
         period = policy.stale_period
         train_now = (t % (period + 1)) == period if period else True
-        m = m.at[:, 0].set(jnp.logical_and(m[:, 0], train_now))
+        idx = jnp.asarray(policy.stale_regions, jnp.int32)
+        m = m.at[:, idx].set(jnp.logical_and(m[:, idx], train_now))
     else:
         raise ValueError(f"unknown policy {policy.name}")
     if policy.tau_star:
@@ -88,22 +97,32 @@ def sample_masks(policy: PolicyConfig, key, t: int | jnp.ndarray,
     return m
 
 
-def ensure_coverage(mask, tau_star: int):
+def ensure_coverage(mask, tau_star):
     """Repair mask so every region is covered by >= tau_star workers.
 
     Deterministically assigns workers (q + j) mod N to uncovered regions —
     models the server nudging idle workers, preserving adaptivity elsewhere.
-    ``tau_star`` may not exceed the number of workers: with only N workers
-    the best achievable coverage is N, and silently capping there would let
-    a config promise a τ* the run cannot deliver.
+    A concrete Python ``tau_star`` may not exceed the number of workers:
+    with only N workers the best achievable coverage is N, and silently
+    capping there would let a config promise a τ* the run cannot deliver.
+
+    ``tau_star`` may also be a (Q,) int array of PER-REGION coverage
+    targets (possibly traced — e.g. a staleness-bounded controller forcing
+    only the starved regions).  Array targets are clamped at N instead of
+    raising: a traced value cannot be validated at trace time, and the
+    clamp keeps the repair well-defined round-to-round.
     """
     N, Q = mask.shape
-    if tau_star > N:
-        raise ValueError(
-            f"ensure_coverage: tau_star={tau_star} exceeds num_workers={N} "
-            f"— at most N workers can cover a region")
+    if isinstance(tau_star, (int, np.integer)):
+        if tau_star > N:
+            raise ValueError(
+                f"ensure_coverage: tau_star={tau_star} exceeds "
+                f"num_workers={N} — at most N workers can cover a region")
+        tau = jnp.asarray(tau_star, jnp.int32)
+    else:
+        tau = jnp.minimum(jnp.asarray(tau_star, jnp.int32), N)
     count = mask.sum(axis=0)
-    need = jnp.maximum(tau_star - count, 0)              # (Q,)
+    need = jnp.maximum(tau - count, 0)                   # (Q,)
     j = jnp.arange(N)[:, None]                           # (N, 1)
     q = jnp.arange(Q)[None, :]
     # per-region worker order, with ALREADY-COVERING workers sorted last

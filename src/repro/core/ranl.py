@@ -66,6 +66,19 @@ the original host-loop driver kept below as the semantic oracle — on a
 fixed key; parity tests pin this.  ``projection="ns"`` swaps the init
 eigh for the same Newton–Schulz projection the 2-D engine shards — the
 single-device oracle the 2-D dense parity tests compare against.
+
+Closed-loop heterogeneity (``repro.hetero``): every engine takes
+``controller=`` (a telemetry-driven mask allocator; ``policy=`` is
+wrapped in the bit-exact ``PolicyController`` shim when absent) and
+``cost=`` (a per-worker ``CostModel``; availability dynamics filter the
+sampled masks, and the simulated per-round wall-clock / max-staleness
+traces land in ``RanlResult.round_time`` / ``.max_stale``).  Controller
+state and the telemetry ride the round loop's ``lax.scan`` carry in all
+four engines; in the sharded engines the controller runs replicated on
+the full (N, Q) telemetry — it adds NO collective, the coverage-count
+psum it observes is the one the aggregation already paid, so the
+one-param-sized-psum-per-round HLO invariant is preserved with
+controller state in the carry (pinned in tests).
 """
 
 from __future__ import annotations
@@ -82,7 +95,7 @@ from .aggregation import server_aggregate
 from .hessian import hutchinson_diag, project_diag, project_psd, \
     project_psd_ns, project_psd_ns_panels, running_mean_hessian, \
     solve_projected
-from .masks import PolicyConfig, sample_masks
+from .masks import PolicyConfig
 from .regions import contiguous_regions, expand_mask, region_sizes
 
 
@@ -103,6 +116,12 @@ class RanlResult:
                                # uncovered region is served from C and does
                                # not count against fresh-gradient coverage.
                                # N when every region was always covered.
+    round_time: jnp.ndarray = None   # (T,) simulated wall-clock per round
+                               # (max over participating workers of
+                               # compute+comm under the run's CostModel;
+                               # kept-coordinate counts when none given)
+    max_stale: jnp.ndarray = None    # (T,) max region staleness after each
+                               # round (rounds since last covered)
 
 
 def _init_phase(problem, k_init, *, mu: float, lr: float, curvature: str,
@@ -184,26 +203,79 @@ def _tau_pair(min_counts, min_cov_counts, n_workers: int):
             jnp.minimum(n_cap, min_cov_counts.min()))
 
 
-_ROUND_STATIC = ("num_rounds", "num_regions", "policy", "mu", "lr",
+def _controller_mask(controller, cost, ctrl_state, telem, kt, t,
+                     num_workers: int, num_regions: int):
+    """One controller step + the cost model's availability filter.
+
+    Shared by every engine (scan/batch, 1-D sharded, 2-D sharded,
+    reference).  The availability branch is STATIC (cost metadata), so a
+    cost model without dropout/churn adds no ops and no PRNG use — the
+    PolicyController default path stays bit-identical to the historical
+    ``sample_masks`` call.
+    """
+    from ..hetero.cost import available
+    M, ctrl_state = controller.step(ctrl_state, telem, kt, t,
+                                    num_workers, num_regions)
+    if cost.dropout_prob > 0.0 or cost.churn_period > 0:
+        M = jnp.logical_and(M, available(cost, kt, t)[:, None])
+    return M, ctrl_state
+
+
+def _observe_round(cost, telem, M_full, count_q, sizes_q, t):
+    """Fold one round's observations into the telemetry carry.
+
+    ``M_full``: the round's FULL (N, Q) mask (replicated in the sharded
+    engines — per-worker work needs every row); ``count_q``: the (Q,)
+    coverage counts the aggregation already computed.  Returns the new
+    telemetry, whose ``times``/``stale_q`` feed the per-round wall-clock
+    and max-staleness traces.
+    """
+    from ..hetero.cost import worker_times
+    from ..hetero.controller import next_telemetry
+    work = (M_full * sizes_q[None, :]).sum(axis=1)
+    times = worker_times(cost, work, t)
+    return next_telemetry(telem, count_q, work, times)
+
+
+def _hetero_defaults(problem, policy, controller, cost):
+    """Resolve (controller, cost): wrap a PolicyConfig in the bit-exact
+    shim when no controller is given; default to the uniform cost model."""
+    from ..hetero.controller import as_controller
+    from ..hetero.cost import uniform_cost
+    ctrl = as_controller(policy if controller is None else controller)
+    if cost is None:
+        cost = uniform_cost(problem.num_workers)
+    return ctrl, cost
+
+
+_ROUND_STATIC = ("num_rounds", "num_regions", "controller", "mu", "lr",
                  "curvature", "use_kernel", "interpret", "cho_lower")
 
 
-def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, *, num_rounds: int,
-                 num_regions: int, policy: PolicyConfig, mu: float,
+def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
+                 num_rounds: int, num_regions: int, controller, mu: float,
                  lr: float, curvature: str, use_kernel: bool,
                  interpret: bool | None, cho_lower: bool):
     """Alg. 1 lines 9–23 as one ``lax.scan``; returns the full result set
-    (xs, dist_sq, losses, coverage, comm, tau) as arrays."""
+    (xs, dist_sq, losses, coverage, comm, tau, times, stale) as arrays.
+
+    The scan carry holds (x, C, controller state, telemetry): the
+    controller observes round t−1's coverage counts, per-worker simulated
+    times and staleness counters when allocating round t's mask.
+    """
+    from ..hetero.controller import initial_telemetry
     N, d = problem.num_workers, problem.dim
     Q = num_regions
     region_ids = contiguous_regions(d, Q)
+    sizes_q = region_sizes(region_ids, Q)
     worker_ids = jnp.arange(N)
     grad_pruned = jax.vmap(problem.worker_grad, in_axes=(0, 0, 0))
 
     def body(carry, t):
-        x, C = carry
+        x, C, ctrl_state, telem = carry
         kt = jax.random.fold_in(k_loop, t)
-        M = sample_masks(policy, kt, t, N, Q)            # (N, Q) bool
+        M, ctrl_state = _controller_mask(controller, cost, ctrl_state,
+                                         telem, kt, t, N, Q)  # (N, Q) bool
         Mx = expand_mask(M, region_ids)                  # (N, d) bool
         x_pruned = jnp.where(Mx, x[None, :], 0.0)        # x ⊙ m_i
         gk = jax.random.split(jax.random.fold_in(kt, 7), N)
@@ -221,15 +293,21 @@ def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, *, num_rounds: int,
             else:
                 step = g / project_diag(hdiag, mu)
             x = x - lr * step
+        count_q = M.sum(axis=0)
+        telem = _observe_round(cost, telem, M, count_q, sizes_q, t)
         cov_mean, min_count, min_cov_count = _round_diagnostics(
-            M.any(axis=0), M.sum(axis=0), N)
-        return (x, C), (x, cov_mean, Mx.sum(), min_count, min_cov_count)
+            count_q > 0, count_q, N)
+        return (x, C, ctrl_state, telem), (
+            x, cov_mean, Mx.sum(), min_count, min_cov_count,
+            telem.times.max(), telem.stale_q.max())
 
     x0 = jnp.zeros(d)
     if num_rounds > 0:
         ts = jnp.arange(1, num_rounds + 1)
-        _, (xs_t, cov, comm, min_counts, min_cov_counts) = jax.lax.scan(
-            body, (x1, C0), ts)
+        carry0 = (x1, C0, controller.init_state(N, Q),
+                  initial_telemetry(N, Q))
+        _, (xs_t, cov, comm, min_counts, min_cov_counts, times,
+            stale) = jax.lax.scan(body, carry0, ts)
         xs = jnp.concatenate([jnp.stack([x0, x1]), xs_t], axis=0)
         tau, tau_cov = _tau_pair(min_counts, min_cov_counts, N)
     else:
@@ -238,34 +316,36 @@ def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, *, num_rounds: int,
         comm = jnp.zeros((0,), jnp.int32)
         tau = jnp.asarray(N, jnp.int32)
         tau_cov = jnp.asarray(N, jnp.int32)
+        times = jnp.zeros((0,))
+        stale = jnp.zeros((0,), jnp.int32)
 
     dist = jnp.sum((xs - problem.x_star[None, :]) ** 2, axis=1)
     losses = jax.vmap(problem.loss)(xs)
-    return xs, dist, losses, cov, comm, tau, tau_cov
+    return xs, dist, losses, cov, comm, tau, tau_cov, times, stale
 
 
 _rounds_jit = functools.partial(
     jax.jit, static_argnames=_ROUND_STATIC)(_scan_rounds)
 
-_BATCH_STATIC = ("num_rounds", "num_regions", "policy", "mu", "lr",
+_BATCH_STATIC = ("num_rounds", "num_regions", "controller", "mu", "lr",
                  "curvature", "use_kernel", "interpret", "hutch_samples",
                  "projection", "ns_iters")
 
 
-def _ranl_batch_engine(problem, keys, *, num_rounds, num_regions, policy,
-                       mu, lr, curvature, use_kernel, interpret,
-                       hutch_samples, projection, ns_iters):
+def _ranl_batch_engine(problem, keys, cost, *, num_rounds, num_regions,
+                       controller, mu, lr, curvature, use_kernel,
+                       interpret, hutch_samples, projection, ns_iters):
     def one(key):
         k_init, k_loop = jax.random.split(key)
         x1, C0, cho_c, cho_lower, hdiag = _init_phase(
             problem, k_init, mu=mu, lr=lr, curvature=curvature,
             hutch_samples=hutch_samples, projection=projection,
             ns_iters=ns_iters)
-        return _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag,
+        return _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, cost,
                             num_rounds=num_rounds, num_regions=num_regions,
-                            policy=policy, mu=mu, lr=lr, curvature=curvature,
-                            use_kernel=use_kernel, interpret=interpret,
-                            cho_lower=cho_lower)
+                            controller=controller, mu=mu, lr=lr,
+                            curvature=curvature, use_kernel=use_kernel,
+                            interpret=interpret, cho_lower=cho_lower)
     return jax.vmap(one)(keys)
 
 
@@ -294,9 +374,9 @@ def _worker_sharded_specs(problem, axis_name: str):
     return jax.tree.map(spec, problem)
 
 
-def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, *,
+def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
                          axis_name: str, num_rounds: int, num_regions: int,
-                         policy: PolicyConfig, mu: float, lr: float,
+                         controller, mu: float, lr: float,
                          curvature: str, cho_lower: bool, num_workers: int,
                          overlap: bool):
     """Per-device round loop (runs under ``shard_map``).
@@ -315,29 +395,42 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, *,
     the memory update, diagnostics) is independent work the scheduler can
     run while the all-reduce is in flight.  Same values, same reductions:
     the trajectory is identical to the sequential loop.
+
+    The controller runs REPLICATED: every device steps it on the full
+    (N, Q) telemetry (tiny state, deterministic — all devices agree),
+    exactly like the full-mask sampling below, so closing the loop adds
+    no collective and the one-param-sized-psum-per-round invariant
+    survives with controller state and telemetry in the carry.
     """
+    from ..hetero.cost import worker_times
+    from ..hetero.controller import initial_telemetry, next_telemetry
     N = num_workers                       # global worker count
     d = x1.shape[0]
     Q = num_regions
     region_ids = contiguous_regions(d, Q)
+    sizes_q = region_sizes(region_ids, Q)
     n_local = problem.num_workers         # workers held by this shard
     shard = jax.lax.axis_index(axis_name)
     local_ids = jnp.arange(n_local)
     grad_pruned = jax.vmap(problem.worker_grad, in_axes=(0, 0, 0))
 
-    def sample_round(t):
-        """Everything x-independent about round t: sample the FULL (N, Q)
-        mask and key batch on every device (tiny, and it keeps the PRNG
+    def sample_round(t, ctrl_state, telem):
+        """Everything x-independent about round t: step the controller on
+        the FULL (N, Q) telemetry on every device (tiny, and it keeps the
         stream bit-identical to the single-device engine), slice out this
-        shard's workers, and reduce the coverage counts (Q ints)."""
+        shard's workers, reduce the coverage counts (Q ints), and price
+        the round under the cost model."""
         kt = jax.random.fold_in(k_loop, t)
-        M_full = sample_masks(policy, kt, t, N, Q)
+        M_full, ctrl_state = _controller_mask(controller, cost, ctrl_state,
+                                              telem, kt, t, N, Q)
         gk_full = jax.random.split(jax.random.fold_in(kt, 7), N)
         start = shard * n_local
         M = jax.lax.dynamic_slice_in_dim(M_full, start, n_local)
         gk = jax.lax.dynamic_slice_in_dim(gk_full, start, n_local)
         count_q = jax.lax.psum(M.sum(axis=0), axis_name)
-        return M, gk, count_q
+        work = (M_full * sizes_q[None, :]).sum(axis=1)
+        times = worker_times(cost, work, t)
+        return M, gk, count_q, work, times, ctrl_state
 
     def round_update(x, C, M, gk, count_q):
         """The x-dependent half, up to issuing the round's ONE param-sized
@@ -371,63 +464,73 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, *,
             count_q > 0, count_q, N)
         return comm, cov_mean, min_count, min_cov_count
 
+    ctrl_state0 = controller.init_state(N, Q)
+    telem0 = initial_telemetry(N, Q)
     if overlap:
         def body(carry, t):
-            x, C, M, gk, count_q = carry
+            x, C, ctrl_state, telem, M, gk, count_q, work, times = carry
             g, C, Mx = round_update(x, C, M, gk, count_q)   # psum issued
-            # overlap window: round t+1's sampling + count psum and round
-            # t's memory/diagnostics — none of it touches g
-            nxt = sample_round(t + 1)
+            # overlap window: fold round t's observations into the
+            # telemetry, sample round t+1 (controller step + count psum),
+            # and compute round t's diagnostics — none of it touches g
+            telem = next_telemetry(telem, count_q, work, times)
+            nxt = sample_round(t + 1, ctrl_state, telem)
             comm, cov_mean, min_count, min_cov_count = diagnostics(
                 Mx, count_q)
             x = finish_step(x, g)             # first consumer of the psum
-            return (x, C) + nxt, (x, cov_mean, comm, min_count,
-                                  min_cov_count)
+            return (x, C, nxt[-1], telem) + nxt[:-1], (
+                x, cov_mean, comm, min_count, min_cov_count,
+                telem.times.max(), telem.stale_q.max())
 
-        init_carry = (x1, C0) + sample_round(1)
+        nxt0 = sample_round(1, ctrl_state0, telem0)
+        init_carry = (x1, C0, nxt0[-1], telem0) + nxt0[:-1]
     else:
         def body(carry, t):
-            x, C = carry
-            M, gk, count_q = sample_round(t)
+            x, C, ctrl_state, telem = carry
+            M, gk, count_q, work, times, ctrl_state = sample_round(
+                t, ctrl_state, telem)
             g, C, Mx = round_update(x, C, M, gk, count_q)
             x = finish_step(x, g)
+            telem = next_telemetry(telem, count_q, work, times)
             comm, cov_mean, min_count, min_cov_count = diagnostics(
                 Mx, count_q)
-            return (x, C), (x, cov_mean, comm, min_count, min_cov_count)
+            return (x, C, ctrl_state, telem), (
+                x, cov_mean, comm, min_count, min_cov_count,
+                telem.times.max(), telem.stale_q.max())
 
-        init_carry = (x1, C0)
+        init_carry = (x1, C0, ctrl_state0, telem0)
 
     ts = jnp.arange(1, num_rounds + 1)
-    _, (xs_t, cov, comm, min_counts, min_cov_counts) = jax.lax.scan(
-        body, init_carry, ts)
+    _, (xs_t, cov, comm, min_counts, min_cov_counts, times,
+        stale) = jax.lax.scan(body, init_carry, ts)
     xs = jnp.concatenate([jnp.stack([jnp.zeros(d), x1]), xs_t], axis=0)
     tau, tau_cov = _tau_pair(min_counts, min_cov_counts, N)
-    return xs, cov, comm, tau, tau_cov
+    return xs, cov, comm, tau, tau_cov, times, stale
 
 
 _SHARDED_STATIC = ("mesh", "axis_name", "num_rounds", "num_regions",
-                   "policy", "mu", "lr", "curvature", "cho_lower",
+                   "controller", "mu", "lr", "curvature", "cho_lower",
                    "num_workers", "overlap")
 
 
-def _sharded_engine(problem, k_loop, x1, C0, cho_c, hdiag, *, mesh,
-                    axis_name, num_rounds, num_regions, policy, mu, lr,
+def _sharded_engine(problem, k_loop, x1, C0, cho_c, hdiag, cost, *, mesh,
+                    axis_name, num_rounds, num_regions, controller, mu, lr,
                     curvature, cho_lower, num_workers, overlap):
     body = functools.partial(
         _sharded_rounds_body, axis_name=axis_name, num_rounds=num_rounds,
-        num_regions=num_regions, policy=policy, mu=mu, lr=lr,
+        num_regions=num_regions, controller=controller, mu=mu, lr=lr,
         curvature=curvature, cho_lower=cho_lower, num_workers=num_workers,
         overlap=overlap)
     in_specs = (_worker_sharded_specs(problem, axis_name),
                 _replicated_specs(k_loop), _replicated_specs(x1),
                 P(axis_name, None), _replicated_specs(cho_c),
-                _replicated_specs(hdiag))
+                _replicated_specs(hdiag), _replicated_specs(cost))
     # outputs are replicated by construction (every x-update flows through
     # the psum); check_rep=False because the replication checker cannot
     # track the axis_index-based worker slicing
     fn = shard_map(body, mesh=mesh, in_specs=in_specs,
-                   out_specs=(P(), P(), P(), P(), P()), check_rep=False)
-    return fn(problem, k_loop, x1, C0, cho_c, hdiag)
+                   out_specs=(P(),) * 7, check_rep=False)
+    return fn(problem, k_loop, x1, C0, cho_c, hdiag, cost)
 
 
 _sharded_jit = functools.partial(
@@ -448,8 +551,9 @@ def _check_mesh(problem, mesh, axis_name: str):
 
 def _sharded_args(problem, key, *, mesh, axis_name, num_rounds, num_regions,
                   policy, mu, lr, curvature, hutchinson_samples, projection,
-                  ns_iters, overlap):
+                  ns_iters, overlap, controller, cost):
     _check_mesh(problem, mesh, axis_name)
+    controller, cost = _hetero_defaults(problem, policy, controller, cost)
     cfg = _config(problem, mu=mu, lr=lr, curvature=curvature,
                   hutchinson_samples=hutchinson_samples,
                   projection=projection)
@@ -459,10 +563,10 @@ def _sharded_args(problem, key, *, mesh, axis_name, num_rounds, num_regions,
         problem, k_init, mu=cfg["mu"], lr=cfg["lr"],
         curvature=cfg["curvature"], hutch_samples=hutch,
         projection=projection, ns_iters=ns_iters)
-    args = (problem, k_loop, x1, C0, cho_c, hdiag)
+    args = (problem, k_loop, x1, C0, cho_c, hdiag, cost)
     static = dict(mesh=mesh, axis_name=axis_name,
                   num_rounds=int(num_rounds), num_regions=int(num_regions),
-                  policy=policy, cho_lower=cho_lower,
+                  controller=controller, cho_lower=cho_lower,
                   num_workers=problem.num_workers, overlap=bool(overlap),
                   **cfg)
     return args, static
@@ -474,7 +578,8 @@ def run_ranl_sharded(problem, key, *, mesh, num_rounds: int = 30,
                      mu: float | None = None, curvature: str = "dense",
                      lr: float = 1.0, hutchinson_samples: int = 8,
                      axis_name: str = "data", projection: str = "eigh",
-                     ns_iters: int = 60, overlap: bool = False):
+                     ns_iters: int | str = 60, overlap: bool = False,
+                     controller=None, cost=None):
     """Algorithm 1 with the worker axis sharded across ``mesh`` devices.
 
     The init phase runs replicated (identical to ``run_ranl``, including
@@ -489,6 +594,10 @@ def run_ranl_sharded(problem, key, *, mesh, num_rounds: int = 30,
     tests/test_multidevice.py).  The aggregation is always the pure-jnp
     collective form — ``use_kernel`` has no sharded counterpart.
 
+    ``controller``/``cost`` close the heterogeneity loop exactly as in
+    ``run_ranl`` — the controller steps replicated on every device, so
+    the round-loop collectives are unchanged.
+
     Requires ``num_workers`` divisible by the ``axis_name`` mesh extent.
     """
     if num_rounds <= 0:       # no rounds -> no communication to shard
@@ -497,18 +606,22 @@ def run_ranl_sharded(problem, key, *, mesh, num_rounds: int = 30,
                         num_regions=num_regions, policy=policy, mu=mu,
                         curvature=curvature, lr=lr,
                         hutchinson_samples=hutchinson_samples,
-                        projection=projection, ns_iters=ns_iters)
+                        projection=projection, ns_iters=ns_iters,
+                        controller=controller, cost=cost)
     args, static = _sharded_args(
         problem, key, mesh=mesh, axis_name=axis_name, num_rounds=num_rounds,
         num_regions=num_regions, policy=policy, mu=mu, lr=lr,
         curvature=curvature, hutchinson_samples=hutchinson_samples,
-        projection=projection, ns_iters=ns_iters, overlap=overlap)
-    xs, cov, comm, tau, tau_cov = _sharded_jit(*args, **static)
+        projection=projection, ns_iters=ns_iters, overlap=overlap,
+        controller=controller, cost=cost)
+    xs, cov, comm, tau, tau_cov, times, stale = _sharded_jit(
+        *args, **static)
     dist = jnp.sum((xs - problem.x_star[None, :]) ** 2, axis=1)
     losses = jax.vmap(problem.loss)(xs)
     return RanlResult(xs=xs, dist_sq=dist, losses=losses, coverage=cov,
                       comm_floats=comm, tau_star=int(tau),
-                      tau_covered=int(tau_cov))
+                      tau_covered=int(tau_cov), round_time=times,
+                      max_stale=stale)
 
 
 def lower_ranl_sharded(problem, key, *, mesh, num_rounds: int = 30,
@@ -517,7 +630,8 @@ def lower_ranl_sharded(problem, key, *, mesh, num_rounds: int = 30,
                        mu: float | None = None, curvature: str = "dense",
                        lr: float = 1.0, hutchinson_samples: int = 8,
                        axis_name: str = "data", projection: str = "eigh",
-                       ns_iters: int = 60, overlap: bool = False):
+                       ns_iters: int | str = 60, overlap: bool = False,
+                       controller=None, cost=None):
     """Lower (without running) the sharded round loop.
 
     Returns the ``jax.stages.Lowered`` for the same computation
@@ -525,13 +639,15 @@ def lower_ranl_sharded(problem, key, *, mesh, num_rounds: int = 30,
     partitioned HLO that ``launch.hlo_analysis`` can inventory — the
     one-param-sized-all-reduce-per-round invariant is asserted on it
     (``overlap=True`` included: pipelining moves collectives across
-    iteration boundaries but never adds one).
+    iteration boundaries but never adds one; controller-driven runs
+    included: the controller steps replicated and adds no collective).
     """
     args, static = _sharded_args(
         problem, key, mesh=mesh, axis_name=axis_name, num_rounds=num_rounds,
         num_regions=num_regions, policy=policy, mu=mu, lr=lr,
         curvature=curvature, hutchinson_samples=hutchinson_samples,
-        projection=projection, ns_iters=ns_iters, overlap=overlap)
+        projection=projection, ns_iters=ns_iters, overlap=overlap,
+        controller=controller, cost=cost)
     return _sharded_jit.lower(*args, **static)
 
 
@@ -617,9 +733,9 @@ def _blocked_solve_panels(l_panel, g_local, *, model_axis: str,
     return s
 
 
-def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, *,
+def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
                            data_axis: str, model_axis: str, num_rounds: int,
-                           num_regions: int, policy: PolicyConfig, mu: float,
+                           num_regions: int, controller, mu: float,
                            lr: float, curvature: str, use_kernel: bool,
                            interpret: bool | None, num_workers: int,
                            n_data: int, n_model: int, overlap: bool):
@@ -639,8 +755,12 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, *,
     ``overlap=True`` software-pipelines the loop exactly like the 1-D
     engine: round t+1's mask/key sampling and coverage-count psum run in
     the window between issuing round t's param-shard psum and consuming
-    it in the solve — identical values, identical reductions.
+    it in the solve — identical values, identical reductions.  The
+    controller steps replicated on the full telemetry (see the 1-D body)
+    and adds no collective.
     """
+    from ..hetero.cost import worker_times
+    from ..hetero.controller import initial_telemetry, next_telemetry
     from ..kernels.region_aggregate import local_region_ids
     N, Q = num_workers, num_regions
     d = x1.shape[0]
@@ -661,18 +781,22 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, *,
     # meshes); otherwise the collective jnp form is used.
     kernel_ok = use_kernel and curvature == "diag" and n_data == 1
 
-    def sample_round(t):
-        """Everything x-independent about round t: sample the FULL (N, Q)
-        mask and key batch on every device (tiny, keeps the PRNG stream
-        bit-identical to the single-device engine), slice out this
-        shard's workers, and reduce the coverage counts (Q ints)."""
+    def sample_round(t, ctrl_state, telem):
+        """Everything x-independent about round t: step the controller on
+        the FULL (N, Q) telemetry on every device (tiny, keeps the PRNG
+        stream bit-identical to the single-device engine), slice out this
+        shard's workers, reduce the coverage counts (Q ints), and price
+        the round under the cost model."""
         kt = jax.random.fold_in(k_loop, t)
-        M_full = sample_masks(policy, kt, t, N, Q)
+        M_full, ctrl_state = _controller_mask(controller, cost, ctrl_state,
+                                              telem, kt, t, N, Q)
         gk_full = jax.random.split(jax.random.fold_in(kt, 7), N)
         M = jax.lax.dynamic_slice_in_dim(M_full, wstart, n_local)
         gk = jax.lax.dynamic_slice_in_dim(gk_full, wstart, n_local)
         count_q = jax.lax.psum(M.sum(axis=0), data_axis)
-        return M, gk, count_q
+        work = (M_full * sizes_q[None, :]).sum(axis=1)
+        times = worker_times(cost, work, t)
+        return M, gk, count_q, work, times, ctrl_state
 
     def scatter_rows(vec_loc):
         """Assemble a replicated (d,) vector from local rows — one
@@ -726,59 +850,70 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, *,
             count_q > 0, count_q, N)
         return comm, cov_mean, min_count, min_cov_count
 
+    ctrl_state0 = controller.init_state(N, Q)
+    telem0 = initial_telemetry(N, Q)
     if overlap:
         def body(carry, t):
-            x, C, M, gk, count_q = carry
+            x, C, ctrl_state, telem, M, gk, count_q, work, times = carry
             x_new, C, g_loc = round_update(x, C, M, gk, count_q)
-            # overlap window: round t+1's sampling + count psum and round
-            # t's diagnostics — none of it touches the in-flight psum
-            nxt = sample_round(t + 1)
+            # overlap window: round t's telemetry fold + diagnostics and
+            # round t+1's sampling + count psum — none of it touches the
+            # in-flight psum
+            telem = next_telemetry(telem, count_q, work, times)
+            nxt = sample_round(t + 1, ctrl_state, telem)
             comm, cov_mean, min_count, min_cov_count = diagnostics(count_q)
             if x_new is None:
                 x_new = finish_step(x, g_loc)     # first psum consumer
-            return (x_new, C) + nxt, (x_new, cov_mean, comm, min_count,
-                                      min_cov_count)
+            return (x_new, C, nxt[-1], telem) + nxt[:-1], (
+                x_new, cov_mean, comm, min_count, min_cov_count,
+                telem.times.max(), telem.stale_q.max())
 
-        init_carry = (x1, C0) + sample_round(1)
+        nxt0 = sample_round(1, ctrl_state0, telem0)
+        init_carry = (x1, C0, nxt0[-1], telem0) + nxt0[:-1]
     else:
         def body(carry, t):
-            x, C = carry                # x: (d,) replicated; C: (n_local, p)
-            M, gk, count_q = sample_round(t)
+            x, C, ctrl_state, telem = carry
+            # x: (d,) replicated; C: (n_local, p)
+            M, gk, count_q, work, times, ctrl_state = sample_round(
+                t, ctrl_state, telem)
             x_new, C, g_loc = round_update(x, C, M, gk, count_q)
             if x_new is None:
                 x_new = finish_step(x, g_loc)
+            telem = next_telemetry(telem, count_q, work, times)
             comm, cov_mean, min_count, min_cov_count = diagnostics(count_q)
-            return (x_new, C), (x_new, cov_mean, comm, min_count,
-                                min_cov_count)
+            return (x_new, C, ctrl_state, telem), (
+                x_new, cov_mean, comm, min_count, min_cov_count,
+                telem.times.max(), telem.stale_q.max())
 
-        init_carry = (x1, C0)
+        init_carry = (x1, C0, ctrl_state0, telem0)
 
     ts = jnp.arange(1, num_rounds + 1)
-    _, (xs_t, cov, comm, min_counts, min_cov_counts) = jax.lax.scan(
-        body, init_carry, ts)
+    _, (xs_t, cov, comm, min_counts, min_cov_counts, times,
+        stale) = jax.lax.scan(body, init_carry, ts)
     xs = jnp.concatenate([jnp.stack([jnp.zeros(d), x1]), xs_t], axis=0)
     tau, tau_cov = _tau_pair(min_counts, min_cov_counts, N)
-    return xs, cov, comm, tau, tau_cov
+    return xs, cov, comm, tau, tau_cov, times, stale
 
 
 _SHARDED2D_STATIC = ("mesh", "data_axis", "model_axis", "num_rounds",
-                     "num_regions", "policy", "mu", "lr", "curvature",
+                     "num_regions", "controller", "mu", "lr", "curvature",
                      "use_kernel", "interpret", "num_workers", "n_data",
                      "n_model", "overlap")
 
 
-def _sharded2d_engine(problem, k_loop, x1, C0, hdiag, *, mesh,
+def _sharded2d_engine(problem, k_loop, x1, C0, hdiag, cost, *, mesh,
                       data_axis, model_axis, num_rounds, num_regions,
-                      policy, mu, lr, curvature, use_kernel, interpret,
+                      controller, mu, lr, curvature, use_kernel, interpret,
                       num_workers, n_data, n_model, overlap):
     """Diag-curvature 2-D engine: host-side O(d) init, sharded rounds."""
     from ..launch.shard import ranl2d_pspecs
 
-    def body(problem, k_loop, x1, C0, hdiag):
+    def body(problem, k_loop, x1, C0, hdiag, cost):
         return _sharded2d_rounds_body(
-            problem, k_loop, x1, C0, None, hdiag, data_axis=data_axis,
+            problem, k_loop, x1, C0, None, hdiag, cost,
+            data_axis=data_axis,
             model_axis=model_axis, num_rounds=num_rounds,
-            num_regions=num_regions, policy=policy, mu=mu, lr=lr,
+            num_regions=num_regions, controller=controller, mu=mu, lr=lr,
             curvature=curvature, use_kernel=use_kernel, interpret=interpret,
             num_workers=num_workers, n_data=n_data, n_model=n_model,
             overlap=overlap)
@@ -786,18 +921,19 @@ def _sharded2d_engine(problem, k_loop, x1, C0, hdiag, *, mesh,
     specs = ranl2d_pspecs(problem, worker_axis=data_axis,
                           dim_axis=model_axis)
     in_specs = (specs["problem"], _replicated_specs(k_loop),
-                _replicated_specs(x1), specs["memory"], specs["hdiag"])
+                _replicated_specs(x1), specs["memory"], specs["hdiag"],
+                _replicated_specs(cost))
     fn = shard_map(body, mesh=mesh, in_specs=in_specs,
-                   out_specs=(P(), P(), P(), P(), P()), check_rep=False)
-    return fn(problem, k_loop, x1, C0, hdiag)
+                   out_specs=(P(),) * 7, check_rep=False)
+    return fn(problem, k_loop, x1, C0, hdiag, cost)
 
 
 _sharded2d_jit = functools.partial(
     jax.jit, static_argnames=_SHARDED2D_STATIC)(_sharded2d_engine)
 
 
-def _sharded2d_dense_body(problem, key, *, data_axis, model_axis,
-                          num_rounds, num_regions, policy, mu, lr,
+def _sharded2d_dense_body(problem, key, cost, *, data_axis, model_axis,
+                          num_rounds, num_regions, controller, mu, lr,
                           ns_iters, overlap, num_workers, n_data, n_model):
     """Dense-curvature 2-D program, init INCLUDED (runs under shard_map).
 
@@ -853,34 +989,37 @@ def _sharded2d_dense_body(problem, key, *, data_axis, model_axis,
                                   row_start=row_start, dim=d)
     x1 = x0 - lr * step0
     return _sharded2d_rounds_body(
-        problem, k_loop, x1, g0, chol, None, data_axis=data_axis,
+        problem, k_loop, x1, g0, chol, None, cost, data_axis=data_axis,
         model_axis=model_axis, num_rounds=num_rounds,
-        num_regions=num_regions, policy=policy, mu=mu, lr=lr,
+        num_regions=num_regions, controller=controller, mu=mu, lr=lr,
         curvature="dense", use_kernel=False, interpret=None,
         num_workers=N, n_data=n_data, n_model=n_model, overlap=overlap)
 
 
 _SHARDED2D_DENSE_STATIC = ("mesh", "data_axis", "model_axis", "num_rounds",
-                           "num_regions", "policy", "mu", "lr", "ns_iters",
-                           "overlap", "num_workers", "n_data", "n_model")
+                           "num_regions", "controller", "mu", "lr",
+                           "ns_iters", "overlap", "num_workers", "n_data",
+                           "n_model")
 
 
-def _sharded2d_dense_engine(problem, key, *, mesh, data_axis, model_axis,
-                            num_rounds, num_regions, policy, mu, lr,
-                            ns_iters, overlap, num_workers, n_data,
-                            n_model):
+def _sharded2d_dense_engine(problem, key, cost, *, mesh, data_axis,
+                            model_axis, num_rounds, num_regions,
+                            controller, mu, lr, ns_iters, overlap,
+                            num_workers, n_data, n_model):
     from ..launch.shard import ranl2d_pspecs
     body = functools.partial(
         _sharded2d_dense_body, data_axis=data_axis, model_axis=model_axis,
-        num_rounds=num_rounds, num_regions=num_regions, policy=policy,
-        mu=mu, lr=lr, ns_iters=ns_iters, overlap=overlap,
-        num_workers=num_workers, n_data=n_data, n_model=n_model)
+        num_rounds=num_rounds, num_regions=num_regions,
+        controller=controller, mu=mu, lr=lr, ns_iters=ns_iters,
+        overlap=overlap, num_workers=num_workers, n_data=n_data,
+        n_model=n_model)
     specs = ranl2d_pspecs(problem, worker_axis=data_axis,
                           dim_axis=model_axis)
-    in_specs = (specs["problem"], _replicated_specs(key))
+    in_specs = (specs["problem"], _replicated_specs(key),
+                _replicated_specs(cost))
     fn = shard_map(body, mesh=mesh, in_specs=in_specs,
-                   out_specs=(P(), P(), P(), P(), P()), check_rep=False)
-    return fn(problem, key)
+                   out_specs=(P(),) * 7, check_rep=False)
+    return fn(problem, key, cost)
 
 
 _sharded2d_dense_jit = functools.partial(
@@ -910,18 +1049,19 @@ def _check_mesh2d(problem, mesh, data_axis: str, model_axis: str):
 def _sharded2d_args(problem, key, *, mesh, data_axis, model_axis,
                     num_rounds, num_regions, policy, mu, lr, curvature,
                     use_kernel, hutchinson_samples, ns_iters, overlap,
-                    abstract: bool = False):
+                    controller, cost, abstract: bool = False):
     """-> (jitted_engine, args, static) for the requested curvature.
 
     Dense: the ENTIRE program — init included — is one shard_map'd
-    computation over (problem, key), so lowering it exposes every phase
-    to the HLO memory/communication assertions and nothing replicated
-    ever materializes host-side.  Diag: the O(d)-state Hutchinson init
-    runs host-side exactly as in ``run_ranl`` and only the round loop is
-    shard_map'd (with ``abstract=True`` the init is traced to avals via
-    ``jax.eval_shape`` so lowering pays no compute).
+    computation over (problem, key, cost), so lowering it exposes every
+    phase to the HLO memory/communication assertions and nothing
+    replicated ever materializes host-side.  Diag: the O(d)-state
+    Hutchinson init runs host-side exactly as in ``run_ranl`` and only
+    the round loop is shard_map'd (with ``abstract=True`` the init is
+    traced to avals via ``jax.eval_shape`` so lowering pays no compute).
     """
     n_data, n_model = _check_mesh2d(problem, mesh, data_axis, model_axis)
+    controller, cost = _hetero_defaults(problem, policy, controller, cost)
     cfg = _config(problem, mu=mu, lr=lr, curvature=curvature,
                   hutchinson_samples=hutchinson_samples)
     hutch = cfg.pop("hutch_samples")
@@ -929,12 +1069,14 @@ def _sharded2d_args(problem, key, *, mesh, data_axis, model_axis,
     if cfg["curvature"] == "dense":
         static = dict(mesh=mesh, data_axis=data_axis, model_axis=model_axis,
                       num_rounds=int(num_rounds),
-                      num_regions=int(num_regions), policy=policy,
-                      mu=cfg["mu"], lr=cfg["lr"], ns_iters=int(ns_iters),
+                      num_regions=int(num_regions), controller=controller,
+                      mu=cfg["mu"], lr=cfg["lr"],
+                      ns_iters=ns_iters if ns_iters == "auto"
+                      else int(ns_iters),
                       overlap=bool(overlap),
                       num_workers=problem.num_workers,
                       n_data=n_data, n_model=n_model)
-        return _sharded2d_dense_jit, (problem, key), static
+        return _sharded2d_dense_jit, (problem, key, cost), static
 
     def make_args(problem, key):
         k_init, k_loop = jax.random.split(key)
@@ -949,11 +1091,11 @@ def _sharded2d_args(problem, key, *, mesh, data_axis, model_axis,
         args = make_args(problem, key)
     static = dict(mesh=mesh, data_axis=data_axis, model_axis=model_axis,
                   num_rounds=int(num_rounds), num_regions=int(num_regions),
-                  policy=policy, use_kernel=bool(use_kernel),
+                  controller=controller, use_kernel=bool(use_kernel),
                   interpret=None, num_workers=problem.num_workers,
                   n_data=n_data, n_model=n_model, overlap=bool(overlap),
                   **cfg)
-    return _sharded2d_jit, args, static
+    return _sharded2d_jit, (*args, cost), static
 
 
 def run_ranl_sharded2d(problem, key, *, mesh, num_rounds: int = 30,
@@ -963,7 +1105,8 @@ def run_ranl_sharded2d(problem, key, *, mesh, num_rounds: int = 30,
                        lr: float = 1.0, use_kernel: bool = True,
                        hutchinson_samples: int = 8,
                        data_axis: str = "data", model_axis: str = "model",
-                       ns_iters: int = 60, overlap: bool = False):
+                       ns_iters: int | str = 60, overlap: bool = False,
+                       controller=None, cost=None):
     """Algorithm 1 with workers AND the parameter dimension sharded.
 
     2-D ``(data_axis, model_axis)`` mesh: the worker axis partitions over
@@ -1006,20 +1149,21 @@ def run_ranl_sharded2d(problem, key, *, mesh, num_rounds: int = 30,
                         curvature=curvature, lr=lr,
                         hutchinson_samples=hutchinson_samples,
                         projection="ns" if curvature == "dense" else "eigh",
-                        ns_iters=ns_iters)
+                        ns_iters=ns_iters, controller=controller, cost=cost)
     engine, args, static = _sharded2d_args(
         problem, key, mesh=mesh, data_axis=data_axis,
         model_axis=model_axis, num_rounds=num_rounds,
         num_regions=num_regions, policy=policy, mu=mu, lr=lr,
         curvature=curvature, use_kernel=use_kernel,
         hutchinson_samples=hutchinson_samples, ns_iters=ns_iters,
-        overlap=overlap)
-    xs, cov, comm, tau, tau_cov = engine(*args, **static)
+        overlap=overlap, controller=controller, cost=cost)
+    xs, cov, comm, tau, tau_cov, times, stale = engine(*args, **static)
     dist = jnp.sum((xs - problem.x_star[None, :]) ** 2, axis=1)
     losses = jax.vmap(problem.loss)(xs)
     return RanlResult(xs=xs, dist_sq=dist, losses=losses, coverage=cov,
                       comm_floats=comm, tau_star=int(tau),
-                      tau_covered=int(tau_cov))
+                      tau_covered=int(tau_cov), round_time=times,
+                      max_stale=stale)
 
 
 def lower_ranl_sharded2d(problem, key, *, mesh, num_rounds: int = 30,
@@ -1029,8 +1173,10 @@ def lower_ranl_sharded2d(problem, key, *, mesh, num_rounds: int = 30,
                          lr: float = 1.0, use_kernel: bool = True,
                          hutchinson_samples: int = 8,
                          data_axis: str = "data",
-                         model_axis: str = "model", ns_iters: int = 60,
-                         overlap: bool = False):
+                         model_axis: str = "model",
+                         ns_iters: int | str = 60,
+                         overlap: bool = False, controller=None,
+                         cost=None):
     """Lower (without running) the 2-D sharded program.
 
     Genuinely compile-time: for ``curvature="dense"`` the whole program
@@ -1049,7 +1195,7 @@ def lower_ranl_sharded2d(problem, key, *, mesh, num_rounds: int = 30,
         num_regions=num_regions, policy=policy, mu=mu, lr=lr,
         curvature=curvature, use_kernel=use_kernel,
         hutchinson_samples=hutchinson_samples, ns_iters=ns_iters,
-        overlap=overlap, abstract=True)
+        overlap=overlap, controller=controller, cost=cost, abstract=True)
     return engine.lower(*args, **static)
 
 
@@ -1069,18 +1215,26 @@ def run_ranl(problem, key, *, num_rounds: int = 30, num_regions: int = 8,
              record_every: int = 1, curvature: str = "dense",
              lr: float = 1.0, use_kernel: bool = True,
              hutchinson_samples: int = 8, projection: str = "eigh",
-             ns_iters: int = 60):
+             ns_iters: int | str = 60, controller=None, cost=None):
     """Run Algorithm 1 on a convex problem. Returns RanlResult.
 
     ``curvature="dense"`` (default) keeps the exact Definition-4
     projection — ``projection="eigh"`` (default) via eigenvalue clamping,
     ``projection="ns"`` via the matmul-only Newton–Schulz form
-    (``ns_iters`` steps; the single-device oracle of the dimension-
-    sharded engine's init).  ``"diag"`` uses a Hutchinson diagonal
-    estimate and the fused Pallas update kernel (set ``use_kernel=False``
-    for the pure-jnp oracle).
+    (``ns_iters`` steps or ``"auto"``; the single-device oracle of the
+    dimension-sharded engine's init).  ``"diag"`` uses a Hutchinson
+    diagonal estimate and the fused Pallas update kernel (set
+    ``use_kernel=False`` for the pure-jnp oracle).
+
+    ``controller`` (a ``repro.hetero`` Controller; overrides ``policy``)
+    closes the heterogeneity loop: it allocates each round's mask from
+    the previous round's telemetry.  ``cost`` (a ``CostModel``) prices
+    every round — availability dynamics drop workers from the sampled
+    masks, and ``RanlResult.round_time``/``.max_stale`` carry the
+    simulated wall-clock and staleness traces.
     """
     del record_every  # retained for API compatibility
+    ctrl, cost = _hetero_defaults(problem, policy, controller, cost)
     cfg = _config(problem, mu=mu, lr=lr, curvature=curvature,
                   hutchinson_samples=hutchinson_samples,
                   projection=projection)
@@ -1090,14 +1244,15 @@ def run_ranl(problem, key, *, num_rounds: int = 30, num_regions: int = 8,
         problem, k_init, mu=cfg["mu"], lr=cfg["lr"],
         curvature=cfg["curvature"], hutch_samples=hutch,
         projection=projection, ns_iters=ns_iters)
-    xs, dist, losses, cov, comm, tau, tau_cov = _rounds_jit(
-        problem, k_loop, x1, C0, cho_c, hdiag,
+    xs, dist, losses, cov, comm, tau, tau_cov, times, stale = _rounds_jit(
+        problem, k_loop, x1, C0, cho_c, hdiag, cost,
         num_rounds=int(num_rounds), num_regions=int(num_regions),
-        policy=policy, use_kernel=bool(use_kernel),
+        controller=ctrl, use_kernel=bool(use_kernel),
         interpret=None, cho_lower=cho_lower, **cfg)
     return RanlResult(xs=xs, dist_sq=dist, losses=losses, coverage=cov,
                       comm_floats=comm, tau_star=int(tau),
-                      tau_covered=int(tau_cov))
+                      tau_covered=int(tau_cov), round_time=times,
+                      max_stale=stale)
 
 
 def run_ranl_batch(problem, keys, *, num_rounds: int = 30,
@@ -1107,7 +1262,7 @@ def run_ranl_batch(problem, keys, *, num_rounds: int = 30,
                    lr: float = 1.0, use_kernel: bool = True,
                    hutchinson_samples: int = 8, mesh=None,
                    axis_name: str = "data", projection: str = "eigh",
-                   ns_iters: int = 60):
+                   ns_iters: int | str = 60, controller=None, cost=None):
     """Batched multi-seed runs: one compilation, vmapped over ``keys``.
 
     ``keys``: (B,)-stacked PRNG keys (``jax.random.split(key, B)``).
@@ -1118,7 +1273,12 @@ def run_ranl_batch(problem, keys, *, num_rounds: int = 30,
     mesh's ``axis_name`` axis (the problem is replicated): B independent
     runs execute B/n_dev-per-device with zero cross-run communication.
     Requires B divisible by the axis extent.
+
+    ``controller``/``cost`` close the heterogeneity loop per seed (each
+    vmapped run carries its own controller state and telemetry);
+    ``round_time``/``max_stale`` come back (B, T)-shaped.
     """
+    ctrl, cost = _hetero_defaults(problem, policy, controller, cost)
     keys = jnp.asarray(keys)
     if mesh is not None:
         if axis_name not in mesh.axis_names:
@@ -1131,32 +1291,41 @@ def run_ranl_batch(problem, keys, *, num_rounds: int = 30,
                 f"across the {n_dev} devices of the {axis_name!r} axis")
         keys = jax.device_put(keys, NamedSharding(mesh, P(axis_name)))
         problem = jax.device_put(problem, NamedSharding(mesh, P()))
+        cost = jax.device_put(cost, NamedSharding(mesh, P()))
     cfg = _config(problem, mu=mu, lr=lr, curvature=curvature,
                   hutchinson_samples=hutchinson_samples,
                   projection=projection)
-    xs, dist, losses, cov, comm, tau, tau_cov = _batch_jit(
-        problem, keys, num_rounds=int(num_rounds),
-        num_regions=int(num_regions), policy=policy,
+    xs, dist, losses, cov, comm, tau, tau_cov, times, stale = _batch_jit(
+        problem, keys, cost, num_rounds=int(num_rounds),
+        num_regions=int(num_regions), controller=ctrl,
         use_kernel=bool(use_kernel), interpret=None,
-        projection=projection, ns_iters=int(ns_iters), **cfg)
+        projection=projection,
+        ns_iters=ns_iters if ns_iters == "auto" else int(ns_iters), **cfg)
     return RanlResult(xs=xs, dist_sq=dist, losses=losses, coverage=cov,
-                      comm_floats=comm, tau_star=tau, tau_covered=tau_cov)
+                      comm_floats=comm, tau_star=tau, tau_covered=tau_cov,
+                      round_time=times, max_stale=stale)
 
 
 def run_ranl_reference(problem, key, *, num_rounds: int = 30,
                        num_regions: int = 8,
                        policy: PolicyConfig = PolicyConfig(),
-                       mu: float | None = None, record_every: int = 1):
+                       mu: float | None = None, record_every: int = 1,
+                       controller=None, cost=None):
     """Original host-loop driver (re-traces every round).
 
     Kept as the semantic oracle: ``run_ranl`` must reproduce its trajectory
     on a fixed key, and the engine-speedup benchmark measures against it.
+    ``controller``/``cost`` run the same closed loop eagerly, so the
+    compiled engines' telemetry threading has a host-loop oracle too.
     """
     del record_every
+    from ..hetero.controller import initial_telemetry
+    ctrl, cost = _hetero_defaults(problem, policy, controller, cost)
     mu = problem.mu if mu is None else mu
     N, d = problem.num_workers, problem.dim
     Q = num_regions
     region_ids = contiguous_regions(d, Q)
+    sizes_q = region_sizes(region_ids, Q)
     k_init, k_loop = jax.random.split(key)
 
     x0 = jnp.zeros(d)
@@ -1172,10 +1341,13 @@ def run_ranl_reference(problem, key, *, num_rounds: int = 30,
 
     xs = [x0, x]
     min_cov, min_cov_covered = N, N
-    cov_hist, comm_hist = [], []
+    cov_hist, comm_hist, time_hist, stale_hist = [], [], [], []
+    ctrl_state = ctrl.init_state(N, Q)
+    telem = initial_telemetry(N, Q)
     for t in range(1, num_rounds + 1):
         kt = jax.random.fold_in(k_loop, t)
-        M = sample_masks(policy, kt, t, N, Q)            # (N, Q) bool
+        M, ctrl_state = _controller_mask(ctrl, cost, ctrl_state, telem,
+                                         kt, t, N, Q)   # (N, Q) bool
         Mx = expand_mask(M, region_ids)                  # (N, d) bool
         x_pruned = jnp.where(Mx, x[None, :], 0.0)        # x ⊙ m_i
         gk = jax.random.split(jax.random.fold_in(kt, 7), N)
@@ -1184,10 +1356,14 @@ def run_ranl_reference(problem, key, *, num_rounds: int = 30,
         x = x - solve_projected(H_mu, g)
         xs.append(x)
 
+        count_q = M.sum(axis=0)
+        telem = _observe_round(cost, telem, M, count_q, sizes_q, t)
         cov_mean, min_count, min_cov_count = _round_diagnostics(
-            M.any(axis=0), M.sum(axis=0), N)
+            count_q > 0, count_q, N)
         cov_hist.append(cov_mean)
         comm_hist.append(Mx.sum())                       # uplink floats
+        time_hist.append(telem.times.max())
+        stale_hist.append(telem.stale_q.max())
         min_cov = min(min_cov, int(min_count))
         min_cov_covered = min(min_cov_covered, int(min_cov_count))
 
@@ -1197,4 +1373,6 @@ def run_ranl_reference(problem, key, *, num_rounds: int = 30,
     return RanlResult(xs=xs, dist_sq=dist, losses=losses,
                       coverage=jnp.stack(cov_hist),
                       comm_floats=jnp.stack(comm_hist),
-                      tau_star=min_cov, tau_covered=min_cov_covered)
+                      tau_star=min_cov, tau_covered=min_cov_covered,
+                      round_time=jnp.stack(time_hist),
+                      max_stale=jnp.stack(stale_hist))

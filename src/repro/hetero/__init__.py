@@ -1,0 +1,33 @@
+"""Closed-loop heterogeneity subsystem: cost models, cluster scenarios,
+and telemetry-driven mask controllers (see ROADMAP / README
+"Heterogeneity scenarios")."""
+
+from .controller import (  # noqa: F401
+    Controller,
+    PolicyController,
+    ResourceProportionalController,
+    StalenessBoundedController,
+    Telemetry,
+    as_controller,
+    initial_telemetry,
+    make_controller,
+    next_telemetry,
+)
+from .cost import (  # noqa: F401
+    CostModel,
+    available,
+    capacity,
+    pareto_cost,
+    round_time,
+    time_to_target,
+    uniform_cost,
+    with_availability,
+    worker_times,
+)
+from .scenarios import (  # noqa: F401
+    SCENARIOS,
+    Scenario,
+    dirichlet_weights,
+    make_scenario,
+    scenario_problem,
+)

@@ -1,0 +1,239 @@
+"""Closed-loop mask controllers: telemetry in, next round's (N, Q) mask out.
+
+The open-loop policies in ``core.masks`` draw every round's mask from the
+same distribution no matter what happened; a ``Controller`` instead maps
+*observed* telemetry — per-worker simulated round times, per-region
+coverage counts, per-region staleness counters — to the next round's mask,
+optionally carrying state (e.g. an EMA throughput estimate) between
+rounds.  This is the feedback loop the paper's "adaptive allocation of
+training regions" needs to actually adapt.
+
+Trace-safety contract (mirrors ``core.masks``): controllers are FROZEN,
+HASHABLE dataclasses (they ride the engines' jit static args), their
+state and the telemetry are fixed-shape pytrees (they ride the
+``lax.scan`` carry), and ``step`` must accept a traced round index ``t``
+— fold it into the PRNG key or use it arithmetically, never as a Python
+branch.  ``num_workers``/``num_regions`` are static.
+
+The ``PolicyController`` shim wraps any existing ``PolicyConfig``: its
+``step`` ignores telemetry and calls ``sample_masks`` with the exact key
+derivation the engines always used, so every old config is a controller
+too — bit-exactly (parity-pinned in tests/test_hetero.py).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+from ..core.masks import PolicyConfig, ensure_coverage, sample_masks
+
+
+@dataclass(frozen=True)
+class Telemetry:
+    """What the server observed about the previous round.
+
+    ``times``: (N,) simulated per-worker round times; ``work``: (N,)
+    floats each worker trained/uplinked; ``count_q``: (Q,) per-region
+    coverage counts; ``stale_q``: (Q,) rounds since each region was last
+    covered (0 = covered last round).  Before round 1 the init round's
+    full participation is reported (``initial_telemetry``).
+    """
+    times: jnp.ndarray
+    work: jnp.ndarray
+    count_q: jnp.ndarray
+    stale_q: jnp.ndarray
+
+
+jax.tree_util.register_dataclass(
+    Telemetry, ("times", "work", "count_q", "stale_q"), ())
+
+
+def initial_telemetry(num_workers: int, num_regions: int) -> Telemetry:
+    """Telemetry as of the (full-participation, untimed) init round."""
+    return Telemetry(times=jnp.zeros((num_workers,)),
+                     work=jnp.zeros((num_workers,)),
+                     count_q=jnp.full((num_regions,), num_workers,
+                                      jnp.int32),
+                     stale_q=jnp.zeros((num_regions,), jnp.int32))
+
+
+def next_telemetry(prev: Telemetry, count_q, work, times) -> Telemetry:
+    """Fold one observed round in: staleness resets where covered, ages
+    everywhere else.  Single source of truth for every engine."""
+    stale_q = jnp.where(count_q > 0, 0, prev.stale_q + 1).astype(jnp.int32)
+    return Telemetry(times=jnp.asarray(times, jnp.float32),
+                     work=jnp.asarray(work, jnp.float32),
+                     count_q=jnp.asarray(count_q, jnp.int32),
+                     stale_q=stale_q)
+
+
+@runtime_checkable
+class Controller(Protocol):
+    def init_state(self, num_workers: int, num_regions: int):
+        """-> state pytree (fixed shapes; rides the scan carry)."""
+        ...
+
+    def step(self, state, telem: Telemetry, key, t, num_workers: int,
+             num_regions: int):
+        """-> (bool (N, Q) mask for round t, new state).  ``t`` may be
+        traced; ``key`` is the round key (``fold_in(k_loop, t)``)."""
+        ...
+
+
+@dataclass(frozen=True)
+class PolicyController:
+    """Shim: any open-loop ``PolicyConfig`` as a (stateless) controller.
+
+    ``step`` reproduces the engines' historical call exactly —
+    ``sample_masks(policy, key, t, N, Q)`` on the unmodified round key —
+    so trajectories are bit-identical to the pre-controller engines.
+    """
+    policy: PolicyConfig = PolicyConfig()
+
+    def init_state(self, num_workers: int, num_regions: int):
+        return ()
+
+    def step(self, state, telem, key, t, num_workers: int,
+             num_regions: int):
+        return sample_masks(self.policy, key, t, num_workers,
+                            num_regions), state
+
+
+@dataclass(frozen=True)
+class ResourceProportionalController:
+    """Keep budgets ∝ estimated worker throughput (EMA-tracked).
+
+    State: (N,) throughput estimates (floats/time), initialized uniform.
+    Each round the observed ``work/times`` ratio updates the estimate of
+    every worker that actually participated (EMA with weight ``ema``);
+    keep probabilities are then allocated proportionally —
+
+        p_i = keep_prob · N · thr_i / Σ thr   (clipped to [min_keep, 1])
+
+    — so the cluster-mean keep fraction stays ``keep_prob`` while slow
+    workers train few regions and fast workers many, which shrinks the
+    synchronous round's max-over-workers time.  Coverage is repaired to
+    ``tau_star`` exactly like the open-loop policies.
+    """
+    keep_prob: float = 0.5
+    tau_star: int = 1
+    ema: float = 0.5
+    min_keep: float = 0.05
+
+    def init_state(self, num_workers: int, num_regions: int):
+        return jnp.ones((num_workers,))
+
+    def step(self, state, telem, key, t, num_workers: int,
+             num_regions: int):
+        N, Q = num_workers, num_regions
+        observed = telem.work > 0
+        est = telem.work / jnp.maximum(telem.times, 1e-12)
+        thr = jnp.where(observed,
+                        (1.0 - self.ema) * state + self.ema * est, state)
+        probs = self.keep_prob * N * thr / jnp.maximum(thr.sum(), 1e-12)
+        probs = jnp.clip(probs, self.min_keep, 1.0)
+        u = jax.random.uniform(jax.random.fold_in(key, 3), (N, Q))
+        m = u < probs[:, None]
+        if self.tau_star:
+            m = ensure_coverage(m, self.tau_star)
+        return m, thr
+
+
+@dataclass(frozen=True)
+class StalenessBoundedController:
+    """Base policy + a hard staleness bound.
+
+    Samples the base ``PolicyConfig``'s mask each round, then forces
+    coverage (via the per-region form of ``ensure_coverage``) for every
+    region whose staleness counter has reached ``max_stale`` — under
+    full worker availability no region ever goes ≥ ``max_stale + 1``
+    rounds untrained, bounding the paper's Lemma-4 delay term κ_t by
+    construction while leaving the base policy's adaptivity untouched
+    elsewhere.  Under a cost model with dropout/churn the bound is
+    best-effort: availability filters masks AFTER the controller (an
+    offline worker cannot be nudged — see ``_controller_mask``), so the
+    forced worker may itself be dropped and staleness can exceed the
+    bound until an available worker is assigned.
+    """
+    base: PolicyConfig = PolicyConfig()
+    max_stale: int = 4
+
+    def init_state(self, num_workers: int, num_regions: int):
+        return ()
+
+    def step(self, state, telem, key, t, num_workers: int,
+             num_regions: int):
+        m = sample_masks(self.base, key, t, num_workers, num_regions)
+        forced = (telem.stale_q >= self.max_stale).astype(jnp.int32)
+        tau_q = jnp.maximum(self.base.tau_star, forced)
+        return ensure_coverage(m, tau_q), state
+
+
+def as_controller(policy_or_controller) -> Controller:
+    """PolicyConfig -> shim; controllers pass through."""
+    if isinstance(policy_or_controller, PolicyConfig):
+        return PolicyController(policy_or_controller)
+    if isinstance(policy_or_controller, Controller):
+        return policy_or_controller
+    raise TypeError(f"not a PolicyConfig or Controller: "
+                    f"{policy_or_controller!r}")
+
+
+def parse_spec_params(body: str, what: str = "controller") -> dict:
+    """``"k=v,k=v"`` -> dict — the shared grammar of controller AND
+    scenario spec strings (``make_controller`` / ``make_scenario``)."""
+    out = {}
+    if body:
+        for pair in body.split(","):
+            k, sep, v = pair.partition("=")
+            if not sep or not k:
+                raise ValueError(f"bad {what} parameter {pair!r} "
+                                 f"(expected key=value)")
+            out[k.strip()] = v.strip()
+    return out
+
+
+def make_controller(spec) -> Controller:
+    """Build a controller from a CLI/CI string (or pass one through).
+
+    Grammar: ``name[:key=value,...]`` —
+
+    * ``policy`` / ``policy:name=bernoulli,keep=0.5,tau=1,het=1`` — the
+      open-loop shim (any ``PolicyConfig`` policy name);
+    * ``resource`` / ``resource:keep=0.5,tau=1,ema=0.5,min_keep=0.05`` —
+      resource-proportional allocation;
+    * ``staleness-bounded`` / ``staleness-bounded:s=4,keep=0.5,tau=1`` —
+      base bernoulli policy with the hard staleness bound ``s``.
+    """
+    if isinstance(spec, (PolicyController, ResourceProportionalController,
+                         StalenessBoundedController)):
+        return spec
+    if isinstance(spec, PolicyConfig):
+        return PolicyController(spec)
+    name, _, body = str(spec).partition(":")
+    p = parse_spec_params(body)
+    if name == "policy":
+        return PolicyController(PolicyConfig(
+            name=p.get("name", "bernoulli"),
+            keep_prob=float(p.get("keep", 0.5)),
+            heterogeneous=bool(int(p.get("het", 1))),
+            tau_star=int(p.get("tau", 1))))
+    if name == "resource":
+        return ResourceProportionalController(
+            keep_prob=float(p.get("keep", 0.5)),
+            tau_star=int(p.get("tau", 1)),
+            ema=float(p.get("ema", 0.5)),
+            min_keep=float(p.get("min_keep", 0.05)))
+    if name == "staleness-bounded":
+        return StalenessBoundedController(
+            base=PolicyConfig(keep_prob=float(p.get("keep", 0.5)),
+                              heterogeneous=bool(int(p.get("het", 1))),
+                              tau_star=int(p.get("tau", 1))),
+            max_stale=int(p.get("s", 4)))
+    raise ValueError(
+        f"unknown controller {name!r} (expected policy | resource | "
+        f"staleness-bounded)")

@@ -1,0 +1,178 @@
+"""Per-worker cost models and the simulated wall-clock of a round.
+
+The paper's adaptivity claim is about *time*, not rounds: a policy that
+keeps coverage high but always waits on the slowest worker converges fast
+per round and slowly per second.  ``CostModel`` gives every worker a
+compute rate (gradient floats / time unit), an uplink bandwidth
+(transmitted floats / time unit), and an availability/capacity trace, so
+an engine run can report the simulated wall-clock a real heterogeneous
+cluster would have paid:
+
+    time_i(t) = overhead + work_i / (rate_i · capacity_i(t)) + work_i / bw_i
+    round_time(t) = max over participating workers i of time_i(t)
+
+where ``work_i`` is the number of parameter coordinates worker i trains
+and uplinks this round (its mask row expanded to coordinates).  The
+server is synchronous — it waits for the slowest participant — which is
+exactly the regime where resource-proportional allocation wins.
+
+Trace-safety contract (the engines fold this into their ``lax.scan``
+bodies): the array fields (``compute_rate``, ``bandwidth``) are pytree
+data and the scalar knobs (dropout / churn / diurnal parameters) are
+STATIC metadata, so ``if cost.dropout_prob > 0`` is a Python branch at
+trace time — a cost model with no availability dynamics adds no PRNG
+consumption and no ops to the compiled round, keeping default runs
+bit-identical to the pre-cost engines.  ``t`` may be traced everywhere.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class CostModel:
+    """Per-worker resource description; see the module docstring.
+
+    ``compute_rate``/``bandwidth``: (N,) positive floats (floats
+    processed / transmitted per simulated time unit; ``jnp.inf``
+    bandwidth models free communication).  The remaining fields are
+    static trace parameters:
+
+    * ``overhead``: fixed per-round latency each participating worker
+      pays (scheduling / handshake);
+    * ``dropout_prob``: i.i.d. per-round worker unavailability;
+    * ``churn_period``/``churn_cohorts``: rotating-cohort churn — the
+      workers with ``i % churn_cohorts == (t // churn_period) %
+      churn_cohorts`` are offline for that window (workers leave and
+      rejoin, deterministic in t);
+    * ``diurnal_period``/``diurnal_amplitude``: sinusoidal capacity,
+      staggered phase per worker — ``capacity_i(t) = 1 + amp ·
+      sin(2π(t/period + i/N))``, floored at 0.05.
+    """
+    compute_rate: jnp.ndarray    # (N,)
+    bandwidth: jnp.ndarray       # (N,)
+    overhead: float = 0.0
+    dropout_prob: float = 0.0
+    churn_period: int = 0
+    churn_cohorts: int = 4
+    diurnal_period: int = 0
+    diurnal_amplitude: float = 0.0
+
+    @property
+    def num_workers(self) -> int:
+        return self.compute_rate.shape[0]
+
+
+jax.tree_util.register_dataclass(
+    CostModel, ("compute_rate", "bandwidth"),
+    ("overhead", "dropout_prob", "churn_period", "churn_cohorts",
+     "diurnal_period", "diurnal_amplitude"))
+
+
+def uniform_cost(num_workers: int, *, rate: float = 1.0,
+                 bandwidth: float = np.inf) -> CostModel:
+    """Homogeneous cluster — the engines' default when no cost model is
+    given (round_time then reports max kept-coordinates per worker, a
+    pure work measure)."""
+    return CostModel(compute_rate=jnp.full((num_workers,), rate),
+                     bandwidth=jnp.full((num_workers,), bandwidth))
+
+
+def pareto_cost(key, num_workers: int, *, alpha: float = 1.2,
+                bandwidth: float = np.inf) -> CostModel:
+    """Heavy-tailed compute rates: rate_i = 1 / Pareto(alpha) sample.
+
+    Most workers run near rate 1.0; a few are order-of-magnitude
+    stragglers — the classic datacenter straggler profile.  Smaller
+    ``alpha`` = heavier tail.
+    """
+    u = jax.random.uniform(key, (num_workers,), minval=1e-4, maxval=1.0)
+    slowdown = (1.0 - u) ** (-1.0 / alpha)        # Pareto >= 1
+    return CostModel(compute_rate=1.0 / slowdown,
+                     bandwidth=jnp.full((num_workers,), bandwidth))
+
+
+def with_availability(cost: CostModel, *, dropout_prob: float = 0.0,
+                      churn_period: int = 0, churn_cohorts: int = 4,
+                      diurnal_period: int = 0,
+                      diurnal_amplitude: float = 0.0) -> CostModel:
+    return replace(cost, dropout_prob=float(dropout_prob),
+                   churn_period=int(churn_period),
+                   churn_cohorts=int(churn_cohorts),
+                   diurnal_period=int(diurnal_period),
+                   diurnal_amplitude=float(diurnal_amplitude))
+
+
+def available(cost: CostModel, key, t) -> jnp.ndarray:
+    """(N,) bool — which workers participate in round ``t``.
+
+    Static no-dynamics models return all-True without consuming any PRNG
+    (a Python branch on static metadata — bit-exactness of default runs
+    depends on this).  ``key`` should be the round key (the engines pass
+    ``fold_in(k_loop, t)``); dropout folds a fixed tag so it never
+    collides with the mask/gradient streams.
+    """
+    N = cost.num_workers
+    avail = None
+    if cost.dropout_prob > 0.0:
+        u = jax.random.uniform(jax.random.fold_in(key, 23), (N,))
+        avail = u >= cost.dropout_prob
+    if cost.churn_period > 0:
+        cohort = jnp.arange(N) % cost.churn_cohorts
+        offline = (t // cost.churn_period) % cost.churn_cohorts
+        churn_ok = cohort != offline
+        avail = churn_ok if avail is None else avail & churn_ok
+    if avail is None:
+        return jnp.ones((N,), bool)
+    return avail
+
+
+def capacity(cost: CostModel, t) -> jnp.ndarray:
+    """(N,) compute-capacity multiplier at round ``t`` (diurnal trace)."""
+    N = cost.num_workers
+    if cost.diurnal_period <= 0 or cost.diurnal_amplitude == 0.0:
+        return jnp.ones((N,))
+    phase = jnp.arange(N) / N
+    wave = jnp.sin(2.0 * jnp.pi * (t / cost.diurnal_period + phase))
+    return jnp.maximum(1.0 + cost.diurnal_amplitude * wave, 0.05)
+
+
+def worker_times(cost: CostModel, work, t) -> jnp.ndarray:
+    """(N,) simulated time per worker for a round.
+
+    ``work``: (N,) floats each worker trains + uplinks (0 for workers
+    with an empty or unavailable mask — they cost nothing; the fixed
+    ``overhead`` applies only to participants).
+    """
+    work = jnp.asarray(work, jnp.float32)
+    rate = cost.compute_rate * capacity(cost, t)
+    per = cost.overhead + work / rate + work / cost.bandwidth
+    return jnp.where(work > 0, per, 0.0)
+
+
+def round_time(cost: CostModel, work, t):
+    """Scalar simulated wall-clock of one synchronous round."""
+    return worker_times(cost, work, t).max()
+
+
+def time_to_target(trace, round_times, target: float) -> float:
+    """Simulated time until ``trace`` first drops to ``target``.
+
+    ``trace``: (T+2,) per-iterate series (``RanlResult.dist_sq`` or
+    ``.losses`` — entries 2.. correspond to rounds 1..T); ``round_times``:
+    (T,) per-round simulated times.  Returns the cumulative simulated
+    time through the first round whose iterate meets the target, or
+    ``inf`` if none does — the time-to-accuracy metric the heterogeneity
+    benchmarks report.
+    """
+    trace = np.asarray(trace)
+    times = np.cumsum(np.asarray(round_times, np.float64))
+    hits = np.nonzero(trace[2:2 + len(times)] <= target)[0]
+    if len(hits) == 0:
+        return float("inf")
+    return float(times[hits[0]])

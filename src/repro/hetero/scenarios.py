@@ -1,0 +1,137 @@
+"""Named cluster scenarios, constructible from a string for CLI/CI use.
+
+A ``Scenario`` bundles everything "the cluster" contributes to a run:
+the per-worker cost/availability model and (for non-IID scenarios) the
+Dirichlet concentration that skews the per-worker data shards.  The
+registry gives each a stable name so a CI matrix leg or a benchmark row
+is one string:
+
+    uniform                 homogeneous workers, always available
+    pareto-stragglers       heavy-tailed compute rates (alpha=1.2)
+    dropout                 i.i.d. per-round unavailability (p=0.2)
+    churn                   rotating cohorts leave/rejoin (period=5, cohorts=4)
+    diurnal                 sinusoidal capacity (period=20, amp=0.8)
+    dirichlet               non-IID data shards (alpha=0.3) on uniform cost
+
+Parameters override with ``name:key=value,...`` — e.g.
+``pareto-stragglers:alpha=1.0`` or ``dropout:p=0.4,alpha=1.5`` (dropout /
+churn / diurnal ride on pareto compute rates when ``alpha`` is given,
+uniform otherwise).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .cost import CostModel, pareto_cost, uniform_cost, with_availability
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """A named cluster: cost/availability model + data-skew knob."""
+    name: str
+    cost: CostModel
+    dirichlet_alpha: float | None = None
+
+
+def dirichlet_weights(key, num_workers: int, alpha: float) -> jnp.ndarray:
+    """(N,) per-worker data-share weights, mean 1 (N · Dirichlet(alpha)).
+
+    Small ``alpha`` concentrates the data on few workers — the standard
+    federated-learning non-IID knob.  Weights feed ``worker_weights`` of
+    the convex problem factories: a worker holding little data gets a
+    proportionally noisier, more idiosyncratic local objective.
+    """
+    g = jax.random.gamma(key, alpha, (num_workers,))
+    return num_workers * g / jnp.maximum(g.sum(), 1e-30)
+
+
+def _base_cost(key, num_workers: int, p: dict) -> CostModel:
+    if "alpha" in p:
+        return pareto_cost(key, num_workers, alpha=float(p["alpha"]))
+    return uniform_cost(num_workers)
+
+
+def _uniform(key, n, p):
+    return Scenario("uniform", uniform_cost(n))
+
+
+def _pareto(key, n, p):
+    return Scenario("pareto-stragglers",
+                    pareto_cost(key, n, alpha=float(p.get("alpha", 1.2))))
+
+
+def _dropout(key, n, p):
+    cost = with_availability(_base_cost(key, n, p),
+                             dropout_prob=float(p.get("p", 0.2)))
+    return Scenario("dropout", cost)
+
+
+def _churn(key, n, p):
+    cost = with_availability(
+        _base_cost(key, n, p),
+        churn_period=int(p.get("period", 5)),
+        churn_cohorts=int(p.get("cohorts", 4)))
+    return Scenario("churn", cost)
+
+
+def _diurnal(key, n, p):
+    cost = with_availability(
+        _base_cost(key, n, p),
+        diurnal_period=int(p.get("period", 20)),
+        diurnal_amplitude=float(p.get("amp", 0.8)))
+    return Scenario("diurnal", cost)
+
+
+def _dirichlet(key, n, p):
+    return Scenario("dirichlet", uniform_cost(n),
+                    dirichlet_alpha=float(p.get("alpha", 0.3)))
+
+
+SCENARIOS = {
+    "uniform": _uniform,
+    "pareto-stragglers": _pareto,
+    "dropout": _dropout,
+    "churn": _churn,
+    "diurnal": _diurnal,
+    "dirichlet": _dirichlet,
+}
+
+
+def make_scenario(spec: str, key, num_workers: int) -> Scenario:
+    """``"name"`` or ``"name:key=value,..."`` -> Scenario (see module
+    docstring for the cookbook)."""
+    from .controller import parse_spec_params
+    name, _, body = str(spec).partition(":")
+    if name not in SCENARIOS:
+        raise ValueError(f"unknown scenario {name!r} (known: "
+                         f"{', '.join(sorted(SCENARIOS))})")
+    return SCENARIOS[name](key, int(num_workers),
+                           parse_spec_params(body, "scenario"))
+
+
+def scenario_problem(scenario: Scenario, key, *, kind: str = "quadratic",
+                     **kwargs):
+    """Build a convex problem shaped by the scenario's data skew.
+
+    For ``dirichlet`` scenarios the per-worker Dirichlet shares become
+    the problem factories' ``worker_weights`` (heterogeneity scaled by
+    1/√share: data-poor workers drift further from the consensus
+    objective); other scenarios build the plain problem.  ``kwargs`` pass
+    through to ``make_quadratic`` / ``make_logistic``.
+    """
+    from ..core.convex import make_logistic, make_quadratic
+    factory = {"quadratic": make_quadratic,
+               "logistic": make_logistic}.get(kind)
+    if factory is None:
+        raise ValueError(f"unknown problem kind {kind!r}")
+    if scenario.dirichlet_alpha is not None:
+        n = kwargs.get("num_workers", 16)
+        w = dirichlet_weights(jax.random.fold_in(key, 101), n,
+                              scenario.dirichlet_alpha)
+        kwargs = dict(kwargs, worker_weights=w)
+        kwargs.setdefault("heterogeneity", 0.5)
+    return factory(key, **kwargs)

@@ -67,6 +67,18 @@ def run(argv=None):
                          "collective inventory), and exit without "
                          "training — the CLI form of the memory/"
                          "communication assertions the engine tests pin")
+    ap.add_argument("--scenario", default="",
+                    help="named cluster scenario (repro.hetero), e.g. "
+                         "'pareto-stragglers' or 'churn:period=5' — prices "
+                         "every round under the per-worker cost model, "
+                         "applies its availability dynamics to the masks, "
+                         "and logs simulated wall-clock (sim_s)")
+    ap.add_argument("--controller", default="",
+                    help="closed-loop mask controller (repro.hetero), "
+                         "e.g. 'resource:keep=0.7' or "
+                         "'staleness-bounded:s=4' — allocates each "
+                         "round's regions from the previous round's "
+                         "telemetry instead of the open-loop policy")
     ap.add_argument("--keep-prob", type=float, default=0.7)
     ap.add_argument("--mu", type=float, default=1e-4)
     ap.add_argument("--lr", type=float, default=1.0)
@@ -80,6 +92,9 @@ def run(argv=None):
         raise SystemExit("--dump-hlo reports the RANL train step; rerun "
                          "with --optimizer ranl (the baseline optimizers "
                          "have no lowered step to analyze here)")
+    if (args.scenario or args.controller) and args.optimizer != "ranl":
+        raise SystemExit("--scenario/--controller drive the RANL "
+                         "region-mask loop; rerun with --optimizer ranl")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -121,6 +136,34 @@ def run(argv=None):
         state = init_state(params, loss_fn, batch0, rcfg, ko, mesh=mesh)
         step_fn = jax.jit(partial(train_step, loss_fn=loss_fn, cfg=rcfg,
                                   mesh=mesh))
+        # closed-loop heterogeneity: controller state + telemetry live
+        # host-side (the training loop is a host loop), each step's mask
+        # allocation is passed into the jitted step via masks=
+        hetero = None
+        if args.scenario or args.controller:
+            from ..hetero import (available, initial_telemetry,
+                                  make_controller, make_scenario,
+                                  next_telemetry, uniform_cost,
+                                  worker_times)
+            from ..optim import region_layout, region_param_counts
+            num_regions, _, _ = region_layout(params)
+            scen = (make_scenario(args.scenario, jax.random.fold_in(ko, 71),
+                                  args.workers)
+                    if args.scenario else None)
+            cost = scen.cost if scen else uniform_cost(args.workers)
+            ctrl = make_controller(
+                args.controller if args.controller
+                else f"policy:keep={args.keep_prob}")
+            sizes_q = region_param_counts(params)
+            hetero = dict(
+                ctrl=ctrl, cost=cost, sizes_q=sizes_q,
+                num_regions=num_regions,
+                ctrl_state=ctrl.init_state(args.workers, num_regions),
+                telem=initial_telemetry(args.workers, num_regions),
+                sim_s=0.0)
+            if scen:
+                print(f"scenario: {scen.name} (controller "
+                      f"{args.controller or 'policy shim'})")
         if args.dump_hlo:
             from .hlo_analysis import module_report
             txt = step_fn.lower(params, state, batch0, ko) \
@@ -135,16 +178,37 @@ def run(argv=None):
         for t in range(args.steps):
             batch = make_batch(cfg, jax.random.fold_in(kd, t + 1),
                                args.batch, args.seq, pattern=args.pattern)
+            masks = None
+            if hetero is not None:
+                kt = jax.random.fold_in(ko, t)
+                masks, hetero["ctrl_state"] = hetero["ctrl"].step(
+                    hetero["ctrl_state"], hetero["telem"], kt, t,
+                    args.workers, hetero["num_regions"])
+                avail = available(hetero["cost"], kt, t)
+                masks = jnp.logical_and(masks, avail[:, None])
             t0 = time.perf_counter()
-            params, state, metrics = step_fn(params, state, batch, ko)
+            params, state, metrics = step_fn(params, state, batch, ko,
+                                             masks=masks)
             metrics = {k: float(v) for k, v in metrics.items()}
             metrics["step_s"] = time.perf_counter() - t0
+            sim_note = ""
+            if hetero is not None:
+                work = (masks * hetero["sizes_q"][None, :]).sum(axis=1)
+                times = worker_times(hetero["cost"], work, t)
+                hetero["telem"] = next_telemetry(
+                    hetero["telem"], masks.sum(axis=0), work, times)
+                metrics["sim_round_s"] = float(times.max())
+                hetero["sim_s"] += metrics["sim_round_s"]
+                metrics["sim_s"] = hetero["sim_s"]
+                metrics["max_stale"] = int(hetero["telem"].stale_q.max())
+                sim_note = (f" sim_s={hetero['sim_s']:.0f} "
+                            f"stale<={metrics['max_stale']}")
             history.append(metrics)
             if t % args.log_every == 0:
                 print(f"step {t:4d} loss={metrics['loss']:.4f} "
                       f"cov={metrics['coverage']:.2f} "
                       f"uplink={metrics['uplink_frac']:.2f} "
-                      f"({metrics['step_s']:.2f}s)")
+                      f"({metrics['step_s']:.2f}s){sim_note}")
     else:
         acfg = AdamWConfig(lr=1e-3)
         state = adamw_init(params, acfg)

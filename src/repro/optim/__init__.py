@@ -12,5 +12,6 @@ from .ranl_llm import (  # noqa: F401
     masked_aggregate,
     per_worker_grads,
     region_layout,
+    region_param_counts,
     train_step,
 )

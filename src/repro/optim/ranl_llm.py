@@ -103,6 +103,26 @@ def region_layout(params):
     return next_glue, num_layers, infos
 
 
+def region_param_counts(params):
+    """(Q,) float32 parameter count per region.
+
+    Region q < num_layers: summed per-layer slice sizes of every stacked
+    layer leaf; glue regions: the whole leaf.  This is the per-region
+    "work" unit the heterogeneity cost models price when the closed-loop
+    controller drives the deep-net path (``launch.train --scenario``).
+    """
+    num_regions, _, infos = region_layout(params)
+    counts = [0] * num_regions
+    for (kind, v), leaf in zip(infos, jax.tree_util.tree_leaves(params)):
+        if kind == "layer":
+            per_layer = leaf.size // leaf.shape[0]
+            for q in range(v):
+                counts[q] += per_layer
+        else:
+            counts[v] += leaf.size
+    return jnp.asarray(counts, jnp.float32)
+
+
 def leaf_masks(masks, infos, protect_glue: bool):
     """masks: (N, Q) bool -> per-leaf broadcastable masks list.
 
@@ -274,7 +294,7 @@ def init_state(params, loss_fn, batch, cfg: RanlLLMConfig, key,
 
 
 def train_step(params, state, batch, rng, *, loss_fn, cfg: RanlLLMConfig,
-               mesh=None, pspecs=None):
+               mesh=None, pspecs=None, masks=None):
     """One RANL round. Returns (new_params, new_state, metrics).
 
     With ``mesh``, the step runs pjit-sharded end to end: the global batch
@@ -285,6 +305,11 @@ def train_step(params, state, batch, rng, *, loss_fn, cfg: RanlLLMConfig,
     all-reduce.  ``pspecs`` optionally carries precomputed trees
     ({"state": ranl_state_pspecs(...), "batch": batch_pspecs(...)});
     omitted entries are derived from ``params``/``batch``.
+
+    ``masks`` (optional bool (num_workers, num_regions)) overrides the
+    internal ``cfg.policy`` draw — the hook the closed-loop heterogeneity
+    controllers use (``launch.train --controller`` keeps controller state
+    host-side across steps and passes each round's allocation in).
     """
     num_regions, num_layer_regions, infos = region_layout(params)
     if mesh is not None:
@@ -302,9 +327,10 @@ def train_step(params, state, batch, rng, *, loss_fn, cfg: RanlLLMConfig,
     if mesh is not None:
         G = _apply_pspecs(G, pspecs["state"]["memory"], mesh)
 
-    mask_key = jax.random.fold_in(rng, state["step"])
-    masks = sample_masks(cfg.policy, mask_key, state["step"],
-                         cfg.num_workers, num_regions)
+    if masks is None:
+        mask_key = jax.random.fold_in(rng, state["step"])
+        masks = sample_masks(cfg.policy, mask_key, state["step"],
+                             cfg.num_workers, num_regions)
     lmasks = leaf_masks(masks, infos, cfg.protect_glue)
 
     g_leaves, c_leaves = [], []

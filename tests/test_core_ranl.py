@@ -98,6 +98,40 @@ def test_project_psd_ns_matches_eigh_across_regimes():
     np.testing.assert_allclose(z, 0.7 * jnp.eye(6), atol=1e-6)
 
 
+def test_project_psd_ns_auto_iters_matches_fixed():
+    """``ns_iters="auto"`` (the Frobenius-prescaled spectral bound) must
+    match the conservative fixed-60 path and the eigh oracle across the
+    same straddling regimes, with a genuinely smaller count at moderate d
+    — and never a larger one."""
+    from repro.core.hessian import ns_auto_iters, resolve_ns_iters
+    for d in (8, 48, 64, 512):
+        auto = ns_auto_iters(d)
+        assert 10 <= auto <= 60, (d, auto)
+    assert ns_auto_iters(64) < 60          # the point: fewer matmuls
+    assert resolve_ns_iters("auto", 64) == ns_auto_iters(64)
+    assert resolve_ns_iters(25, 64) == 25
+    for d, mu, seed in ((8, 0.5, 0), (33, 1.0, 1), (64, 0.3, 2)):
+        a = _straddling_matrix(d, mu, seed)
+        ref = project_psd(a, mu)
+        fixed = project_psd_ns(a, mu)                       # 60 iters
+        auto = project_psd_ns(a, mu, num_iters="auto")
+        assert float(jnp.abs(auto - ref).max()) <= 1e-5, (d, mu)
+        assert float(jnp.abs(auto - fixed).max()) <= 1e-5, (d, mu)
+    # hard case: eigenvalues hugging mu at 1e-4 on both sides
+    a = _straddling_matrix(32, 1.0, 3, gap=1e-4, top=10.0)
+    assert float(jnp.abs(project_psd_ns(a, 1.0, num_iters="auto")
+                         - project_psd(a, 1.0)).max()) <= 1e-5
+    # the auto knob flows through the engine entry points
+    prob = make_quadratic(KEY, num_workers=4, dim=32, kappa=20.0,
+                          coupling=0.0, num_regions=4)
+    r_auto = run_ranl(prob, KEY, num_rounds=4, num_regions=4,
+                      projection="ns", ns_iters="auto")
+    r_fix = run_ranl(prob, KEY, num_rounds=4, num_regions=4,
+                     projection="ns")
+    np.testing.assert_allclose(np.asarray(r_auto.xs),
+                               np.asarray(r_fix.xs), atol=1e-5)
+
+
 def test_project_psd_sharded_single_device_matches_oracles():
     """On a 1-device mesh the panel-sharded projection must match the
     single-device NS oracle (same iteration, degenerate psums) and the
