@@ -15,11 +15,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from repro.core import (PolicyConfig, make_logistic, make_quadratic,
                         rounds_to_tol, run_gd, run_newton_exact,
-                        run_newton_zero, run_ranl, run_ranl_batch,
-                        run_ranl_reference, run_ranl_sharded,
-                        run_ranl_sharded2d)
+                        run_newton_zero)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -42,7 +41,7 @@ def bench_convergence(smoke: bool = False):
     for sigma in (0.1,) if smoke else (0.1, 0.3):
         prob = make_quadratic(KEY, num_workers=16, dim=dim, kappa=100.0,
                               coupling=0.0, num_regions=8, hess_noise=sigma)
-        res, us = _timed(lambda: run_ranl(
+        res, us = _timed(lambda: repro.run(
             prob, KEY, num_rounds=rounds, num_regions=8,
             policy=PolicyConfig(keep_prob=0.5, tau_star=1,
                                 heterogeneous=False)))
@@ -63,7 +62,7 @@ def bench_condition(smoke: bool = False):
     for kappa in ((10.0, 1000.0) if smoke else (10.0, 100.0, 1000.0)):
         prob = make_quadratic(KEY, num_workers=8, dim=dim, kappa=kappa,
                               coupling=0.0, num_regions=4)
-        res, us = _timed(lambda: run_ranl(
+        res, us = _timed(lambda: repro.run(
             prob, KEY, num_rounds=rounds, num_regions=4,
             policy=PolicyConfig(keep_prob=0.7, tau_star=1,
                                 heterogeneous=False)))
@@ -83,7 +82,7 @@ def bench_staleness(smoke: bool = False):
                           coupling=0.0, num_regions=8)
     rows = []
     for period in ((0, 2) if smoke else (0, 1, 2, 4)):
-        res, us = _timed(lambda: run_ranl(
+        res, us = _timed(lambda: repro.run(
             prob, KEY, num_rounds=rounds, num_regions=8,
             policy=PolicyConfig(name="staleness", keep_prob=0.5,
                                 stale_period=period, heterogeneous=False)))
@@ -101,7 +100,7 @@ def bench_coverage(smoke: bool = False):
                           coupling=0.0, num_regions=8, grad_noise=0.3)
     rows = []
     for tau in ((1, 8) if smoke else (1, 4, 8)):
-        res, us = _timed(lambda: run_ranl(
+        res, us = _timed(lambda: repro.run(
             prob, KEY, num_rounds=rounds, num_regions=8,
             policy=PolicyConfig(keep_prob=0.4, tau_star=tau,
                                 heterogeneous=False)))
@@ -121,7 +120,7 @@ def bench_heterogeneity(smoke: bool = False):
     for het in ((0.0, 1.0) if smoke else (0.0, 0.5, 1.0)):
         prob = make_logistic(KEY, num_workers=16, dim=dim,
                              heterogeneity=het)
-        res, us = _timed(lambda: run_ranl(
+        res, us = _timed(lambda: repro.run(
             prob, KEY, num_rounds=rounds, num_regions=8,
             policy=PolicyConfig(keep_prob=0.8, tau_star=1,
                                 heterogeneous=True)))
@@ -138,7 +137,7 @@ def bench_second_order_baselines(smoke: bool = False):
     prob = make_quadratic(KEY, num_workers=8, dim=dim, kappa=300.0,
                           coupling=0.0, num_regions=8, hess_noise=0.1)
     rows = []
-    res, us = _timed(lambda: run_ranl(
+    res, us = _timed(lambda: repro.run(
         prob, KEY, num_rounds=rounds, num_regions=8,
         policy=PolicyConfig(name="full")))
     rows.append({"name": "baseline/ranl_fullmask", "us_per_call": us,
@@ -164,7 +163,7 @@ def bench_comm_cost(smoke: bool = False):
     for kp in ((1.0, 0.4) if smoke else (1.0, 0.7, 0.4, 0.2)):
         pol = (PolicyConfig(name="full") if kp == 1.0 else
                PolicyConfig(keep_prob=kp, tau_star=1, heterogeneous=True))
-        res, us = _timed(lambda: run_ranl(
+        res, us = _timed(lambda: repro.run(
             prob, KEY, num_rounds=rounds, num_regions=16, policy=pol))
         up = float(np.asarray(res.comm_floats).mean())
         d = np.asarray(res.dist_sq)
@@ -188,9 +187,9 @@ def bench_engine_speedup(smoke: bool = False):
                           coupling=0.0, num_regions=8)
     pol = PolicyConfig(keep_prob=0.5, tau_star=1, heterogeneous=False)
     kw = dict(num_rounds=rounds, num_regions=8, policy=pol)
-    ref_res, us_ref = _timed(lambda: run_ranl_reference(prob, KEY, **kw))
-    run_ranl(prob, KEY, **kw)                     # compile once
-    res, us_new = _timed(lambda: run_ranl(prob, KEY, **kw))
+    ref_res, us_ref = _timed(lambda: repro.run(prob, KEY, engine="reference", **kw))
+    repro.run(prob, KEY, **kw)                     # compile once
+    res, us_new = _timed(lambda: repro.run(prob, KEY, **kw))
     err = float(np.abs(np.asarray(res.xs) - np.asarray(ref_res.xs)).max())
     return [{"name": "engine/scan_vs_hostloop", "us_per_call": us_new,
              "derived": (f"hostloop_us={us_ref:.0f};"
@@ -207,8 +206,8 @@ def bench_batch_seeds(smoke: bool = False):
     pol = PolicyConfig(keep_prob=0.5, tau_star=1)
     keys = jax.random.split(KEY, B)
     kw = dict(num_rounds=rounds, num_regions=8, policy=pol)
-    run_ranl_batch(prob, keys, **kw)              # compile once
-    res, us = _timed(lambda: run_ranl_batch(prob, keys, **kw))
+    repro.run(prob, keys, engine="batch", **kw)              # compile once
+    res, us = _timed(lambda: repro.run(prob, keys, engine="batch", **kw))
     finals = np.asarray(res.dist_sq)[:, -1]
     return [{"name": f"engine/batch_{B}seeds", "us_per_call": us,
              "derived": (f"us_per_seed={us / B:.0f};"
@@ -233,10 +232,10 @@ def bench_sharded_engine(smoke: bool = False):
     ndev = max(k for k in range(1, N + 1)
                if N % k == 0 and k <= jax.device_count())
     mesh = jax.sharding.Mesh(np.array(jax.devices()[:ndev]), ("data",))
-    run_ranl(prob, KEY, **kw)                     # compile both engines
-    run_ranl_sharded(prob, KEY, mesh=mesh, **kw)
-    res_1, us_1 = _timed(lambda: run_ranl(prob, KEY, **kw))
-    res_s, us_s = _timed(lambda: run_ranl_sharded(prob, KEY, mesh=mesh,
+    repro.run(prob, KEY, **kw)                     # compile both engines
+    repro.run(prob, KEY, engine="sharded", mesh=mesh, **kw)
+    res_1, us_1 = _timed(lambda: repro.run(prob, KEY, **kw))
+    res_s, us_s = _timed(lambda: repro.run(prob, KEY, engine="sharded", mesh=mesh,
                                                   **kw))
     err = float(np.abs(np.asarray(res_s.xs) - np.asarray(res_1.xs)).max())
     return [{"name": f"engine/sharded_{ndev}dev", "us_per_call": us_s,
@@ -270,10 +269,10 @@ def bench_sharded2d_engine(smoke: bool = False):
                 best = (r, c)
     from repro.launch.mesh import make_engine_mesh
     mesh = make_engine_mesh(*best)
-    run_ranl(prob, KEY, **kw)                     # compile both engines
-    run_ranl_sharded2d(prob, KEY, mesh=mesh, **kw)
-    res_1, us_1 = _timed(lambda: run_ranl(prob, KEY, **kw))
-    res_s, us_s = _timed(lambda: run_ranl_sharded2d(prob, KEY, mesh=mesh,
+    repro.run(prob, KEY, **kw)                     # compile both engines
+    repro.run(prob, KEY, engine="sharded2d", mesh=mesh, **kw)
+    res_1, us_1 = _timed(lambda: repro.run(prob, KEY, **kw))
+    res_s, us_s = _timed(lambda: repro.run(prob, KEY, engine="sharded2d", mesh=mesh,
                                                     **kw))
     err = float(np.abs(np.asarray(res_s.xs) - np.asarray(res_1.xs)).max())
     return [{"name": f"engine/sharded2d_{best[0]}x{best[1]}",
@@ -291,10 +290,10 @@ def bench_diag_kernel_path(smoke: bool = False):
     pol = PolicyConfig(keep_prob=0.5, tau_star=1)
     kw = dict(num_rounds=rounds, num_regions=8, policy=pol,
               curvature="diag")
-    run_ranl(prob, KEY, use_kernel=True, **kw)    # compile both paths
-    run_ranl(prob, KEY, use_kernel=False, **kw)
-    res_k, us_k = _timed(lambda: run_ranl(prob, KEY, use_kernel=True, **kw))
-    res_r, us_r = _timed(lambda: run_ranl(prob, KEY, use_kernel=False, **kw))
+    repro.run(prob, KEY, use_kernel=True, **kw)    # compile both paths
+    repro.run(prob, KEY, use_kernel=False, **kw)
+    res_k, us_k = _timed(lambda: repro.run(prob, KEY, use_kernel=True, **kw))
+    res_r, us_r = _timed(lambda: repro.run(prob, KEY, use_kernel=False, **kw))
     err = float(np.abs(np.asarray(res_k.xs) - np.asarray(res_r.xs)).max())
     return [{"name": "engine/diag_pallas_path", "us_per_call": us_k,
              "derived": (f"jnp_oracle_us={us_r:.0f};max_err={err:.1e};"
@@ -365,10 +364,10 @@ def bench_hetero(smoke: bool = False):
     pol = PolicyConfig(keep_prob=0.5, tau_star=1, heterogeneous=True)
     ctrl = make_controller("resource:keep=0.5,tau=1")
     kw = dict(num_rounds=rounds, num_regions=8, lr=0.5, cost=scen.cost)
-    run_ranl(prob, KEY, policy=pol, **kw)         # compile both paths
-    run_ranl(prob, KEY, controller=ctrl, **kw)
-    res_s, us_s = _timed(lambda: run_ranl(prob, KEY, policy=pol, **kw))
-    res_c, us_c = _timed(lambda: run_ranl(prob, KEY, controller=ctrl, **kw))
+    repro.run(prob, KEY, policy=pol, **kw)         # compile both paths
+    repro.run(prob, KEY, controller=ctrl, **kw)
+    res_s, us_s = _timed(lambda: repro.run(prob, KEY, policy=pol, **kw))
+    res_c, us_c = _timed(lambda: repro.run(prob, KEY, controller=ctrl, **kw))
     target = 1e-8 * float(res_s.dist_sq[0])
     t_s = time_to_target(res_s.dist_sq, res_s.round_time, target)
     t_c = time_to_target(res_c.dist_sq, res_c.round_time, target)
@@ -402,12 +401,12 @@ def bench_overlap(smoke: bool = False):
     ndev = max(k for k in range(1, N + 1)
                if N % k == 0 and k <= jax.device_count())
     mesh = jax.sharding.Mesh(np.array(jax.devices()[:ndev]), ("data",))
-    run_ranl_sharded(prob, KEY, mesh=mesh, **kw)              # compile
-    run_ranl_sharded(prob, KEY, mesh=mesh, overlap=True, **kw)
+    repro.run(prob, KEY, engine="sharded", mesh=mesh, **kw)              # compile
+    repro.run(prob, KEY, engine="sharded", mesh=mesh, overlap=True, **kw)
     res_off, us_off = _timed(
-        lambda: run_ranl_sharded(prob, KEY, mesh=mesh, **kw))
+        lambda: repro.run(prob, KEY, engine="sharded", mesh=mesh, **kw))
     res_on, us_on = _timed(
-        lambda: run_ranl_sharded(prob, KEY, mesh=mesh, overlap=True, **kw))
+        lambda: repro.run(prob, KEY, engine="sharded", mesh=mesh, overlap=True, **kw))
     err = float(np.abs(np.asarray(res_on.xs) - np.asarray(res_off.xs)).max())
     return [
         {"name": "engine/overlap_off", "us_per_call": us_off,
@@ -416,3 +415,48 @@ def bench_overlap(smoke: bool = False):
          "derived": (f"devices={ndev};seq_us={us_off:.0f};"
                      f"speedup={us_off / us_on:.2f}x;max_err={err:.1e}")},
     ]
+
+
+def bench_quorum(smoke: bool = False):
+    """Semi-synchronous quorum aggregation: simulated time-to-target on
+    the pareto-stragglers and churn-stragglers (rotating cohorts on
+    pareto rates) scenarios, synchronous resource-proportional controller vs the SAME
+    controller under quorum=0.75/tau=1, gamma=0.5, max_delay=4.
+
+    ``derived`` carries the simulated wall-clocks and their ratio — the
+    acceptance bound a test pins at <= 0.8x on BOTH scenarios (the
+    quorum server commits at the k-th order statistic of worker times,
+    late work folds staleness-damped into later rounds).
+    """
+    from repro.hetero import make_controller, make_scenario, time_to_target
+    dim, rounds = (32, 30) if smoke else (64, 60)
+    N = 16
+    prob = make_quadratic(KEY, num_workers=N, dim=dim, kappa=100.0,
+                          coupling=0.0, num_regions=8)
+    ctrl = make_controller("resource:keep=0.5,tau=1")
+    qknobs = dict(quorum=0.75, quorum_tau=1, gamma=0.5, max_delay=4)
+    tol = 1e-4 if smoke else 1e-8          # smoke's 30 rounds stop early
+    rows = []
+    for sname, tag in (("pareto-stragglers", "stragglers"),
+                       ("churn-stragglers", "churn")):
+        scen = make_scenario(sname, jax.random.PRNGKey(101), N)
+        kw = dict(num_rounds=rounds, num_regions=8, lr=0.5,
+                  cost=scen.cost, controller=ctrl)
+        repro.run(prob, KEY, **kw)                           # compile both
+        repro.run(prob, KEY, **qknobs, **kw)
+        res_s, us_s = _timed(lambda: repro.run(prob, KEY, **kw))
+        res_q, us_q = _timed(lambda: repro.run(prob, KEY, **qknobs, **kw))
+        target = tol * float(res_s.dist_sq[0])
+        t_s = time_to_target(res_s.dist_sq, res_s.round_time, target)
+        t_q = time_to_target(res_q.dist_sq, res_q.round_time, target)
+        rows += [
+            {"name": f"engine/quorum_sync_{tag}", "us_per_call": us_s,
+             "derived": f"sim_time_to_{tol:.0e}={t_s:.0f}"},
+            {"name": f"engine/quorum_semisync_{tag}", "us_per_call": us_q,
+             "derived": (f"sim_time_to_{tol:.0e}={t_q:.0f};"
+                         f"sync_sim_time={t_s:.0f};"
+                         f"ratio={t_q / t_s:.2f}x;"
+                         f"max_stale="
+                         f"{int(np.asarray(res_q.max_stale).max())}")},
+        ]
+    return rows

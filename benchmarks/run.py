@@ -50,7 +50,8 @@ def main() -> None:
                    claims.bench_diag_kernel_path,
                    claims.bench_init_projection,
                    claims.bench_overlap,
-                   claims.bench_hetero):
+                   claims.bench_hetero,
+                   claims.bench_quorum):
             rows.extend(fn(smoke=args.smoke))
     if args.only in (None, "kernels"):
         from . import kernels_bench as kb

@@ -13,9 +13,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
+import repro
 from repro.core import (PolicyConfig, make_quadratic, rounds_to_tol,
-                        run_gd, run_newton_exact, run_newton_zero,
-                        run_ranl_batch)
+                        run_gd, run_newton_exact, run_newton_zero)
 
 key = jax.random.PRNGKey(1)
 TOL = 1e-8
@@ -29,10 +29,12 @@ for kappa in (10.0, 100.0, 1000.0, 10000.0):
     prob = make_quadratic(key, num_workers=8, dim=32, kappa=kappa,
                           coupling=0.0, num_regions=4)
     # all seeds run in ONE compiled batched program
-    batch = run_ranl_batch(prob, jax.random.split(key, SEEDS),
-                           num_rounds=60, num_regions=4,
-                           policy=PolicyConfig(keep_prob=0.5, tau_star=1,
-                                               heterogeneous=False))
+    batch = repro.run(
+        prob, jax.random.split(key, SEEDS), engine="batch",
+        options=repro.RanlOptions(
+            num_rounds=60, num_regions=4,
+            policy=PolicyConfig(keep_prob=0.5, tau_star=1,
+                                heterogeneous=False)))
     rr = np.array([rounds_to_tol(batch.dist_sq[b], TOL)
                    for b in range(SEEDS)])
     _, dz = run_newton_zero(prob, key, num_rounds=60)

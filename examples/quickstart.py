@@ -12,8 +12,8 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
-from repro.core import (PolicyConfig, make_quadratic, run_gd, run_ranl,
-                        run_ranl_batch)
+import repro
+from repro.core import PolicyConfig, make_quadratic, run_gd
 
 key = jax.random.PRNGKey(0)
 
@@ -25,7 +25,8 @@ problem = make_quadratic(key, num_workers=16, dim=64, kappa=500.0,
 policy = PolicyConfig(name="bernoulli", keep_prob=0.5, heterogeneous=True,
                       tau_star=1)
 
-result = run_ranl(problem, key, num_rounds=30, num_regions=8, policy=policy)
+opts = repro.RanlOptions(num_rounds=30, num_regions=8, policy=policy)
+result = repro.run(problem, key, engine="scan", options=opts)
 _, gd_dist = run_gd(problem, key, num_rounds=30)
 
 print("round   RANL ||x-x*||^2      GD ||x-x*||^2    coverage")
@@ -42,8 +43,8 @@ print(f"Minimum region coverage tau* observed: {result.tau_star}")
 
 # Variance band across seeds: the scan-compiled engine vmaps whole runs,
 # so 16 seeds cost one compilation + one batched execution.
-batch = run_ranl_batch(problem, jax.random.split(key, 16), num_rounds=30,
-                       num_regions=8, policy=policy)
+batch = repro.run(problem, jax.random.split(key, 16), engine="batch",
+                  options=opts)
 finals = np.asarray(batch.dist_sq)[:, -1]
 print(f"\n16-seed final error band: median={np.median(finals):.2e} "
       f"[{finals.min():.2e}, {finals.max():.2e}], "

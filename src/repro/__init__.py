@@ -1,0 +1,16 @@
+"""RANL reproduction: adaptive pruning-based Newton for distributed
+learning.
+
+The supported engine surface is ``repro.run`` / ``repro.lower`` with a
+:class:`repro.RanlOptions` record — see ``repro.api``.  Subpackages
+(``repro.core``, ``repro.hetero``, ``repro.kernels``, ``repro.launch``,
+...) import as before.
+"""
+
+from .api import ENGINES, lower, run  # noqa: F401
+from .core.options import (  # noqa: F401
+    EngineDeprecationWarning,
+    QuorumSpec,
+    RanlOptions,
+)
+from .core.ranl import RanlResult  # noqa: F401

@@ -1,6 +1,10 @@
 """Paper core: RANL (Algorithm 1), its substrate, and baselines."""
 
-from .aggregation import server_aggregate  # noqa: F401
+from .aggregation import (  # noqa: F401
+    late_fold_updates,
+    quorum_aggregate,
+    server_aggregate,
+)
 from .baselines import (  # noqa: F401
     rounds_to_tol,
     run_gd,
@@ -20,7 +24,17 @@ from .hessian import (  # noqa: F401
     project_psd_sharded,
     solve_projected,
 )
-from .masks import PolicyConfig, ensure_coverage, sample_masks  # noqa: F401
+from .masks import (  # noqa: F401
+    PolicyConfig,
+    ensure_coverage,
+    sample_masks,
+    staleness_weights,
+)
+from .options import (  # noqa: F401
+    EngineDeprecationWarning,
+    QuorumSpec,
+    RanlOptions,
+)
 from .ranl import (  # noqa: F401
     RanlResult,
     lower_ranl_sharded,

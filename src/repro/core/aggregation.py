@@ -10,11 +10,18 @@ Given per-worker pruned gradients G (N, d), coordinate masks Mx (N, d)
 
 This module is the pure-jnp oracle; ``repro.kernels.region_aggregate``
 implements the same contract as a fused Pallas kernel.
+
+``quorum_aggregate`` is the semi-synchronous variant: only ON-TIME
+workers (per ``hetero.cost.quorum_split``) aggregate fresh, late workers
+fold into later rounds with staleness-damped weight through a bounded
+``(max_delay, d)`` late buffer that rides the engines' scan carry.
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+from .masks import staleness_weights
 
 
 def server_aggregate(grads, masks_x, memory, *, use_kernel: bool = False,
@@ -37,3 +44,69 @@ def server_aggregate(grads, masks_x, memory, *, use_kernel: bool = False,
     global_grad = jnp.where(count > 0, fresh_mean, stale_mean)
     new_memory = jnp.where(masks_x, grads, memory)
     return global_grad, new_memory
+
+
+def late_fold_updates(grads, masks_x, count_full, delays, *, gamma: float,
+                      max_delay: int):
+    """Per-slot staleness-damped contributions of this round's LATE work.
+
+    ``count_full``: (d,) FULL per-coordinate coverage counts (on-time +
+    late) — late arrivals are divided by the same denominator the on-time
+    partial mean used, so an on-time partial sum plus its late arrivals
+    at γ = 1 reconstructs the synchronous mean exactly.  Returns
+    (max_delay, d): row j is what lands in round t + j + 1's aggregate.
+    Shared by the (N, d) server fold below and the sharded engines'
+    device-local (n_local, p)-tile folds (where ``count_full`` is the
+    already-psummed global count on the local columns).
+    """
+    m = masks_x.astype(grads.dtype)
+    denom = jnp.maximum(count_full, 1.0)
+    w = staleness_weights(delays, gamma, max_delay)          # (N,)
+    contrib = grads * m * w[:, None] / denom[None, :]        # (N, d)
+    slots = jnp.arange(1, int(max_delay) + 1)
+    sel = (delays[None, :] == slots[:, None]).astype(grads.dtype)
+    return sel @ contrib                                     # (S, d)
+
+
+def quorum_aggregate(grads, masks_x, memory, on_time, delays, late_buf, *,
+                     gamma: float, max_delay: int):
+    """Semi-synchronous server aggregation with a bounded-delay late fold.
+
+    Same contract as ``server_aggregate`` plus the quorum split of the
+    round (``hetero.cost.quorum_split``): ``on_time``: (N,) bool,
+    ``delays``: (N,) int rounds-late, ``late_buf``: (max_delay, d) — the
+    damped contributions scheduled by EARLIER rounds, row 0 due now.
+    Returns (global_grad, new_memory, new_late_buf).
+
+    * covered coordinates (>= 1 on-time coverer) aggregate the ON-TIME
+      partial sum over the FULL coverage count — late arrivals of the
+      same round later add ``gamma**s``-damped mass over that same
+      denominator, so γ = 1 reconstructs the synchronous mean and γ = 0
+      drops late work entirely;
+    * coordinates with no on-time coverer fall back to the memory mean
+      (the Algorithm-1 stale path — late-only coverage is NOT fresh);
+    * ``late_buf[0]`` (due this round) adds into the aggregate before the
+      Newton solve; the buffer shifts and this round's late arrivals
+      (1 <= s <= max_delay) enqueue at their slots; s > max_delay is
+      dropped — and a dropped worker's memory is NOT refreshed (its C
+      entry still reflects the last fold the server actually applied).
+
+    With every participant on time (quorum 1.0) this is bit-exact
+    ``server_aggregate`` (the late buffer stays identically zero).
+    """
+    m = masks_x.astype(grads.dtype)
+    on = on_time.astype(grads.dtype)[:, None]
+    count_full = m.sum(axis=0)                               # (d,)
+    count_on = (m * on).sum(axis=0)
+    fresh_mean = (grads * m * on).sum(axis=0) \
+        / jnp.maximum(count_full, 1.0)
+    stale_mean = memory.mean(axis=0)
+    global_grad = jnp.where(count_on > 0, fresh_mean, stale_mean) \
+        + late_buf[0]
+    adds = late_fold_updates(grads, masks_x, count_full, delays,
+                             gamma=gamma, max_delay=max_delay)
+    new_late_buf = jnp.concatenate(
+        [late_buf[1:], jnp.zeros_like(late_buf[:1])], axis=0) + adds
+    dropped = delays > int(max_delay)
+    new_memory = jnp.where(masks_x & ~dropped[:, None], grads, memory)
+    return global_grad, new_memory, new_late_buf

@@ -97,6 +97,22 @@ def sample_masks(policy: PolicyConfig, key, t: int | jnp.ndarray,
     return m
 
 
+def staleness_weights(delays, gamma: float, max_delay: int):
+    """(N,) float32 fold weights ``γ(s) = gamma**s`` for late arrivals.
+
+    ``delays``: (N,) int rounds-late per worker (0 = on time).  On-time
+    work folds fresh (weight handled by the aggregation, not here), so
+    s = 0 maps to weight 0; 1 <= s <= ``max_delay`` maps to ``gamma**s``;
+    anything later is dropped (weight 0) — the bounded-delay cap.
+    ``gamma = 0`` therefore drops ALL late work (0**s == 0 for s >= 1).
+    ``gamma``/``max_delay`` are static; ``delays`` may be traced.
+    """
+    s = jnp.asarray(delays)
+    w = jnp.asarray(float(gamma), jnp.float32) ** s.astype(jnp.float32)
+    live = (s >= 1) & (s <= int(max_delay))
+    return jnp.where(live, w, 0.0)
+
+
 def ensure_coverage(mask, tau_star):
     """Repair mask so every region is covered by >= tau_star workers.
 

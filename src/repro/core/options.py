@@ -1,0 +1,151 @@
+"""`RanlOptions` — the one frozen, hashable options record every engine takes.
+
+The five historical entrypoints (``run_ranl``, ``run_ranl_batch``,
+``run_ranl_sharded``, ``run_ranl_sharded2d``, ``run_ranl_reference``) each
+copied ~14 kwargs and drifted: ``projection`` was missing from the 2-D
+engine, ``record_every`` existed on two of the five (and was a no-op on
+both), ``use_kernel`` was absent from the 1-D sharded engine.  The
+dispatcher ``repro.run(problem, key, engine=..., options=RanlOptions(...))``
+replaces all of them; this module is where the kwarg explosion stops —
+new knobs (the semi-synchronous quorum family below) land here and ONLY
+here.
+
+``RanlOptions`` is a frozen dataclass of hashable scalars, so it can ride
+jit static args directly, and it validates at CONSTRUCTION time: a bad
+``quorum`` or ``record_every`` raises here, in the caller's stack frame,
+instead of deep inside a ``shard_map`` trace.  (Divisibility checks that
+need the problem/mesh shapes still run at dispatch, but before any trace.)
+
+Semi-synchronous quorum knobs (``quorum``/``quorum_tau``/``gamma``/
+``max_delay``) — see ``hetero.cost.quorum_split`` for the commit rule and
+``core.aggregation.quorum_aggregate`` for the staleness-damped late fold.
+``quorum=None`` (default) keeps the fully synchronous engines bit-exact.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, fields, replace
+
+from .masks import PolicyConfig
+
+
+class EngineDeprecationWarning(DeprecationWarning):
+    """Raised (as a warning) by the five legacy engine entrypoints.
+
+    A subclass so the repo's pytest config can run with
+    ``error::repro.core.options.EngineDeprecationWarning`` — every
+    in-repo caller must use ``repro.run``/``repro.lower`` — without
+    turning unrelated third-party DeprecationWarnings into failures.
+    """
+
+
+_CURVATURES = ("dense", "diag")
+_PROJECTIONS = (None, "eigh", "ns")
+
+
+@dataclass(frozen=True)
+class RanlOptions:
+    """Everything an engine run is parameterized by, minus the problem,
+    PRNG key, mesh and the heterogeneity objects (controller/cost), which
+    stay arguments of ``repro.run``.
+
+    ``projection=None`` means "engine default": the paper-literal ``eigh``
+    eigenvalue clamp everywhere it is implementable, and the matmul-only
+    Newton–Schulz form on the 2-D dense path (where no device may hold a
+    d×d buffer, so ``projection="eigh"`` is a dispatch-time error there).
+
+    Quorum family (``None`` = synchronous, the bit-exact default):
+
+    * ``quorum``: fraction of regions that must be covered by ON-TIME
+      workers for the round to commit (the server stops waiting at the
+      k-th order statistic of worker times realizing it);
+    * ``quorum_tau``: per-region on-time coverage floor — a region counts
+      as quorum-covered once ``min(quorum_tau, full coverage)`` of its
+      workers are on time.  ``None`` = all of its participating workers;
+    * ``gamma``: staleness damping — a contribution arriving ``s`` rounds
+      late folds into that later round's aggregate with weight
+      ``gamma**s`` (``gamma=0`` drops all late work);
+    * ``max_delay``: contributions later than this many rounds are
+      dropped outright (and do not refresh the gradient memory).
+    """
+    num_rounds: int = 30
+    num_regions: int = 8
+    policy: PolicyConfig = field(default_factory=PolicyConfig)
+    mu: float | None = None
+    curvature: str = "dense"
+    lr: float = 1.0
+    use_kernel: bool = True
+    hutchinson_samples: int = 8
+    projection: str | None = None
+    ns_iters: int | str = 60
+    record_every: int = 1
+    overlap: bool = False
+    quorum: float | None = None
+    quorum_tau: int | None = None
+    gamma: float = 0.5
+    max_delay: int = 2
+
+    def __post_init__(self):
+        if not isinstance(self.policy, PolicyConfig):
+            raise TypeError(f"policy must be a PolicyConfig, got "
+                            f"{self.policy!r}")
+        if self.curvature not in _CURVATURES:
+            raise ValueError(f"unknown curvature {self.curvature!r} "
+                             f"(expected one of {_CURVATURES})")
+        if self.projection not in _PROJECTIONS:
+            raise ValueError(f"unknown projection {self.projection!r} "
+                             f"(expected None, 'eigh' or 'ns')")
+        if self.num_regions < 1:
+            raise ValueError(f"num_regions={self.num_regions} must be >= 1")
+        if self.ns_iters != "auto" and int(self.ns_iters) < 1:
+            raise ValueError(f"ns_iters={self.ns_iters!r} must be 'auto' "
+                             f"or a positive int")
+        if self.record_every < 1:
+            raise ValueError(
+                f"record_every={self.record_every} must be >= 1")
+        if self.hutchinson_samples < 1:
+            raise ValueError(f"hutchinson_samples="
+                             f"{self.hutchinson_samples} must be >= 1")
+        if self.quorum is not None and not 0.0 < self.quorum <= 1.0:
+            raise ValueError(f"quorum={self.quorum} must be in (0, 1] "
+                             f"(or None for synchronous rounds)")
+        if self.quorum_tau is not None and self.quorum_tau < 1:
+            raise ValueError(f"quorum_tau={self.quorum_tau} must be >= 1 "
+                             f"(or None for full participating coverage)")
+        if not 0.0 <= self.gamma <= 1.0:
+            raise ValueError(f"gamma={self.gamma} must be in [0, 1]")
+        if self.max_delay < 1:
+            raise ValueError(f"max_delay={self.max_delay} must be >= 1")
+        if self.quorum_tau is not None and self.quorum is None:
+            raise ValueError("quorum_tau is set but quorum is None — set "
+                             "quorum to enable semi-synchronous rounds")
+
+    def merged(self, **overrides) -> "RanlOptions":
+        """A copy with ``overrides`` applied (unknown keys raise)."""
+        known = {f.name for f in fields(self)}
+        bad = set(overrides) - known
+        if bad:
+            raise TypeError(f"unknown RanlOptions field(s) "
+                            f"{sorted(bad)} (known: {sorted(known)})")
+        return replace(self, **overrides)
+
+    def quorum_spec(self) -> "QuorumSpec | None":
+        return (None if self.quorum is None else
+                QuorumSpec(quorum=float(self.quorum),
+                           quorum_tau=self.quorum_tau,
+                           gamma=float(self.gamma),
+                           max_delay=int(self.max_delay)))
+
+
+@dataclass(frozen=True)
+class QuorumSpec:
+    """The static quorum parameters the compiled round loops branch on.
+
+    Separate from ``RanlOptions`` so the engine internals hash/trace on
+    exactly the four scalars they use (``None`` = fully synchronous —
+    the engines compile the historical computation unchanged).
+    """
+    quorum: float = 1.0
+    quorum_tau: int | None = None
+    gamma: float = 0.5
+    max_delay: int = 2

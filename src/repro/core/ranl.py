@@ -79,23 +79,43 @@ the full (N, Q) telemetry — it adds NO collective, the coverage-count
 psum it observes is the one the aggregation already paid, so the
 one-param-sized-psum-per-round HLO invariant is preserved with
 controller state in the carry (pinned in tests).
+
+Semi-synchronous rounds (``RanlOptions.quorum``; ``QuorumSpec`` in the
+engines' static args): the round commits at the quorum deadline
+(``hetero.cost.quorum_split`` — the k-th order statistic of worker times
+instead of the max), only ON-TIME workers aggregate fresh, and late
+contributions fold into later rounds with ``gamma**s`` damping through a
+bounded ``(max_delay, d)`` late buffer that RIDES THE SCAN CARRY (the
+sharded engines carry its device-local column slice and fold it inside
+the round's one existing param-sized psum — the quorum path adds no
+collective; the split itself is computed replicated from the full mask,
+like the controller).  ``quorum=None`` compiles the historical
+synchronous computation unchanged; ``quorum=1.0`` runs the quorum code
+path but degenerates to it bit-exactly.
+
+The five historical entrypoints at the bottom of this module are
+deprecated shims over ``repro.run``/``repro.lower`` (see ``repro.api``);
+the engine internals are the ``_run_*`` functions taking ``RanlOptions``.
 """
 
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
+import warnings
+from dataclasses import dataclass, replace as dc_replace
 
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from .aggregation import server_aggregate
+from .aggregation import late_fold_updates, quorum_aggregate, \
+    server_aggregate
 from .hessian import hutchinson_diag, project_diag, project_psd, \
     project_psd_ns, project_psd_ns_panels, running_mean_hessian, \
     solve_projected
 from .masks import PolicyConfig
+from .options import EngineDeprecationWarning, QuorumSpec, RanlOptions
 from .regions import contiguous_regions, expand_mask, region_sizes
 
 
@@ -249,21 +269,33 @@ def _hetero_defaults(problem, policy, controller, cost):
 
 
 _ROUND_STATIC = ("num_rounds", "num_regions", "controller", "mu", "lr",
-                 "curvature", "use_kernel", "interpret", "cho_lower")
+                 "curvature", "use_kernel", "interpret", "cho_lower",
+                 "qspec")
 
 
 def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
                  num_rounds: int, num_regions: int, controller, mu: float,
                  lr: float, curvature: str, use_kernel: bool,
-                 interpret: bool | None, cho_lower: bool):
+                 interpret: bool | None, cho_lower: bool,
+                 qspec: QuorumSpec | None = None):
     """Alg. 1 lines 9–23 as one ``lax.scan``; returns the full result set
     (xs, dist_sq, losses, coverage, comm, tau, times, stale) as arrays.
 
-    The scan carry holds (x, C, controller state, telemetry): the
-    controller observes round t−1's coverage counts, per-worker simulated
-    times and staleness counters when allocating round t's mask.
+    The scan carry holds (x, C, late buffer, controller state, telemetry):
+    the controller observes round t−1's coverage counts, per-worker
+    simulated times and staleness counters when allocating round t's mask.
+    With ``qspec`` set, rounds are semi-synchronous: the quorum deadline
+    replaces the max in the round-time trace, only on-time workers
+    aggregate fresh (the controller and the coverage/staleness
+    diagnostics see ON-TIME counts), and the ``(max_delay, d)`` late
+    buffer carries the ``gamma**s``-damped contributions of late workers
+    forward (``quorum_aggregate``).  ``qspec=None`` is a static branch —
+    the synchronous loop compiles unchanged (no buffer, no split).  The
+    fused diag kernel has no late-fold form, so the quorum path always
+    takes the jnp aggregation.
     """
-    from ..hetero.controller import initial_telemetry
+    from ..hetero.controller import initial_telemetry, next_telemetry
+    from ..hetero.cost import quorum_split, worker_times
     N, d = problem.num_workers, problem.dim
     Q = num_regions
     region_ids = contiguous_regions(d, Q)
@@ -272,7 +304,7 @@ def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
     grad_pruned = jax.vmap(problem.worker_grad, in_axes=(0, 0, 0))
 
     def body(carry, t):
-        x, C, ctrl_state, telem = carry
+        x, C, late_buf, ctrl_state, telem = carry
         kt = jax.random.fold_in(k_loop, t)
         M, ctrl_state = _controller_mask(controller, cost, ctrl_state,
                                          telem, kt, t, N, Q)  # (N, Q) bool
@@ -280,7 +312,24 @@ def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
         x_pruned = jnp.where(Mx, x[None, :], 0.0)        # x ⊙ m_i
         gk = jax.random.split(jax.random.fold_in(kt, 7), N)
         G = grad_pruned(worker_ids, x_pruned, gk) * Mx   # ∇F_i ⊙ m_i
-        if curvature == "diag" and use_kernel:
+        if qspec is not None:
+            work = (M * sizes_q[None, :]).sum(axis=1)
+            times = worker_times(cost, work, t)
+            deadline, on_time, delays = quorum_split(
+                times, M, quorum=qspec.quorum, quorum_tau=qspec.quorum_tau,
+                max_delay=qspec.max_delay)
+            g, C, late_buf = quorum_aggregate(
+                G, Mx, C, on_time, delays, late_buf, gamma=qspec.gamma,
+                max_delay=qspec.max_delay)
+            if curvature == "dense":
+                step = jax.scipy.linalg.cho_solve((cho_c, cho_lower), g)
+            else:
+                step = g / project_diag(hdiag, mu)
+            x = x - lr * step
+            count_q = (M & on_time[:, None]).sum(axis=0)  # on-time counts
+            telem = next_telemetry(telem, count_q, work, times)
+            round_t = deadline
+        elif curvature == "diag" and use_kernel:
             from ..kernels.region_aggregate import ranl_update
             # interpret=None lets the kernel layer pick the dispatch mode
             # (interpret off-TPU, compiled on TPU) — single source of truth
@@ -293,18 +342,22 @@ def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
             else:
                 step = g / project_diag(hdiag, mu)
             x = x - lr * step
-        count_q = M.sum(axis=0)
-        telem = _observe_round(cost, telem, M, count_q, sizes_q, t)
+        if qspec is None:
+            count_q = M.sum(axis=0)
+            telem = _observe_round(cost, telem, M, count_q, sizes_q, t)
+            round_t = telem.times.max()
         cov_mean, min_count, min_cov_count = _round_diagnostics(
             count_q > 0, count_q, N)
-        return (x, C, ctrl_state, telem), (
+        return (x, C, late_buf, ctrl_state, telem), (
             x, cov_mean, Mx.sum(), min_count, min_cov_count,
-            telem.times.max(), telem.stale_q.max())
+            round_t, telem.stale_q.max())
 
     x0 = jnp.zeros(d)
+    late_buf0 = (() if qspec is None
+                 else jnp.zeros((qspec.max_delay, d)))
     if num_rounds > 0:
         ts = jnp.arange(1, num_rounds + 1)
-        carry0 = (x1, C0, controller.init_state(N, Q),
+        carry0 = (x1, C0, late_buf0, controller.init_state(N, Q),
                   initial_telemetry(N, Q))
         _, (xs_t, cov, comm, min_counts, min_cov_counts, times,
             stale) = jax.lax.scan(body, carry0, ts)
@@ -329,12 +382,13 @@ _rounds_jit = functools.partial(
 
 _BATCH_STATIC = ("num_rounds", "num_regions", "controller", "mu", "lr",
                  "curvature", "use_kernel", "interpret", "hutch_samples",
-                 "projection", "ns_iters")
+                 "projection", "ns_iters", "qspec")
 
 
 def _ranl_batch_engine(problem, keys, cost, *, num_rounds, num_regions,
                        controller, mu, lr, curvature, use_kernel,
-                       interpret, hutch_samples, projection, ns_iters):
+                       interpret, hutch_samples, projection, ns_iters,
+                       qspec=None):
     def one(key):
         k_init, k_loop = jax.random.split(key)
         x1, C0, cho_c, cho_lower, hdiag = _init_phase(
@@ -345,7 +399,8 @@ def _ranl_batch_engine(problem, keys, cost, *, num_rounds, num_regions,
                             num_rounds=num_rounds, num_regions=num_regions,
                             controller=controller, mu=mu, lr=lr,
                             curvature=curvature, use_kernel=use_kernel,
-                            interpret=interpret, cho_lower=cho_lower)
+                            interpret=interpret, cho_lower=cho_lower,
+                            qspec=qspec)
     return jax.vmap(one)(keys)
 
 
@@ -378,7 +433,7 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
                          axis_name: str, num_rounds: int, num_regions: int,
                          controller, mu: float, lr: float,
                          curvature: str, cho_lower: bool, num_workers: int,
-                         overlap: bool):
+                         overlap: bool, qspec: QuorumSpec | None = None):
     """Per-device round loop (runs under ``shard_map``).
 
     ``problem``/``C0`` arrive worker-sharded (N/n_dev local workers);
@@ -401,8 +456,17 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
     exactly like the full-mask sampling below, so closing the loop adds
     no collective and the one-param-sized-psum-per-round invariant
     survives with controller state and telemetry in the carry.
+
+    With ``qspec`` the round is semi-synchronous: the quorum split
+    (deadline, on-time workers, delays) is computed REPLICATED from the
+    full mask and times in ``sample_round`` — x-independent, so it rides
+    the overlap carry like the mask itself — and the device-local
+    ``(max_delay, d)`` late-buffer slice folds into the round's ONE
+    param-sized psum (each device contributes its own workers' damped
+    late mass), so the quorum path adds NO collective.  ``qspec=None``
+    compiles the synchronous loop unchanged.
     """
-    from ..hetero.cost import worker_times
+    from ..hetero.cost import quorum_split, worker_times
     from ..hetero.controller import initial_telemetry, next_telemetry
     N = num_workers                       # global worker count
     d = x1.shape[0]
@@ -418,8 +482,10 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
         """Everything x-independent about round t: step the controller on
         the FULL (N, Q) telemetry on every device (tiny, and it keeps the
         stream bit-identical to the single-device engine), slice out this
-        shard's workers, reduce the coverage counts (Q ints), and price
-        the round under the cost model."""
+        shard's workers, reduce the coverage counts (Q ints), price the
+        round under the cost model, and (quorum mode) split it at the
+        quorum deadline.  Returns (sampled, ctrl_state) where ``sampled``
+        ends in the round's quorum info — ``()`` when synchronous."""
         kt = jax.random.fold_in(k_loop, t)
         M_full, ctrl_state = _controller_mask(controller, cost, ctrl_state,
                                               telem, kt, t, N, Q)
@@ -430,26 +496,55 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
         count_q = jax.lax.psum(M.sum(axis=0), axis_name)
         work = (M_full * sizes_q[None, :]).sum(axis=1)
         times = worker_times(cost, work, t)
-        return M, gk, count_q, work, times, ctrl_state
+        if qspec is None:
+            qinfo = ()
+        else:
+            deadline, on_time, delays = quorum_split(
+                times, M_full, quorum=qspec.quorum,
+                quorum_tau=qspec.quorum_tau, max_delay=qspec.max_delay)
+            count_on = (M_full & on_time[:, None]).sum(axis=0)
+            qinfo = (count_on,
+                     jax.lax.dynamic_slice_in_dim(on_time, start, n_local),
+                     jax.lax.dynamic_slice_in_dim(delays, start, n_local),
+                     deadline)
+        return (M, gk, count_q, work, times, qinfo), ctrl_state
 
-    def round_update(x, C, M, gk, count_q):
+    def round_update(x, C, late_buf, sampled):
         """The x-dependent half, up to issuing the round's ONE param-sized
         all-reduce: pruned local gradients, then the single-reduction
         aggregation (masked_aggregate's form) — covered fresh-mean and
         uncovered memory-mean folded into one per-worker contribution, so
         the worker-axis sum is the round's only param-sized psum.  G is
         exactly zero outside each worker's mask, so no re-masking is
-        needed."""
+        needed.  Quorum mode: only on-time workers contribute fresh (over
+        the FULL count, so late γ-damped arrivals reconstruct the
+        synchronous mean), the device-local late buffer's due row joins
+        the same psum, and this round's late work enqueues."""
+        M, gk, count_q, work, times, qinfo = sampled
         Mx = expand_mask(M, region_ids)                  # (n_local, d)
         x_pruned = jnp.where(Mx, x[None, :], 0.0)
         G = grad_pruned(local_ids, x_pruned, gk) * Mx
         count_x = jnp.take(count_q, region_ids)
-        covered_x = jnp.take(count_q > 0, region_ids)
         denom = jnp.maximum(count_x, 1).astype(G.dtype)
-        contrib = jnp.where(covered_x[None, :], G / denom, C / N)
-        g = jax.lax.psum(contrib.sum(axis=0), axis_name)
-        C = jnp.where(Mx, G, C)                          # device-local
-        return g, C, Mx
+        if qspec is None:
+            covered_x = jnp.take(count_q > 0, region_ids)
+            contrib = jnp.where(covered_x[None, :], G / denom, C / N)
+            g = jax.lax.psum(contrib.sum(axis=0), axis_name)
+            C = jnp.where(Mx, G, C)                      # device-local
+            return g, C, Mx, late_buf
+        count_on, on_loc, delays_loc, _ = qinfo
+        covered_x = jnp.take(count_on > 0, region_ids)
+        fresh = jnp.where(on_loc[:, None], G, 0.0)
+        contrib = jnp.where(covered_x[None, :], fresh / denom, C / N)
+        g = jax.lax.psum(contrib.sum(axis=0) + late_buf[0], axis_name)
+        adds = late_fold_updates(G, Mx, count_x.astype(G.dtype),
+                                 delays_loc, gamma=qspec.gamma,
+                                 max_delay=qspec.max_delay)
+        late_buf = jnp.concatenate(
+            [late_buf[1:], jnp.zeros_like(late_buf[:1])], axis=0) + adds
+        dropped = delays_loc > qspec.max_delay
+        C = jnp.where(Mx & ~dropped[:, None], G, C)
+        return g, C, Mx, late_buf
 
     def finish_step(x, g):
         if curvature == "dense":
@@ -458,47 +553,61 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
             step = g / project_diag(hdiag, mu)
         return x - lr * step
 
-    def diagnostics(Mx, count_q):
+    def round_obs(sampled):
+        """(telemetry count, round-time trace value) for this round —
+        on-time counts and the quorum deadline in quorum mode."""
+        _, _, count_q, _, times, qinfo = sampled
+        if qspec is None:
+            return count_q, times.max()
+        return qinfo[0], qinfo[3]
+
+    def diagnostics(Mx, count_disp):
         comm = jax.lax.psum(Mx.sum(), axis_name)
         cov_mean, min_count, min_cov_count = _round_diagnostics(
-            count_q > 0, count_q, N)
+            count_disp > 0, count_disp, N)
         return comm, cov_mean, min_count, min_cov_count
 
     ctrl_state0 = controller.init_state(N, Q)
     telem0 = initial_telemetry(N, Q)
+    late_buf0 = (() if qspec is None
+                 else jnp.zeros((qspec.max_delay, d)))
     if overlap:
         def body(carry, t):
-            x, C, ctrl_state, telem, M, gk, count_q, work, times = carry
-            g, C, Mx = round_update(x, C, M, gk, count_q)   # psum issued
+            x, C, late_buf, ctrl_state, telem, sampled = carry
+            g, C, Mx, late_buf = round_update(x, C, late_buf,
+                                              sampled)      # psum issued
             # overlap window: fold round t's observations into the
             # telemetry, sample round t+1 (controller step + count psum),
             # and compute round t's diagnostics — none of it touches g
-            telem = next_telemetry(telem, count_q, work, times)
-            nxt = sample_round(t + 1, ctrl_state, telem)
+            count_obs, round_t = round_obs(sampled)
+            telem = next_telemetry(telem, count_obs, sampled[3],
+                                   sampled[4])
+            nxt, ctrl_state = sample_round(t + 1, ctrl_state, telem)
             comm, cov_mean, min_count, min_cov_count = diagnostics(
-                Mx, count_q)
+                Mx, count_obs)
             x = finish_step(x, g)             # first consumer of the psum
-            return (x, C, nxt[-1], telem) + nxt[:-1], (
+            return (x, C, late_buf, ctrl_state, telem, nxt), (
                 x, cov_mean, comm, min_count, min_cov_count,
-                telem.times.max(), telem.stale_q.max())
+                round_t, telem.stale_q.max())
 
-        nxt0 = sample_round(1, ctrl_state0, telem0)
-        init_carry = (x1, C0, nxt0[-1], telem0) + nxt0[:-1]
+        nxt0, ctrl_state0 = sample_round(1, ctrl_state0, telem0)
+        init_carry = (x1, C0, late_buf0, ctrl_state0, telem0, nxt0)
     else:
         def body(carry, t):
-            x, C, ctrl_state, telem = carry
-            M, gk, count_q, work, times, ctrl_state = sample_round(
-                t, ctrl_state, telem)
-            g, C, Mx = round_update(x, C, M, gk, count_q)
+            x, C, late_buf, ctrl_state, telem = carry
+            sampled, ctrl_state = sample_round(t, ctrl_state, telem)
+            g, C, Mx, late_buf = round_update(x, C, late_buf, sampled)
             x = finish_step(x, g)
-            telem = next_telemetry(telem, count_q, work, times)
+            count_obs, round_t = round_obs(sampled)
+            telem = next_telemetry(telem, count_obs, sampled[3],
+                                   sampled[4])
             comm, cov_mean, min_count, min_cov_count = diagnostics(
-                Mx, count_q)
-            return (x, C, ctrl_state, telem), (
+                Mx, count_obs)
+            return (x, C, late_buf, ctrl_state, telem), (
                 x, cov_mean, comm, min_count, min_cov_count,
-                telem.times.max(), telem.stale_q.max())
+                round_t, telem.stale_q.max())
 
-        init_carry = (x1, C0, ctrl_state0, telem0)
+        init_carry = (x1, C0, late_buf0, ctrl_state0, telem0)
 
     ts = jnp.arange(1, num_rounds + 1)
     _, (xs_t, cov, comm, min_counts, min_cov_counts, times,
@@ -510,17 +619,17 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
 
 _SHARDED_STATIC = ("mesh", "axis_name", "num_rounds", "num_regions",
                    "controller", "mu", "lr", "curvature", "cho_lower",
-                   "num_workers", "overlap")
+                   "num_workers", "overlap", "qspec")
 
 
 def _sharded_engine(problem, k_loop, x1, C0, cho_c, hdiag, cost, *, mesh,
                     axis_name, num_rounds, num_regions, controller, mu, lr,
-                    curvature, cho_lower, num_workers, overlap):
+                    curvature, cho_lower, num_workers, overlap, qspec=None):
     body = functools.partial(
         _sharded_rounds_body, axis_name=axis_name, num_rounds=num_rounds,
         num_regions=num_regions, controller=controller, mu=mu, lr=lr,
         curvature=curvature, cho_lower=cho_lower, num_workers=num_workers,
-        overlap=overlap)
+        overlap=overlap, qspec=qspec)
     in_specs = (_worker_sharded_specs(problem, axis_name),
                 _replicated_specs(k_loop), _replicated_specs(x1),
                 P(axis_name, None), _replicated_specs(cho_c),
@@ -549,105 +658,87 @@ def _check_mesh(problem, mesh, axis_name: str):
     return n_dev
 
 
-def _sharded_args(problem, key, *, mesh, axis_name, num_rounds, num_regions,
-                  policy, mu, lr, curvature, hutchinson_samples, projection,
-                  ns_iters, overlap, controller, cost):
+def _sharded_args(problem, key, opts: RanlOptions, *, mesh, axis_name,
+                  controller, cost):
     _check_mesh(problem, mesh, axis_name)
-    controller, cost = _hetero_defaults(problem, policy, controller, cost)
-    cfg = _config(problem, mu=mu, lr=lr, curvature=curvature,
-                  hutchinson_samples=hutchinson_samples,
+    controller, cost = _hetero_defaults(problem, opts.policy, controller,
+                                        cost)
+    projection = opts.projection or "eigh"
+    cfg = _config(problem, mu=opts.mu, lr=opts.lr,
+                  curvature=opts.curvature,
+                  hutchinson_samples=opts.hutchinson_samples,
                   projection=projection)
     hutch = cfg.pop("hutch_samples")
     k_init, k_loop = jax.random.split(key)
     x1, C0, cho_c, cho_lower, hdiag = _init_phase(
         problem, k_init, mu=cfg["mu"], lr=cfg["lr"],
         curvature=cfg["curvature"], hutch_samples=hutch,
-        projection=projection, ns_iters=ns_iters)
+        projection=projection, ns_iters=opts.ns_iters)
     args = (problem, k_loop, x1, C0, cho_c, hdiag, cost)
     static = dict(mesh=mesh, axis_name=axis_name,
-                  num_rounds=int(num_rounds), num_regions=int(num_regions),
+                  num_rounds=int(opts.num_rounds),
+                  num_regions=int(opts.num_regions),
                   controller=controller, cho_lower=cho_lower,
-                  num_workers=problem.num_workers, overlap=bool(overlap),
+                  num_workers=problem.num_workers,
+                  overlap=bool(opts.overlap), qspec=opts.quorum_spec(),
                   **cfg)
     return args, static
 
 
-def run_ranl_sharded(problem, key, *, mesh, num_rounds: int = 30,
-                     num_regions: int = 8,
-                     policy: PolicyConfig = PolicyConfig(),
-                     mu: float | None = None, curvature: str = "dense",
-                     lr: float = 1.0, hutchinson_samples: int = 8,
-                     axis_name: str = "data", projection: str = "eigh",
-                     ns_iters: int | str = 60, overlap: bool = False,
-                     controller=None, cost=None):
-    """Algorithm 1 with the worker axis sharded across ``mesh`` devices.
+def _run_sharded(problem, key, opts: RanlOptions, *, mesh,
+                 axis_name: str = "data", controller=None, cost=None):
+    """Algorithm 1 with the worker axis sharded across ``mesh`` devices
+    (engine ``"sharded"`` of ``repro.run``).
 
-    The init phase runs replicated (identical to ``run_ranl``, including
-    its ``projection`` knob); the round loop runs under ``shard_map`` with
-    ``problem``'s worker-indexed leaves and the gradient memory C
-    partitioned over ``axis_name`` and server aggregation expressed as
-    ``psum`` collectives.  ``overlap=True`` selects the double-buffered
-    round loop (next round's mask sampling and coverage-count psum
-    pipelined into the param-psum window — identical math, see
-    ``_sharded_rounds_body``).  Trajectories match ``run_ranl`` to
-    reduction-reorder tolerance (parity-pinned at 1e-6 in
-    tests/test_multidevice.py).  The aggregation is always the pure-jnp
-    collective form — ``use_kernel`` has no sharded counterpart.
-
-    ``controller``/``cost`` close the heterogeneity loop exactly as in
-    ``run_ranl`` — the controller steps replicated on every device, so
-    the round-loop collectives are unchanged.
+    The init phase runs replicated (identical to the scan engine,
+    including its ``projection`` knob); the round loop runs under
+    ``shard_map`` with ``problem``'s worker-indexed leaves and the
+    gradient memory C partitioned over ``axis_name`` and server
+    aggregation expressed as ``psum`` collectives.  ``opts.overlap``
+    selects the double-buffered round loop (next round's mask sampling
+    and coverage-count psum pipelined into the param-psum window —
+    identical math, see ``_sharded_rounds_body``).  Trajectories match
+    the scan engine to reduction-reorder tolerance (parity-pinned at
+    1e-6 in tests/test_multidevice.py).  The aggregation is always the
+    pure-jnp collective form — ``use_kernel`` has no sharded
+    counterpart.  Quorum mode folds the device-local late buffer into
+    the round's one param-sized psum (no new collective — see the body).
 
     Requires ``num_workers`` divisible by the ``axis_name`` mesh extent.
     """
-    if num_rounds <= 0:       # no rounds -> no communication to shard
+    if opts.num_rounds <= 0:  # no rounds -> no communication to shard
         _check_mesh(problem, mesh, axis_name)   # still validate the mesh
-        return run_ranl(problem, key, num_rounds=num_rounds,
-                        num_regions=num_regions, policy=policy, mu=mu,
-                        curvature=curvature, lr=lr,
-                        hutchinson_samples=hutchinson_samples,
-                        projection=projection, ns_iters=ns_iters,
-                        controller=controller, cost=cost)
-    args, static = _sharded_args(
-        problem, key, mesh=mesh, axis_name=axis_name, num_rounds=num_rounds,
-        num_regions=num_regions, policy=policy, mu=mu, lr=lr,
-        curvature=curvature, hutchinson_samples=hutchinson_samples,
-        projection=projection, ns_iters=ns_iters, overlap=overlap,
-        controller=controller, cost=cost)
+        return _run_scan(problem, key, opts, controller=controller,
+                         cost=cost)
+    args, static = _sharded_args(problem, key, opts, mesh=mesh,
+                                 axis_name=axis_name,
+                                 controller=controller, cost=cost)
     xs, cov, comm, tau, tau_cov, times, stale = _sharded_jit(
         *args, **static)
     dist = jnp.sum((xs - problem.x_star[None, :]) ** 2, axis=1)
     losses = jax.vmap(problem.loss)(xs)
-    return RanlResult(xs=xs, dist_sq=dist, losses=losses, coverage=cov,
-                      comm_floats=comm, tau_star=int(tau),
-                      tau_covered=int(tau_cov), round_time=times,
-                      max_stale=stale)
+    return _subsampled(RanlResult(
+        xs=xs, dist_sq=dist, losses=losses, coverage=cov,
+        comm_floats=comm, tau_star=int(tau), tau_covered=int(tau_cov),
+        round_time=times, max_stale=stale), opts.record_every)
 
 
-def lower_ranl_sharded(problem, key, *, mesh, num_rounds: int = 30,
-                       num_regions: int = 8,
-                       policy: PolicyConfig = PolicyConfig(),
-                       mu: float | None = None, curvature: str = "dense",
-                       lr: float = 1.0, hutchinson_samples: int = 8,
-                       axis_name: str = "data", projection: str = "eigh",
-                       ns_iters: int | str = 60, overlap: bool = False,
-                       controller=None, cost=None):
+def _lower_sharded(problem, key, opts: RanlOptions, *, mesh,
+                   axis_name: str = "data", controller=None, cost=None):
     """Lower (without running) the sharded round loop.
 
-    Returns the ``jax.stages.Lowered`` for the same computation
-    ``run_ranl_sharded`` executes; ``.compile().as_text()`` is the
+    Returns the ``jax.stages.Lowered`` for the same computation the
+    ``"sharded"`` engine executes; ``.compile().as_text()`` is the
     partitioned HLO that ``launch.hlo_analysis`` can inventory — the
     one-param-sized-all-reduce-per-round invariant is asserted on it
     (``overlap=True`` included: pipelining moves collectives across
-    iteration boundaries but never adds one; controller-driven runs
-    included: the controller steps replicated and adds no collective).
+    iteration boundaries but never adds one; controller-driven and
+    quorum runs included: the controller steps replicated and the late
+    fold rides the existing psum, so neither adds a collective).
     """
-    args, static = _sharded_args(
-        problem, key, mesh=mesh, axis_name=axis_name, num_rounds=num_rounds,
-        num_regions=num_regions, policy=policy, mu=mu, lr=lr,
-        curvature=curvature, hutchinson_samples=hutchinson_samples,
-        projection=projection, ns_iters=ns_iters, overlap=overlap,
-        controller=controller, cost=cost)
+    args, static = _sharded_args(problem, key, opts, mesh=mesh,
+                                 axis_name=axis_name,
+                                 controller=controller, cost=cost)
     return _sharded_jit.lower(*args, **static)
 
 
@@ -738,7 +829,8 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
                            num_regions: int, controller, mu: float,
                            lr: float, curvature: str, use_kernel: bool,
                            interpret: bool | None, num_workers: int,
-                           n_data: int, n_model: int, overlap: bool):
+                           n_data: int, n_model: int, overlap: bool,
+                           qspec: QuorumSpec | None = None):
     """Per-device round loop on the 2-D mesh (runs under ``shard_map`` for
     the diag path, called inline by ``_sharded2d_dense_body`` for dense).
 
@@ -758,8 +850,14 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
     it in the solve — identical values, identical reductions.  The
     controller steps replicated on the full telemetry (see the 1-D body)
     and adds no collective.
+
+    Quorum mode mirrors the 1-D body on the local column slice: the
+    split is computed replicated in ``sample_round``, the device-local
+    ``(max_delay, p)`` late-buffer tile folds into the round's one
+    data-axis param-shard psum, and the fused kernel path is bypassed
+    (it has no late-fold form).
     """
-    from ..hetero.cost import worker_times
+    from ..hetero.cost import quorum_split, worker_times
     from ..hetero.controller import initial_telemetry, next_telemetry
     from ..kernels.region_aggregate import local_region_ids
     N, Q = num_workers, num_regions
@@ -778,15 +876,18 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
         lambda i, xp, k: problem.worker_grad_rows(i, xp, k, row_start, p))
     # the fused Pallas kernel aggregates over the workers it can see, so it
     # is exact only when this device sees ALL workers (pure model-parallel
-    # meshes); otherwise the collective jnp form is used.
-    kernel_ok = use_kernel and curvature == "diag" and n_data == 1
+    # meshes); otherwise the collective jnp form is used.  It has no
+    # late-fold form, so quorum runs always take the jnp path.
+    kernel_ok = (use_kernel and curvature == "diag" and n_data == 1
+                 and qspec is None)
 
     def sample_round(t, ctrl_state, telem):
         """Everything x-independent about round t: step the controller on
         the FULL (N, Q) telemetry on every device (tiny, keeps the PRNG
         stream bit-identical to the single-device engine), slice out this
-        shard's workers, reduce the coverage counts (Q ints), and price
-        the round under the cost model."""
+        shard's workers, reduce the coverage counts (Q ints), price the
+        round under the cost model, and (quorum mode) split it at the
+        quorum deadline."""
         kt = jax.random.fold_in(k_loop, t)
         M_full, ctrl_state = _controller_mask(controller, cost, ctrl_state,
                                               telem, kt, t, N, Q)
@@ -796,7 +897,20 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
         count_q = jax.lax.psum(M.sum(axis=0), data_axis)
         work = (M_full * sizes_q[None, :]).sum(axis=1)
         times = worker_times(cost, work, t)
-        return M, gk, count_q, work, times, ctrl_state
+        if qspec is None:
+            qinfo = ()
+        else:
+            deadline, on_time, delays = quorum_split(
+                times, M_full, quorum=qspec.quorum,
+                quorum_tau=qspec.quorum_tau, max_delay=qspec.max_delay)
+            count_on = (M_full & on_time[:, None]).sum(axis=0)
+            qinfo = (count_on,
+                     jax.lax.dynamic_slice_in_dim(on_time, wstart,
+                                                  n_local),
+                     jax.lax.dynamic_slice_in_dim(delays, wstart,
+                                                  n_local),
+                     deadline)
+        return (M, gk, count_q, work, times, qinfo), ctrl_state
 
     def scatter_rows(vec_loc):
         """Assemble a replicated (d,) vector from local rows — one
@@ -805,12 +919,16 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
             jax.lax.dynamic_update_slice(jnp.zeros(d, vec_loc.dtype),
                                          vec_loc, (row_start,)), model_axis)
 
-    def round_update(x, C, M, gk, count_q):
+    def round_update(x, C, late_buf, sampled):
         """The x-dependent half, up to issuing the round's main
-        collective.  Returns (x_new, C, g_loc): for the kernel path the
-        new iterate directly (its model-axis assembly psum issued),
-        otherwise ``g_loc`` — the result of the round's ONE data-axis
-        param-shard all-reduce — for ``finish_step`` to consume."""
+        collective.  Returns (x_new, C, g_loc, late_buf): for the kernel
+        path the new iterate directly (its model-axis assembly psum
+        issued), otherwise ``g_loc`` — the result of the round's ONE
+        data-axis param-shard all-reduce — for ``finish_step`` to
+        consume.  Quorum mode folds the local late-buffer tile into that
+        same psum and enqueues this round's late work (see the 1-D
+        body)."""
+        M, gk, count_q, _, _, qinfo = sampled
         Mx_full = expand_mask(M, region_ids)        # (n_local, d)
         Mx = expand_mask(M, region_ids_loc)         # (n_local, p) local cols
         x_pruned = jnp.where(Mx_full, x[None, :], 0.0)
@@ -822,17 +940,31 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
             x_loc = jax.lax.dynamic_slice(x, (row_start,), (p,))
             x_loc, C = ranl_update(x_loc, hdiag, G, Mx, C, mu=mu, lr=lr,
                                    interpret=interpret)
-            return scatter_rows(x_loc), C, None
+            return scatter_rows(x_loc), C, None, late_buf
         # single-reduction aggregation on the local d-slice: the
         # worker-axis sum below is the round's ONE data-axis param-shard
         # all-reduce (d/n_model floats)
         count_x = jnp.take(count_q, region_ids_loc)
-        covered_x = jnp.take(count_q > 0, region_ids_loc)
         denom = jnp.maximum(count_x, 1).astype(G.dtype)
-        contrib = jnp.where(covered_x[None, :], G / denom, C / N)
-        g_loc = jax.lax.psum(contrib.sum(axis=0), data_axis)
-        C = jnp.where(Mx, G, C)                     # device-local tile
-        return None, C, g_loc
+        if qspec is None:
+            covered_x = jnp.take(count_q > 0, region_ids_loc)
+            contrib = jnp.where(covered_x[None, :], G / denom, C / N)
+            g_loc = jax.lax.psum(contrib.sum(axis=0), data_axis)
+            C = jnp.where(Mx, G, C)                 # device-local tile
+            return None, C, g_loc, late_buf
+        count_on, on_loc, delays_loc, _ = qinfo
+        covered_x = jnp.take(count_on > 0, region_ids_loc)
+        fresh = jnp.where(on_loc[:, None], G, 0.0)
+        contrib = jnp.where(covered_x[None, :], fresh / denom, C / N)
+        g_loc = jax.lax.psum(contrib.sum(axis=0) + late_buf[0], data_axis)
+        adds = late_fold_updates(G, Mx, count_x.astype(G.dtype),
+                                 delays_loc, gamma=qspec.gamma,
+                                 max_delay=qspec.max_delay)
+        late_buf = jnp.concatenate(
+            [late_buf[1:], jnp.zeros_like(late_buf[:1])], axis=0) + adds
+        dropped = delays_loc > qspec.max_delay
+        C = jnp.where(Mx & ~dropped[:, None], G, C)
+        return None, C, g_loc, late_buf
 
     def finish_step(x, g_loc):
         if curvature == "dense":
@@ -843,49 +975,68 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
             step = scatter_rows(g_loc / project_diag(hdiag, mu))
         return x - lr * step
 
-    def diagnostics(count_q):
-        # uplink floats, from the already-global counts (no extra psum)
+    def round_obs(sampled):
+        """(telemetry count, round-time trace value) for this round —
+        on-time counts and the quorum deadline in quorum mode."""
+        _, _, count_q, _, times, qinfo = sampled
+        if qspec is None:
+            return count_q, times.max()
+        return qinfo[0], qinfo[3]
+
+    def diagnostics(count_q, count_disp):
+        # uplink floats, from the already-global counts (no extra psum);
+        # comm stays FULL coverage (late workers still transmit) while the
+        # coverage/τ diagnostics see the displayed (on-time) counts
         comm = (count_q * sizes_q).sum()
         cov_mean, min_count, min_cov_count = _round_diagnostics(
-            count_q > 0, count_q, N)
+            count_disp > 0, count_disp, N)
         return comm, cov_mean, min_count, min_cov_count
 
     ctrl_state0 = controller.init_state(N, Q)
     telem0 = initial_telemetry(N, Q)
+    late_buf0 = (() if qspec is None
+                 else jnp.zeros((qspec.max_delay, p)))
     if overlap:
         def body(carry, t):
-            x, C, ctrl_state, telem, M, gk, count_q, work, times = carry
-            x_new, C, g_loc = round_update(x, C, M, gk, count_q)
+            x, C, late_buf, ctrl_state, telem, sampled = carry
+            x_new, C, g_loc, late_buf = round_update(x, C, late_buf,
+                                                     sampled)
             # overlap window: round t's telemetry fold + diagnostics and
             # round t+1's sampling + count psum — none of it touches the
             # in-flight psum
-            telem = next_telemetry(telem, count_q, work, times)
-            nxt = sample_round(t + 1, ctrl_state, telem)
-            comm, cov_mean, min_count, min_cov_count = diagnostics(count_q)
+            count_obs, round_t = round_obs(sampled)
+            telem = next_telemetry(telem, count_obs, sampled[3],
+                                   sampled[4])
+            nxt, ctrl_state = sample_round(t + 1, ctrl_state, telem)
+            comm, cov_mean, min_count, min_cov_count = diagnostics(
+                sampled[2], count_obs)
             if x_new is None:
                 x_new = finish_step(x, g_loc)     # first psum consumer
-            return (x_new, C, nxt[-1], telem) + nxt[:-1], (
+            return (x_new, C, late_buf, ctrl_state, telem, nxt), (
                 x_new, cov_mean, comm, min_count, min_cov_count,
-                telem.times.max(), telem.stale_q.max())
+                round_t, telem.stale_q.max())
 
-        nxt0 = sample_round(1, ctrl_state0, telem0)
-        init_carry = (x1, C0, nxt0[-1], telem0) + nxt0[:-1]
+        nxt0, ctrl_state0 = sample_round(1, ctrl_state0, telem0)
+        init_carry = (x1, C0, late_buf0, ctrl_state0, telem0, nxt0)
     else:
         def body(carry, t):
-            x, C, ctrl_state, telem = carry
+            x, C, late_buf, ctrl_state, telem = carry
             # x: (d,) replicated; C: (n_local, p)
-            M, gk, count_q, work, times, ctrl_state = sample_round(
-                t, ctrl_state, telem)
-            x_new, C, g_loc = round_update(x, C, M, gk, count_q)
+            sampled, ctrl_state = sample_round(t, ctrl_state, telem)
+            x_new, C, g_loc, late_buf = round_update(x, C, late_buf,
+                                                     sampled)
             if x_new is None:
                 x_new = finish_step(x, g_loc)
-            telem = next_telemetry(telem, count_q, work, times)
-            comm, cov_mean, min_count, min_cov_count = diagnostics(count_q)
-            return (x_new, C, ctrl_state, telem), (
+            count_obs, round_t = round_obs(sampled)
+            telem = next_telemetry(telem, count_obs, sampled[3],
+                                   sampled[4])
+            comm, cov_mean, min_count, min_cov_count = diagnostics(
+                sampled[2], count_obs)
+            return (x_new, C, late_buf, ctrl_state, telem), (
                 x_new, cov_mean, comm, min_count, min_cov_count,
-                telem.times.max(), telem.stale_q.max())
+                round_t, telem.stale_q.max())
 
-        init_carry = (x1, C0, ctrl_state0, telem0)
+        init_carry = (x1, C0, late_buf0, ctrl_state0, telem0)
 
     ts = jnp.arange(1, num_rounds + 1)
     _, (xs_t, cov, comm, min_counts, min_cov_counts, times,
@@ -898,13 +1049,13 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
 _SHARDED2D_STATIC = ("mesh", "data_axis", "model_axis", "num_rounds",
                      "num_regions", "controller", "mu", "lr", "curvature",
                      "use_kernel", "interpret", "num_workers", "n_data",
-                     "n_model", "overlap")
+                     "n_model", "overlap", "qspec")
 
 
 def _sharded2d_engine(problem, k_loop, x1, C0, hdiag, cost, *, mesh,
                       data_axis, model_axis, num_rounds, num_regions,
                       controller, mu, lr, curvature, use_kernel, interpret,
-                      num_workers, n_data, n_model, overlap):
+                      num_workers, n_data, n_model, overlap, qspec=None):
     """Diag-curvature 2-D engine: host-side O(d) init, sharded rounds."""
     from ..launch.shard import ranl2d_pspecs
 
@@ -916,7 +1067,7 @@ def _sharded2d_engine(problem, k_loop, x1, C0, hdiag, cost, *, mesh,
             num_regions=num_regions, controller=controller, mu=mu, lr=lr,
             curvature=curvature, use_kernel=use_kernel, interpret=interpret,
             num_workers=num_workers, n_data=n_data, n_model=n_model,
-            overlap=overlap)
+            overlap=overlap, qspec=qspec)
 
     specs = ranl2d_pspecs(problem, worker_axis=data_axis,
                           dim_axis=model_axis)
@@ -934,7 +1085,8 @@ _sharded2d_jit = functools.partial(
 
 def _sharded2d_dense_body(problem, key, cost, *, data_axis, model_axis,
                           num_rounds, num_regions, controller, mu, lr,
-                          ns_iters, overlap, num_workers, n_data, n_model):
+                          ns_iters, overlap, num_workers, n_data, n_model,
+                          qspec=None):
     """Dense-curvature 2-D program, init INCLUDED (runs under shard_map).
 
     Alg. 1 lines 1–8 with every d-sized object as model-axis row panels:
@@ -993,26 +1145,27 @@ def _sharded2d_dense_body(problem, key, cost, *, data_axis, model_axis,
         model_axis=model_axis, num_rounds=num_rounds,
         num_regions=num_regions, controller=controller, mu=mu, lr=lr,
         curvature="dense", use_kernel=False, interpret=None,
-        num_workers=N, n_data=n_data, n_model=n_model, overlap=overlap)
+        num_workers=N, n_data=n_data, n_model=n_model, overlap=overlap,
+        qspec=qspec)
 
 
 _SHARDED2D_DENSE_STATIC = ("mesh", "data_axis", "model_axis", "num_rounds",
                            "num_regions", "controller", "mu", "lr",
                            "ns_iters", "overlap", "num_workers", "n_data",
-                           "n_model")
+                           "n_model", "qspec")
 
 
 def _sharded2d_dense_engine(problem, key, cost, *, mesh, data_axis,
                             model_axis, num_rounds, num_regions,
                             controller, mu, lr, ns_iters, overlap,
-                            num_workers, n_data, n_model):
+                            num_workers, n_data, n_model, qspec=None):
     from ..launch.shard import ranl2d_pspecs
     body = functools.partial(
         _sharded2d_dense_body, data_axis=data_axis, model_axis=model_axis,
         num_rounds=num_rounds, num_regions=num_regions,
         controller=controller, mu=mu, lr=lr, ns_iters=ns_iters,
         overlap=overlap, num_workers=num_workers, n_data=n_data,
-        n_model=n_model)
+        n_model=n_model, qspec=qspec)
     specs = ranl2d_pspecs(problem, worker_axis=data_axis,
                           dim_axis=model_axis)
     in_specs = (specs["problem"], _replicated_specs(key),
@@ -1046,36 +1199,45 @@ def _check_mesh2d(problem, mesh, data_axis: str, model_axis: str):
     return n_data, n_model
 
 
-def _sharded2d_args(problem, key, *, mesh, data_axis, model_axis,
-                    num_rounds, num_regions, policy, mu, lr, curvature,
-                    use_kernel, hutchinson_samples, ns_iters, overlap,
-                    controller, cost, abstract: bool = False):
+def _sharded2d_args(problem, key, opts: RanlOptions, *, mesh, data_axis,
+                    model_axis, controller, cost, abstract: bool = False):
     """-> (jitted_engine, args, static) for the requested curvature.
 
     Dense: the ENTIRE program — init included — is one shard_map'd
     computation over (problem, key, cost), so lowering it exposes every
     phase to the HLO memory/communication assertions and nothing
     replicated ever materializes host-side.  Diag: the O(d)-state
-    Hutchinson init runs host-side exactly as in ``run_ranl`` and only
+    Hutchinson init runs host-side exactly as in the scan engine and only
     the round loop is shard_map'd (with ``abstract=True`` the init is
     traced to avals via ``jax.eval_shape`` so lowering pays no compute).
     """
     n_data, n_model = _check_mesh2d(problem, mesh, data_axis, model_axis)
-    controller, cost = _hetero_defaults(problem, policy, controller, cost)
-    cfg = _config(problem, mu=mu, lr=lr, curvature=curvature,
-                  hutchinson_samples=hutchinson_samples)
+    controller, cost = _hetero_defaults(problem, opts.policy, controller,
+                                        cost)
+    if opts.curvature == "dense" and opts.projection == "eigh":
+        raise ValueError(
+            "projection='eigh' is not implementable on the 2-D dense path "
+            "(no device may hold a d×d buffer) — use projection='ns' or "
+            "leave projection=None for the engine default")
+    cfg = _config(problem, mu=opts.mu, lr=opts.lr,
+                  curvature=opts.curvature,
+                  hutchinson_samples=opts.hutchinson_samples,
+                  projection=opts.projection
+                  or ("ns" if opts.curvature == "dense" else "eigh"))
     hutch = cfg.pop("hutch_samples")
+    qspec = opts.quorum_spec()
 
     if cfg["curvature"] == "dense":
         static = dict(mesh=mesh, data_axis=data_axis, model_axis=model_axis,
-                      num_rounds=int(num_rounds),
-                      num_regions=int(num_regions), controller=controller,
+                      num_rounds=int(opts.num_rounds),
+                      num_regions=int(opts.num_regions),
+                      controller=controller,
                       mu=cfg["mu"], lr=cfg["lr"],
-                      ns_iters=ns_iters if ns_iters == "auto"
-                      else int(ns_iters),
-                      overlap=bool(overlap),
+                      ns_iters=opts.ns_iters if opts.ns_iters == "auto"
+                      else int(opts.ns_iters),
+                      overlap=bool(opts.overlap),
                       num_workers=problem.num_workers,
-                      n_data=n_data, n_model=n_model)
+                      n_data=n_data, n_model=n_model, qspec=qspec)
         return _sharded2d_dense_jit, (problem, key, cost), static
 
     def make_args(problem, key):
@@ -1090,24 +1252,20 @@ def _sharded2d_args(problem, key, *, mesh, data_axis, model_axis,
     else:
         args = make_args(problem, key)
     static = dict(mesh=mesh, data_axis=data_axis, model_axis=model_axis,
-                  num_rounds=int(num_rounds), num_regions=int(num_regions),
-                  controller=controller, use_kernel=bool(use_kernel),
+                  num_rounds=int(opts.num_rounds),
+                  num_regions=int(opts.num_regions),
+                  controller=controller, use_kernel=bool(opts.use_kernel),
                   interpret=None, num_workers=problem.num_workers,
-                  n_data=n_data, n_model=n_model, overlap=bool(overlap),
-                  **cfg)
+                  n_data=n_data, n_model=n_model,
+                  overlap=bool(opts.overlap), qspec=qspec, **cfg)
     return _sharded2d_jit, (*args, cost), static
 
 
-def run_ranl_sharded2d(problem, key, *, mesh, num_rounds: int = 30,
-                       num_regions: int = 8,
-                       policy: PolicyConfig = PolicyConfig(),
-                       mu: float | None = None, curvature: str = "dense",
-                       lr: float = 1.0, use_kernel: bool = True,
-                       hutchinson_samples: int = 8,
-                       data_axis: str = "data", model_axis: str = "model",
-                       ns_iters: int | str = 60, overlap: bool = False,
-                       controller=None, cost=None):
-    """Algorithm 1 with workers AND the parameter dimension sharded.
+def _run_sharded2d(problem, key, opts: RanlOptions, *, mesh,
+                   data_axis: str = "data", model_axis: str = "model",
+                   controller=None, cost=None):
+    """Algorithm 1 with workers AND the parameter dimension sharded
+    (engine ``"sharded2d"`` of ``repro.run``).
 
     2-D ``(data_axis, model_axis)`` mesh: the worker axis partitions over
     ``data_axis`` exactly as in ``run_ranl_sharded``; the parameter
@@ -1142,41 +1300,28 @@ def run_ranl_sharded2d(problem, key, *, mesh, num_rounds: int = 30,
     Requires ``num_workers`` divisible by the data axis extent and
     ``dim`` divisible by the model axis extent.
     """
-    if num_rounds <= 0:       # no rounds -> nothing to shard
+    if opts.num_rounds <= 0:  # no rounds -> nothing to shard
         _check_mesh2d(problem, mesh, data_axis, model_axis)
-        return run_ranl(problem, key, num_rounds=num_rounds,
-                        num_regions=num_regions, policy=policy, mu=mu,
-                        curvature=curvature, lr=lr,
-                        hutchinson_samples=hutchinson_samples,
-                        projection="ns" if curvature == "dense" else "eigh",
-                        ns_iters=ns_iters, controller=controller, cost=cost)
+        fallback = opts.merged(
+            projection=opts.projection
+            or ("ns" if opts.curvature == "dense" else "eigh"))
+        return _run_scan(problem, key, fallback, controller=controller,
+                         cost=cost)
     engine, args, static = _sharded2d_args(
-        problem, key, mesh=mesh, data_axis=data_axis,
-        model_axis=model_axis, num_rounds=num_rounds,
-        num_regions=num_regions, policy=policy, mu=mu, lr=lr,
-        curvature=curvature, use_kernel=use_kernel,
-        hutchinson_samples=hutchinson_samples, ns_iters=ns_iters,
-        overlap=overlap, controller=controller, cost=cost)
+        problem, key, opts, mesh=mesh, data_axis=data_axis,
+        model_axis=model_axis, controller=controller, cost=cost)
     xs, cov, comm, tau, tau_cov, times, stale = engine(*args, **static)
     dist = jnp.sum((xs - problem.x_star[None, :]) ** 2, axis=1)
     losses = jax.vmap(problem.loss)(xs)
-    return RanlResult(xs=xs, dist_sq=dist, losses=losses, coverage=cov,
-                      comm_floats=comm, tau_star=int(tau),
-                      tau_covered=int(tau_cov), round_time=times,
-                      max_stale=stale)
+    return _subsampled(RanlResult(
+        xs=xs, dist_sq=dist, losses=losses, coverage=cov,
+        comm_floats=comm, tau_star=int(tau), tau_covered=int(tau_cov),
+        round_time=times, max_stale=stale), opts.record_every)
 
 
-def lower_ranl_sharded2d(problem, key, *, mesh, num_rounds: int = 30,
-                         num_regions: int = 8,
-                         policy: PolicyConfig = PolicyConfig(),
-                         mu: float | None = None, curvature: str = "dense",
-                         lr: float = 1.0, use_kernel: bool = True,
-                         hutchinson_samples: int = 8,
-                         data_axis: str = "data",
-                         model_axis: str = "model",
-                         ns_iters: int | str = 60,
-                         overlap: bool = False, controller=None,
-                         cost=None):
+def _lower_sharded2d(problem, key, opts: RanlOptions, *, mesh,
+                     data_axis: str = "data", model_axis: str = "model",
+                     controller=None, cost=None):
     """Lower (without running) the 2-D sharded program.
 
     Genuinely compile-time: for ``curvature="dense"`` the whole program
@@ -1190,12 +1335,9 @@ def lower_ranl_sharded2d(problem, key, *, mesh, num_rounds: int = 30,
     ``jax.eval_shape`` and the round loop is lowered as before.
     """
     engine, args, static = _sharded2d_args(
-        problem, key, mesh=mesh, data_axis=data_axis,
-        model_axis=model_axis, num_rounds=num_rounds,
-        num_regions=num_regions, policy=policy, mu=mu, lr=lr,
-        curvature=curvature, use_kernel=use_kernel,
-        hutchinson_samples=hutchinson_samples, ns_iters=ns_iters,
-        overlap=overlap, controller=controller, cost=cost, abstract=True)
+        problem, key, opts, mesh=mesh, data_axis=data_axis,
+        model_axis=model_axis, controller=controller, cost=cost,
+        abstract=True)
     return engine.lower(*args, **static)
 
 
@@ -1210,60 +1352,74 @@ def _config(problem, *, mu, lr, curvature, hutchinson_samples,
                 hutch_samples=int(hutchinson_samples))
 
 
-def run_ranl(problem, key, *, num_rounds: int = 30, num_regions: int = 8,
-             policy: PolicyConfig = PolicyConfig(), mu: float | None = None,
-             record_every: int = 1, curvature: str = "dense",
-             lr: float = 1.0, use_kernel: bool = True,
-             hutchinson_samples: int = 8, projection: str = "eigh",
-             ns_iters: int | str = 60, controller=None, cost=None):
-    """Run Algorithm 1 on a convex problem. Returns RanlResult.
+def _subsampled(result: RanlResult, record_every: int) -> RanlResult:
+    """Post-hoc iterate thinning for ``record_every > 1``.
 
-    ``curvature="dense"`` (default) keeps the exact Definition-4
-    projection — ``projection="eigh"`` (default) via eigenvalue clamping,
-    ``projection="ns"`` via the matmul-only Newton–Schulz form
-    (``ns_iters`` steps or ``"auto"``; the single-device oracle of the
-    dimension-sharded engine's init).  ``"diag"`` uses a Hutchinson
-    diagonal estimate and the fused Pallas update kernel (set
-    ``use_kernel=False`` for the pure-jnp oracle).
-
-    ``controller`` (a ``repro.hetero`` Controller; overrides ``policy``)
-    closes the heterogeneity loop: it allocates each round's mask from
-    the previous round's telemetry.  ``cost`` (a ``CostModel``) prices
-    every round — availability dynamics drop workers from the sampled
-    masks, and ``RanlResult.round_time``/``.max_stale`` carry the
-    simulated wall-clock and staleness traces.
+    Keeps x⁰, x¹ (post-init), every ``record_every``-th round's iterate
+    and the final one, on the iterate-indexed arrays (``xs``/``dist_sq``/
+    ``losses`` — batched runs thin along their iterate axis).  Per-round
+    traces (coverage/comm/round_time/max_stale) stay full length: they
+    are what the time-to-target and telemetry analyses consume.
     """
-    del record_every  # retained for API compatibility
-    ctrl, cost = _hetero_defaults(problem, policy, controller, cost)
-    cfg = _config(problem, mu=mu, lr=lr, curvature=curvature,
-                  hutchinson_samples=hutchinson_samples,
+    k = int(record_every)
+    if k <= 1:
+        return result
+    T = result.dist_sq.shape[-1] - 2
+    rounds = sorted(set(range(k, T + 1, k)) | ({T} if T > 0 else set()))
+    idx = jnp.asarray([0, 1] + [1 + r for r in rounds], jnp.int32)
+    return dc_replace(
+        result,
+        xs=jnp.take(result.xs, idx, axis=result.xs.ndim - 2),
+        dist_sq=jnp.take(result.dist_sq, idx, axis=-1),
+        losses=jnp.take(result.losses, idx, axis=-1))
+
+
+def _run_scan(problem, key, opts: RanlOptions, *, controller=None,
+              cost=None):
+    """Algorithm 1 as one compiled ``lax.scan`` (engine ``"scan"`` of
+    ``repro.run``).  Returns RanlResult.
+
+    ``opts.curvature="dense"`` (default) keeps the exact Definition-4
+    projection — ``projection=None``/``"eigh"`` via eigenvalue clamping,
+    ``"ns"`` via the matmul-only Newton–Schulz form (``ns_iters`` steps
+    or ``"auto"``; the single-device oracle of the dimension-sharded
+    init).  ``"diag"`` uses a Hutchinson diagonal estimate and the fused
+    Pallas update kernel (``use_kernel=False`` for the pure-jnp oracle).
+
+    ``controller`` (a ``repro.hetero`` Controller; overrides
+    ``opts.policy``) closes the heterogeneity loop; ``cost`` (a
+    ``CostModel``) prices every round.  ``opts.quorum`` switches the
+    rounds semi-synchronous (see ``_scan_rounds``).
+    """
+    ctrl, cost = _hetero_defaults(problem, opts.policy, controller, cost)
+    projection = opts.projection or "eigh"
+    cfg = _config(problem, mu=opts.mu, lr=opts.lr,
+                  curvature=opts.curvature,
+                  hutchinson_samples=opts.hutchinson_samples,
                   projection=projection)
     hutch = cfg.pop("hutch_samples")
     k_init, k_loop = jax.random.split(key)
     x1, C0, cho_c, cho_lower, hdiag = _init_phase(
         problem, k_init, mu=cfg["mu"], lr=cfg["lr"],
         curvature=cfg["curvature"], hutch_samples=hutch,
-        projection=projection, ns_iters=ns_iters)
+        projection=projection, ns_iters=opts.ns_iters)
     xs, dist, losses, cov, comm, tau, tau_cov, times, stale = _rounds_jit(
         problem, k_loop, x1, C0, cho_c, hdiag, cost,
-        num_rounds=int(num_rounds), num_regions=int(num_regions),
-        controller=ctrl, use_kernel=bool(use_kernel),
-        interpret=None, cho_lower=cho_lower, **cfg)
-    return RanlResult(xs=xs, dist_sq=dist, losses=losses, coverage=cov,
-                      comm_floats=comm, tau_star=int(tau),
-                      tau_covered=int(tau_cov), round_time=times,
-                      max_stale=stale)
+        num_rounds=int(opts.num_rounds),
+        num_regions=int(opts.num_regions),
+        controller=ctrl, use_kernel=bool(opts.use_kernel),
+        interpret=None, cho_lower=cho_lower, qspec=opts.quorum_spec(),
+        **cfg)
+    return _subsampled(RanlResult(
+        xs=xs, dist_sq=dist, losses=losses, coverage=cov,
+        comm_floats=comm, tau_star=int(tau), tau_covered=int(tau_cov),
+        round_time=times, max_stale=stale), opts.record_every)
 
 
-def run_ranl_batch(problem, keys, *, num_rounds: int = 30,
-                   num_regions: int = 8,
-                   policy: PolicyConfig = PolicyConfig(),
-                   mu: float | None = None, curvature: str = "dense",
-                   lr: float = 1.0, use_kernel: bool = True,
-                   hutchinson_samples: int = 8, mesh=None,
-                   axis_name: str = "data", projection: str = "eigh",
-                   ns_iters: int | str = 60, controller=None, cost=None):
-    """Batched multi-seed runs: one compilation, vmapped over ``keys``.
+def _run_batch(problem, keys, opts: RanlOptions, *, mesh=None,
+               axis_name: str = "data", controller=None, cost=None):
+    """Batched multi-seed runs (engine ``"batch"`` of ``repro.run``):
+    one compilation, vmapped over ``keys``.
 
     ``keys``: (B,)-stacked PRNG keys (``jax.random.split(key, B)``).
     Returns a RanlResult whose arrays carry a leading batch axis and whose
@@ -1278,7 +1434,7 @@ def run_ranl_batch(problem, keys, *, num_rounds: int = 30,
     vmapped run carries its own controller state and telemetry);
     ``round_time``/``max_stale`` come back (B, T)-shaped.
     """
-    ctrl, cost = _hetero_defaults(problem, policy, controller, cost)
+    ctrl, cost = _hetero_defaults(problem, opts.policy, controller, cost)
     keys = jnp.asarray(keys)
     if mesh is not None:
         if axis_name not in mesh.axis_names:
@@ -1292,36 +1448,45 @@ def run_ranl_batch(problem, keys, *, num_rounds: int = 30,
         keys = jax.device_put(keys, NamedSharding(mesh, P(axis_name)))
         problem = jax.device_put(problem, NamedSharding(mesh, P()))
         cost = jax.device_put(cost, NamedSharding(mesh, P()))
-    cfg = _config(problem, mu=mu, lr=lr, curvature=curvature,
-                  hutchinson_samples=hutchinson_samples,
+    projection = opts.projection or "eigh"
+    cfg = _config(problem, mu=opts.mu, lr=opts.lr,
+                  curvature=opts.curvature,
+                  hutchinson_samples=opts.hutchinson_samples,
                   projection=projection)
     xs, dist, losses, cov, comm, tau, tau_cov, times, stale = _batch_jit(
-        problem, keys, cost, num_rounds=int(num_rounds),
-        num_regions=int(num_regions), controller=ctrl,
-        use_kernel=bool(use_kernel), interpret=None,
+        problem, keys, cost, num_rounds=int(opts.num_rounds),
+        num_regions=int(opts.num_regions), controller=ctrl,
+        use_kernel=bool(opts.use_kernel), interpret=None,
         projection=projection,
-        ns_iters=ns_iters if ns_iters == "auto" else int(ns_iters), **cfg)
-    return RanlResult(xs=xs, dist_sq=dist, losses=losses, coverage=cov,
-                      comm_floats=comm, tau_star=tau, tau_covered=tau_cov,
-                      round_time=times, max_stale=stale)
+        ns_iters=opts.ns_iters if opts.ns_iters == "auto"
+        else int(opts.ns_iters),
+        qspec=opts.quorum_spec(), **cfg)
+    return _subsampled(RanlResult(
+        xs=xs, dist_sq=dist, losses=losses, coverage=cov,
+        comm_floats=comm, tau_star=tau, tau_covered=tau_cov,
+        round_time=times, max_stale=stale), opts.record_every)
 
 
-def run_ranl_reference(problem, key, *, num_rounds: int = 30,
-                       num_regions: int = 8,
-                       policy: PolicyConfig = PolicyConfig(),
-                       mu: float | None = None, record_every: int = 1,
-                       controller=None, cost=None):
-    """Original host-loop driver (re-traces every round).
+def _run_reference(problem, key, opts: RanlOptions, *, controller=None,
+                   cost=None):
+    """Original host-loop driver (engine ``"reference"`` of ``repro.run``;
+    re-traces every round).
 
-    Kept as the semantic oracle: ``run_ranl`` must reproduce its trajectory
-    on a fixed key, and the engine-speedup benchmark measures against it.
-    ``controller``/``cost`` run the same closed loop eagerly, so the
-    compiled engines' telemetry threading has a host-loop oracle too.
+    Kept as the semantic oracle: the scan engine must reproduce its
+    trajectory on a fixed key, and the engine-speedup benchmark measures
+    against it.  ``controller``/``cost`` run the same closed loop
+    eagerly, and ``opts.quorum`` runs the same eager rounds through
+    ``quorum_split``/``quorum_aggregate`` — the host-loop oracle of the
+    engines' semi-synchronous path.  Dense ``eigh`` curvature only (the
+    dispatcher enforces this).
     """
-    del record_every
-    from ..hetero.controller import initial_telemetry
-    ctrl, cost = _hetero_defaults(problem, policy, controller, cost)
-    mu = problem.mu if mu is None else mu
+    from ..hetero.controller import initial_telemetry, next_telemetry
+    from ..hetero.cost import quorum_split, worker_times
+    num_rounds, num_regions = opts.num_rounds, opts.num_regions
+    ctrl, cost = _hetero_defaults(problem, opts.policy, controller, cost)
+    qspec = opts.quorum_spec()
+    mu = problem.mu if opts.mu is None else opts.mu
+    lr = float(opts.lr)
     N, d = problem.num_workers, problem.dim
     Q = num_regions
     region_ids = contiguous_regions(d, Q)
@@ -1334,7 +1499,7 @@ def run_ranl_reference(problem, key, *, num_rounds: int = 30,
     H_mu = project_psd(running_mean_hessian(problem, x0, hkeys), mu)
     g0 = jnp.stack([problem.worker_grad(i, x0, gkeys[i]) for i in range(N)])
     C = g0
-    x = x0 - solve_projected(H_mu, g0.mean(axis=0))
+    x = x0 - lr * solve_projected(H_mu, g0.mean(axis=0))
 
     worker_ids = jnp.arange(N)
     grad_all = jax.vmap(problem.worker_grad, in_axes=(0, 0, 0))
@@ -1344,6 +1509,8 @@ def run_ranl_reference(problem, key, *, num_rounds: int = 30,
     cov_hist, comm_hist, time_hist, stale_hist = [], [], [], []
     ctrl_state = ctrl.init_state(N, Q)
     telem = initial_telemetry(N, Q)
+    late_buf = (None if qspec is None
+                else jnp.zeros((qspec.max_delay, d)))
     for t in range(1, num_rounds + 1):
         kt = jax.random.fold_in(k_loop, t)
         M, ctrl_state = _controller_mask(ctrl, cost, ctrl_state, telem,
@@ -1352,17 +1519,31 @@ def run_ranl_reference(problem, key, *, num_rounds: int = 30,
         x_pruned = jnp.where(Mx, x[None, :], 0.0)        # x ⊙ m_i
         gk = jax.random.split(jax.random.fold_in(kt, 7), N)
         G = grad_all(worker_ids, x_pruned, gk) * Mx      # ∇F_i ⊙ m_i
-        g, C = server_aggregate(G, Mx, C)
-        x = x - solve_projected(H_mu, g)
+        if qspec is None:
+            g, C = server_aggregate(G, Mx, C)
+            count_q = M.sum(axis=0)
+            telem = _observe_round(cost, telem, M, count_q, sizes_q, t)
+            round_t = telem.times.max()
+        else:
+            work = (M * sizes_q[None, :]).sum(axis=1)
+            times = worker_times(cost, work, t)
+            deadline, on_time, delays = quorum_split(
+                times, M, quorum=qspec.quorum,
+                quorum_tau=qspec.quorum_tau, max_delay=qspec.max_delay)
+            g, C, late_buf = quorum_aggregate(
+                G, Mx, C, on_time, delays, late_buf,
+                gamma=qspec.gamma, max_delay=qspec.max_delay)
+            count_q = (M & on_time[:, None]).sum(axis=0)  # on-time counts
+            telem = next_telemetry(telem, count_q, work, times)
+            round_t = deadline
+        x = x - lr * solve_projected(H_mu, g)
         xs.append(x)
 
-        count_q = M.sum(axis=0)
-        telem = _observe_round(cost, telem, M, count_q, sizes_q, t)
         cov_mean, min_count, min_cov_count = _round_diagnostics(
             count_q > 0, count_q, N)
         cov_hist.append(cov_mean)
         comm_hist.append(Mx.sum())                       # uplink floats
-        time_hist.append(telem.times.max())
+        time_hist.append(round_t)
         stale_hist.append(telem.stale_q.max())
         min_cov = min(min_cov, int(min_count))
         min_cov_covered = min(min_cov_covered, int(min_cov_count))
@@ -1370,9 +1551,174 @@ def run_ranl_reference(problem, key, *, num_rounds: int = 30,
     xs = jnp.stack(xs)
     dist = jnp.sum((xs - problem.x_star[None, :]) ** 2, axis=1)
     losses = jnp.stack([problem.loss(xi) for xi in xs])
-    return RanlResult(xs=xs, dist_sq=dist, losses=losses,
-                      coverage=jnp.stack(cov_hist),
-                      comm_floats=jnp.stack(comm_hist),
-                      tau_star=min_cov, tau_covered=min_cov_covered,
-                      round_time=jnp.stack(time_hist),
-                      max_stale=jnp.stack(stale_hist))
+    return _subsampled(RanlResult(
+        xs=xs, dist_sq=dist, losses=losses,
+        coverage=jnp.stack(cov_hist),
+        comm_floats=jnp.stack(comm_hist),
+        tau_star=min_cov, tau_covered=min_cov_covered,
+        round_time=jnp.stack(time_hist),
+        max_stale=jnp.stack(stale_hist)), opts.record_every)
+
+
+# --------------------------------------------------------------------------
+# deprecated entrypoints — thin bit-exact shims over repro.run / repro.lower
+# --------------------------------------------------------------------------
+
+def _deprecated(old: str, engine: str):
+    warnings.warn(
+        f"{old} is deprecated — use repro.run(problem, key, "
+        f"engine={engine!r}, options=RanlOptions(...)) (repro.lower for "
+        f"the lowering entrypoints); the quorum/record_every knobs only "
+        f"exist there", EngineDeprecationWarning, stacklevel=3)
+
+
+def run_ranl(problem, key, *, num_rounds: int = 30, num_regions: int = 8,
+             policy: PolicyConfig = PolicyConfig(), mu: float | None = None,
+             record_every: int = 1, curvature: str = "dense",
+             lr: float = 1.0, use_kernel: bool = True,
+             hutchinson_samples: int = 8, projection: str = "eigh",
+             ns_iters: int | str = 60, controller=None, cost=None):
+    """Deprecated: use ``repro.run(problem, key, engine="scan", ...)``."""
+    _deprecated("run_ranl", "scan")
+    from ..api import run
+    return run(problem, key, engine="scan",
+               options=RanlOptions(
+                   num_rounds=num_rounds, num_regions=num_regions,
+                   policy=policy, mu=mu, record_every=record_every,
+                   curvature=curvature, lr=lr, use_kernel=use_kernel,
+                   hutchinson_samples=hutchinson_samples,
+                   projection=projection, ns_iters=ns_iters),
+               controller=controller, cost=cost)
+
+
+def run_ranl_batch(problem, keys, *, num_rounds: int = 30,
+                   num_regions: int = 8,
+                   policy: PolicyConfig = PolicyConfig(),
+                   mu: float | None = None, curvature: str = "dense",
+                   lr: float = 1.0, use_kernel: bool = True,
+                   hutchinson_samples: int = 8, mesh=None,
+                   axis_name: str = "data", projection: str = "eigh",
+                   ns_iters: int | str = 60, controller=None, cost=None):
+    """Deprecated: use ``repro.run(problem, keys, engine="batch", ...)``."""
+    _deprecated("run_ranl_batch", "batch")
+    from ..api import run
+    return run(problem, keys, engine="batch",
+               options=RanlOptions(
+                   num_rounds=num_rounds, num_regions=num_regions,
+                   policy=policy, mu=mu, curvature=curvature, lr=lr,
+                   use_kernel=use_kernel,
+                   hutchinson_samples=hutchinson_samples,
+                   projection=projection, ns_iters=ns_iters),
+               mesh=mesh, axis_name=axis_name,
+               controller=controller, cost=cost)
+
+
+def run_ranl_sharded(problem, key, *, mesh, num_rounds: int = 30,
+                     num_regions: int = 8,
+                     policy: PolicyConfig = PolicyConfig(),
+                     mu: float | None = None, curvature: str = "dense",
+                     lr: float = 1.0, hutchinson_samples: int = 8,
+                     axis_name: str = "data", projection: str = "eigh",
+                     ns_iters: int | str = 60, overlap: bool = False,
+                     controller=None, cost=None):
+    """Deprecated: use ``repro.run(problem, key, engine="sharded", ...)``."""
+    _deprecated("run_ranl_sharded", "sharded")
+    from ..api import run
+    return run(problem, key, engine="sharded",
+               options=RanlOptions(
+                   num_rounds=num_rounds, num_regions=num_regions,
+                   policy=policy, mu=mu, curvature=curvature, lr=lr,
+                   hutchinson_samples=hutchinson_samples,
+                   projection=projection, ns_iters=ns_iters,
+                   overlap=overlap),
+               mesh=mesh, axis_name=axis_name,
+               controller=controller, cost=cost)
+
+
+def lower_ranl_sharded(problem, key, *, mesh, num_rounds: int = 30,
+                       num_regions: int = 8,
+                       policy: PolicyConfig = PolicyConfig(),
+                       mu: float | None = None, curvature: str = "dense",
+                       lr: float = 1.0, hutchinson_samples: int = 8,
+                       axis_name: str = "data", projection: str = "eigh",
+                       ns_iters: int | str = 60, overlap: bool = False,
+                       controller=None, cost=None):
+    """Deprecated: use ``repro.lower(problem, key, engine="sharded", ...)``.
+    """
+    _deprecated("lower_ranl_sharded", "sharded")
+    from ..api import lower
+    return lower(problem, key, engine="sharded",
+                 options=RanlOptions(
+                     num_rounds=num_rounds, num_regions=num_regions,
+                     policy=policy, mu=mu, curvature=curvature, lr=lr,
+                     hutchinson_samples=hutchinson_samples,
+                     projection=projection, ns_iters=ns_iters,
+                     overlap=overlap),
+                 mesh=mesh, axis_name=axis_name,
+                 controller=controller, cost=cost)
+
+
+def run_ranl_sharded2d(problem, key, *, mesh, num_rounds: int = 30,
+                       num_regions: int = 8,
+                       policy: PolicyConfig = PolicyConfig(),
+                       mu: float | None = None, curvature: str = "dense",
+                       lr: float = 1.0, use_kernel: bool = True,
+                       hutchinson_samples: int = 8,
+                       data_axis: str = "data", model_axis: str = "model",
+                       ns_iters: int | str = 60, overlap: bool = False,
+                       controller=None, cost=None):
+    """Deprecated: use ``repro.run(problem, key, engine="sharded2d", ...)``.
+    """
+    _deprecated("run_ranl_sharded2d", "sharded2d")
+    from ..api import run
+    return run(problem, key, engine="sharded2d",
+               options=RanlOptions(
+                   num_rounds=num_rounds, num_regions=num_regions,
+                   policy=policy, mu=mu, curvature=curvature, lr=lr,
+                   use_kernel=use_kernel,
+                   hutchinson_samples=hutchinson_samples,
+                   ns_iters=ns_iters, overlap=overlap),
+               mesh=mesh, data_axis=data_axis, model_axis=model_axis,
+               controller=controller, cost=cost)
+
+
+def lower_ranl_sharded2d(problem, key, *, mesh, num_rounds: int = 30,
+                         num_regions: int = 8,
+                         policy: PolicyConfig = PolicyConfig(),
+                         mu: float | None = None, curvature: str = "dense",
+                         lr: float = 1.0, use_kernel: bool = True,
+                         hutchinson_samples: int = 8,
+                         data_axis: str = "data",
+                         model_axis: str = "model",
+                         ns_iters: int | str = 60,
+                         overlap: bool = False, controller=None,
+                         cost=None):
+    """Deprecated: use ``repro.lower(problem, key, engine="sharded2d",
+    ...)``."""
+    _deprecated("lower_ranl_sharded2d", "sharded2d")
+    from ..api import lower
+    return lower(problem, key, engine="sharded2d",
+                 options=RanlOptions(
+                     num_rounds=num_rounds, num_regions=num_regions,
+                     policy=policy, mu=mu, curvature=curvature, lr=lr,
+                     use_kernel=use_kernel,
+                     hutchinson_samples=hutchinson_samples,
+                     ns_iters=ns_iters, overlap=overlap),
+                 mesh=mesh, data_axis=data_axis, model_axis=model_axis,
+                 controller=controller, cost=cost)
+
+
+def run_ranl_reference(problem, key, *, num_rounds: int = 30,
+                       num_regions: int = 8,
+                       policy: PolicyConfig = PolicyConfig(),
+                       mu: float | None = None, record_every: int = 1,
+                       controller=None, cost=None):
+    """Deprecated: use ``repro.run(problem, key, engine="reference", ...)``.
+    """
+    _deprecated("run_ranl_reference", "reference")
+    from ..api import run
+    return run(problem, key, engine="reference",
+               options=RanlOptions(
+                   num_rounds=num_rounds, num_regions=num_regions,
+                   policy=policy, mu=mu, record_every=record_every),
+               controller=controller, cost=cost)

@@ -5,6 +5,7 @@ and telemetry-driven mask controllers (see ROADMAP / README
 from .controller import (  # noqa: F401
     Controller,
     PolicyController,
+    QuorumController,
     ResourceProportionalController,
     StalenessBoundedController,
     Telemetry,
@@ -18,6 +19,8 @@ from .cost import (  # noqa: F401
     available,
     capacity,
     pareto_cost,
+    quorum_deadline,
+    quorum_split,
     round_time,
     time_to_target,
     uniform_cost,

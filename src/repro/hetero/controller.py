@@ -173,6 +173,35 @@ class StalenessBoundedController:
         return ensure_coverage(m, tau_q), state
 
 
+@dataclass(frozen=True)
+class QuorumController:
+    """Semi-synchronous wrapper: ANY inner controller + the quorum knobs.
+
+    Mask allocation delegates to ``inner`` unchanged — the wrapper only
+    carries the semi-synchronous round parameters (the same four knobs as
+    ``RanlOptions``: commit quorum, per-region on-time floor, staleness
+    damping ``gamma`` and the bounded-delay cap).  ``repro.run`` unwraps
+    it before dispatch: the knobs move onto the run's options (setting
+    them in BOTH places is an error) and ``inner`` drives the masks, so
+    any existing controller — open-loop policy, resource-proportional,
+    staleness-bounded — becomes quorum-aware without modification.  The
+    host loop in ``launch.train`` consumes the knobs directly.
+    """
+    inner: Controller = PolicyController()
+    quorum: float = 0.75
+    quorum_tau: int | None = 1
+    gamma: float = 0.5
+    max_delay: int = 2
+
+    def init_state(self, num_workers: int, num_regions: int):
+        return self.inner.init_state(num_workers, num_regions)
+
+    def step(self, state, telem, key, t, num_workers: int,
+             num_regions: int):
+        return self.inner.step(state, telem, key, t, num_workers,
+                               num_regions)
+
+
 def as_controller(policy_or_controller) -> Controller:
     """PolicyConfig -> shim; controllers pass through."""
     if isinstance(policy_or_controller, PolicyConfig):
@@ -207,10 +236,14 @@ def make_controller(spec) -> Controller:
     * ``resource`` / ``resource:keep=0.5,tau=1,ema=0.5,min_keep=0.05`` —
       resource-proportional allocation;
     * ``staleness-bounded`` / ``staleness-bounded:s=4,keep=0.5,tau=1`` —
-      base bernoulli policy with the hard staleness bound ``s``.
+      base bernoulli policy with the hard staleness bound ``s``;
+    * ``quorum`` / ``quorum:q=0.75,tau=1,gamma=0.5,delay=2,
+      inner=resource;keep=0.5`` — the semi-synchronous wrapper around any
+      inner controller spec (inner parameters use ``;`` where a top-level
+      spec uses ``:``/``,``; ``tau=none`` = full participating coverage).
     """
     if isinstance(spec, (PolicyController, ResourceProportionalController,
-                         StalenessBoundedController)):
+                         StalenessBoundedController, QuorumController)):
         return spec
     if isinstance(spec, PolicyConfig):
         return PolicyController(spec)
@@ -234,6 +267,17 @@ def make_controller(spec) -> Controller:
                               heterogeneous=bool(int(p.get("het", 1))),
                               tau_star=int(p.get("tau", 1))),
             max_stale=int(p.get("s", 4)))
+    if name == "quorum":
+        raw = p.get("inner", "policy")
+        iname, _, ibody = raw.partition(";")
+        inner = make_controller(
+            iname + (":" + ibody.replace(";", ",") if ibody else ""))
+        tau = p.get("tau", "1")
+        return QuorumController(
+            inner=inner, quorum=float(p.get("q", 0.75)),
+            quorum_tau=None if tau.lower() in ("none", "") else int(tau),
+            gamma=float(p.get("gamma", 0.5)),
+            max_delay=int(p.get("delay", 2)))
     raise ValueError(
         f"unknown controller {name!r} (expected policy | resource | "
-        f"staleness-bounded)")
+        f"staleness-bounded | quorum)")

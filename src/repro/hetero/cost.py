@@ -13,8 +13,16 @@ cluster would have paid:
 
 where ``work_i`` is the number of parameter coordinates worker i trains
 and uplinks this round (its mask row expanded to coordinates).  The
-server is synchronous — it waits for the slowest participant — which is
-exactly the regime where resource-proportional allocation wins.
+default server is synchronous — it waits for the slowest participant —
+which is exactly the regime where resource-proportional allocation wins.
+
+``quorum_split`` adds the SEMI-synchronous clock: the server commits the
+round at the k-th order statistic of participant times — the earliest
+deadline at which a quorum of regions is covered by on-time workers —
+instead of the max.  Workers finishing after the deadline are ``s``
+rounds late (``s = ceil(time/deadline) - 1``); the engines fold their
+contributions into round ``t+s`` with staleness-damped weight and drop
+them past ``max_delay`` (see ``core.aggregation.quorum_aggregate``).
 
 Trace-safety contract (the engines fold this into their ``lax.scan``
 bodies): the array fields (``compute_rate``, ``bandwidth``) are pytree
@@ -158,6 +166,70 @@ def worker_times(cost: CostModel, work, t) -> jnp.ndarray:
 def round_time(cost: CostModel, work, t):
     """Scalar simulated wall-clock of one synchronous round."""
     return worker_times(cost, work, t).max()
+
+
+def quorum_deadline(times, masks, *, quorum: float,
+                    quorum_tau: int | None = None):
+    """Scalar commit time of a semi-synchronous round.
+
+    ``times``: (N,) per-worker simulated times (``worker_times``);
+    ``masks``: the round's (N, Q) bool region masks (post-availability —
+    a worker with an all-False row does not participate and never gates
+    the deadline).  ``quorum`` in (0, 1] and the optional per-region
+    on-time floor ``quorum_tau`` are STATIC.
+
+    Rule: region q is quorum-covered at time T when at least
+    ``min(quorum_tau, count_q)`` of its covering participants have
+    finished (``quorum_tau=None`` = ALL of them, i.e. full coverage);
+    the round commits at the earliest participant finish time by which
+    ``ceil(quorum * Q)`` regions are quorum-covered — the k-th order
+    statistic of participant times, k being that prefix length.  Because
+    the floor is capped at each region's realized coverage, the quorum is
+    always achievable; ``quorum=1.0, quorum_tau=None`` degenerates to the
+    synchronous max over participants exactly.  Trace-safe (no Python
+    branch on traced values); a participant-free round returns 0.0.
+    """
+    return quorum_split(times, masks, quorum=quorum,
+                        quorum_tau=quorum_tau, max_delay=1)[0]
+
+
+def quorum_split(times, masks, *, quorum: float,
+                 quorum_tau: int | None = None, max_delay: int = 1):
+    """-> (deadline, on_time (N,) bool, delays (N,) int32).
+
+    The full semi-synchronous split of a round (see ``quorum_deadline``
+    for the commit rule): ``on_time[i]`` marks participants finishing by
+    the deadline; ``delays[i]`` is how many rounds late worker i's
+    contribution lands (0 for on-time workers and non-participants,
+    ``s = ceil(times[i]/deadline) - 1`` otherwise — a worker finishing
+    during the next round's window is 1 late), clipped to
+    ``max_delay + 1`` so "too late to ever fold" is a single bucket.
+    """
+    N, Q = masks.shape
+    required = int(np.ceil(float(quorum) * Q))
+    participating = masks.any(axis=1)
+    t_eff = jnp.where(participating, jnp.asarray(times, jnp.float32),
+                      jnp.inf)
+    order = jnp.argsort(t_eff)
+    t_sorted = t_eff[order]
+    cum = jnp.cumsum(masks[order].astype(jnp.int32), axis=0)  # (N, Q)
+    full = cum[-1]                                            # (Q,)
+    floor = (full if quorum_tau is None
+             else jnp.minimum(jnp.int32(quorum_tau), full))
+    # prefix k covers region q once cum[k, q] >= floor[q]; empty regions
+    # (full == 0 -> floor == 0) count from k = 0, so the quorum is always
+    # achievable and argmax finds the first satisfying prefix
+    n_ok = (cum >= floor[None, :]).sum(axis=1)                # (N,)
+    k_star = jnp.argmax(n_ok >= required)
+    deadline = t_sorted[k_star]
+    deadline = jnp.where(jnp.isfinite(deadline), deadline, 0.0)
+    on_time = participating & (jnp.asarray(times, jnp.float32) <= deadline)
+    ratio = jnp.asarray(times, jnp.float32) / jnp.maximum(deadline, 1e-30)
+    delays = jnp.ceil(ratio).astype(jnp.int32) - 1
+    delays = jnp.clip(delays, 0, int(max_delay) + 1)
+    delays = jnp.where(on_time | ~participating, 0,
+                       jnp.maximum(delays, 1))
+    return deadline, on_time, delays
 
 
 def time_to_target(trace, round_times, target: float) -> float:

@@ -10,6 +10,9 @@ is one string:
     pareto-stragglers       heavy-tailed compute rates (alpha=1.2)
     dropout                 i.i.d. per-round unavailability (p=0.2)
     churn                   rotating cohorts leave/rejoin (period=5, cohorts=4)
+    churn-stragglers        churn ON pareto rates (alpha=1.2) — availability
+                            churn on top of heavy-tailed stragglers; the
+                            semi-synchronous quorum pin's second leg
     diurnal                 sinusoidal capacity (period=20, amp=0.8)
     dirichlet               non-IID data shards (alpha=0.3) on uniform cost
 
@@ -78,6 +81,11 @@ def _churn(key, n, p):
     return Scenario("churn", cost)
 
 
+def _churn_stragglers(key, n, p):
+    scen = _churn(key, n, {"alpha": 1.2, **p})
+    return Scenario("churn-stragglers", scen.cost)
+
+
 def _diurnal(key, n, p):
     cost = with_availability(
         _base_cost(key, n, p),
@@ -96,6 +104,7 @@ SCENARIOS = {
     "pareto-stragglers": _pareto,
     "dropout": _dropout,
     "churn": _churn,
+    "churn-stragglers": _churn_stragglers,
     "diurnal": _diurnal,
     "dirichlet": _dirichlet,
 }

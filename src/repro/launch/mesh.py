@@ -17,7 +17,7 @@ def make_engine_mesh(data_shards: int, model_shards: int = 1):
     Row-major (data-major) device order — the layout the RANL engines
     assume and that ``hlo_analysis.mesh_axis_groups`` reproduces when
     classifying collectives by mesh axis.  ``model_shards=1`` degenerates
-    to the worker-only sharding of ``run_ranl_sharded`` (plus a size-1
+    to the worker-only sharding of the sharded engine (plus a size-1
     model axis).
     """
     n = data_shards * model_shards

@@ -164,7 +164,7 @@ def ranl2d_pspecs(problem, *, worker_axis: str = "data",
                   dim_axis: str = "model"):
     """PartitionSpecs for the dimension-sharded convex RANL engine.
 
-    One dict per moving pytree of ``run_ranl_sharded2d`` on a
+    One dict per moving pytree of the sharded2d engine on a
     ``(worker_axis, dim_axis)`` mesh:
 
       * ``problem`` — the problem's own leaf rules (worker axes over

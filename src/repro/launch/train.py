@@ -79,6 +79,17 @@ def run(argv=None):
                          "'staleness-bounded:s=4' — allocates each "
                          "round's regions from the previous round's "
                          "telemetry instead of the open-loop policy")
+    ap.add_argument("--quorum", type=float, default=0.0,
+                    help="semi-synchronous rounds: commit once this "
+                         "fraction of regions has on-time coverage (the "
+                         "k-th order statistic of simulated worker "
+                         "times) and DROP late workers from the step — "
+                         "the gamma=0 limit of the engines' late-fold "
+                         "path (repro.run quorum=...). 0 = synchronous. "
+                         "Needs --scenario/--controller")
+    ap.add_argument("--quorum-tau", type=int, default=1,
+                    help="per-region on-time coverage floor for "
+                         "--quorum (0 = full participating coverage)")
     ap.add_argument("--keep-prob", type=float, default=0.7)
     ap.add_argument("--mu", type=float, default=1e-4)
     ap.add_argument("--lr", type=float, default=1.0)
@@ -92,6 +103,11 @@ def run(argv=None):
         raise SystemExit("--dump-hlo reports the RANL train step; rerun "
                          "with --optimizer ranl (the baseline optimizers "
                          "have no lowered step to analyze here)")
+    if args.quorum and not (args.scenario or args.controller):
+        raise SystemExit("--quorum needs the simulated cluster clock — "
+                         "pass --scenario and/or --controller")
+    if args.quorum and not 0.0 < args.quorum <= 1.0:
+        raise SystemExit(f"--quorum {args.quorum} must be in (0, 1]")
     if (args.scenario or args.controller) and args.optimizer != "ranl":
         raise SystemExit("--scenario/--controller drive the RANL "
                          "region-mask loop; rerun with --optimizer ranl")
@@ -143,8 +159,8 @@ def run(argv=None):
         if args.scenario or args.controller:
             from ..hetero import (available, initial_telemetry,
                                   make_controller, make_scenario,
-                                  next_telemetry, uniform_cost,
-                                  worker_times)
+                                  next_telemetry, quorum_split,
+                                  uniform_cost, worker_times)
             from ..optim import region_layout, region_param_counts
             num_regions, _, _ = region_layout(params)
             scen = (make_scenario(args.scenario, jax.random.fold_in(ko, 71),
@@ -186,6 +202,18 @@ def run(argv=None):
                     args.workers, hetero["num_regions"])
                 avail = available(hetero["cost"], kt, t)
                 masks = jnp.logical_and(masks, avail[:, None])
+                if args.quorum:
+                    # semi-synchronous drop mode: the round commits at
+                    # the quorum deadline and late workers sit it out
+                    # (their regions ride the optimizer's memory path)
+                    work = (masks * hetero["sizes_q"][None, :]) \
+                        .sum(axis=1)
+                    times = worker_times(hetero["cost"], work, t)
+                    deadline, on_time, _ = quorum_split(
+                        times, masks, quorum=args.quorum,
+                        quorum_tau=args.quorum_tau or None)
+                    masks = jnp.logical_and(masks, on_time[:, None])
+                    hetero["deadline"] = float(deadline)
             t0 = time.perf_counter()
             params, state, metrics = step_fn(params, state, batch, ko,
                                              masks=masks)
@@ -197,7 +225,9 @@ def run(argv=None):
                 times = worker_times(hetero["cost"], work, t)
                 hetero["telem"] = next_telemetry(
                     hetero["telem"], masks.sum(axis=0), work, times)
-                metrics["sim_round_s"] = float(times.max())
+                metrics["sim_round_s"] = (hetero["deadline"]
+                                          if args.quorum
+                                          else float(times.max()))
                 hetero["sim_s"] += metrics["sim_round_s"]
                 metrics["sim_s"] = hetero["sim_s"]
                 metrics["max_stale"] = int(hetero["telem"].stale_q.max())

@@ -6,13 +6,13 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+import repro
 from repro.core import (PolicyConfig, blocked_cho_solve, blocked_cholesky,
                         ensure_coverage, expand_mask,
                         contiguous_regions, fisher_diag, make_quadratic,
                         project_psd, project_psd_ns, project_psd_sharded,
                         region_sizes, rounds_to_tol, run_gd,
-                        run_newton_zero, run_ranl, run_ranl_batch,
-                        run_ranl_reference, sample_masks,
+                        run_newton_zero, sample_masks,
                         server_aggregate, solve_projected)
 from repro.core.masks import worker_keep_probs
 
@@ -124,9 +124,9 @@ def test_project_psd_ns_auto_iters_matches_fixed():
     # the auto knob flows through the engine entry points
     prob = make_quadratic(KEY, num_workers=4, dim=32, kappa=20.0,
                           coupling=0.0, num_regions=4)
-    r_auto = run_ranl(prob, KEY, num_rounds=4, num_regions=4,
+    r_auto = repro.run(prob, KEY, num_rounds=4, num_regions=4,
                       projection="ns", ns_iters="auto")
-    r_fix = run_ranl(prob, KEY, num_rounds=4, num_regions=4,
+    r_fix = repro.run(prob, KEY, num_rounds=4, num_regions=4,
                      projection="ns")
     np.testing.assert_allclose(np.asarray(r_auto.xs),
                                np.asarray(r_fix.xs), atol=1e-5)
@@ -373,7 +373,7 @@ def test_aggregation_per_coordinate_semantics(n, d, seed, p):
 def test_ranl_linear_convergence_region_aligned():
     prob = make_quadratic(KEY, num_workers=8, dim=64, kappa=100.0,
                           coupling=0.0, num_regions=8)
-    res = run_ranl(prob, KEY, num_rounds=40, num_regions=8,
+    res = repro.run(prob, KEY, num_rounds=40, num_regions=8,
                    policy=PolicyConfig(keep_prob=0.5, tau_star=1,
                                        heterogeneous=False))
     assert float(res.dist_sq[-1]) < 1e-9 * float(res.dist_sq[0])
@@ -384,7 +384,7 @@ def test_ranl_condition_number_independence():
     for kappa in (10.0, 1000.0):
         prob = make_quadratic(KEY, num_workers=8, dim=32, kappa=kappa,
                               coupling=0.0, num_regions=4)
-        res = run_ranl(prob, KEY, num_rounds=60, num_regions=4,
+        res = repro.run(prob, KEY, num_rounds=60, num_regions=4,
                        policy=PolicyConfig(keep_prob=0.7, tau_star=1,
                                            heterogeneous=False))
         rounds[kappa] = rounds_to_tol(res.dist_sq, 1e-8)
@@ -398,7 +398,7 @@ def test_ranl_full_mask_matches_newton_zero():
     """RANL with full masks must be exactly NewtonZero (same seeds)."""
     prob = make_quadratic(KEY, num_workers=8, dim=32, kappa=50.0,
                           hess_noise=0.1, grad_noise=0.05)
-    res = run_ranl(prob, KEY, num_rounds=10, num_regions=4,
+    res = repro.run(prob, KEY, num_rounds=10, num_regions=4,
                    policy=PolicyConfig(name="full"))
     d = np.asarray(res.dist_sq)
     _, dz = run_newton_zero(prob, KEY, num_rounds=10)
@@ -444,8 +444,8 @@ def test_scan_engine_reproduces_reference_trajectory():
                 PolicyConfig(name="staleness", keep_prob=0.6,
                              stale_period=2),
                 PolicyConfig(name="fixed_k", keep_k=2)):
-        res = run_ranl(prob, KEY, num_rounds=12, num_regions=6, policy=pol)
-        ref = run_ranl_reference(prob, KEY, num_rounds=12, num_regions=6,
+        res = repro.run(prob, KEY, num_rounds=12, num_regions=6, policy=pol)
+        ref = repro.run(prob, KEY, engine="reference", num_rounds=12, num_regions=6,
                                  policy=pol)
         np.testing.assert_allclose(res.xs, ref.xs, rtol=1e-6, atol=1e-6)
         np.testing.assert_allclose(res.dist_sq, ref.dist_sq,
@@ -459,18 +459,18 @@ def test_scan_engine_reproduces_reference_trajectory():
 
 
 def test_batch_engine_matches_single_runs():
-    """run_ranl_batch rows match per-seed run_ranl (same compiled math up
+    """batch-engine rows match per-seed scan runs (same compiled math up
     to float32 solve accuracy) and carry per-seed diagnostics."""
     prob = make_quadratic(KEY, num_workers=8, dim=32, kappa=50.0,
                           coupling=0.0, num_regions=4, grad_noise=0.1)
     pol = PolicyConfig(keep_prob=0.5, tau_star=1)
     keys = jax.random.split(KEY, 4)
-    bat = run_ranl_batch(prob, keys, num_rounds=10, num_regions=4,
+    bat = repro.run(prob, keys, engine="batch", num_rounds=10, num_regions=4,
                          policy=pol)
     assert bat.xs.shape == (4, 12, 32)
     assert bat.coverage.shape == (4, 10)
     for b in range(4):
-        single = run_ranl(prob, keys[b], num_rounds=10, num_regions=4,
+        single = repro.run(prob, keys[b], num_rounds=10, num_regions=4,
                           policy=pol)
         np.testing.assert_allclose(bat.xs[b], single.xs, atol=2e-4)
         np.testing.assert_array_equal(np.asarray(bat.comm_floats[b]),
@@ -485,9 +485,9 @@ def test_diag_curvature_kernel_matches_oracle_path():
     prob = make_quadratic(KEY, num_workers=8, dim=32, kappa=50.0,
                           coupling=0.0, num_regions=32)
     pol = PolicyConfig(keep_prob=0.5, tau_star=1)
-    res_k = run_ranl(prob, KEY, num_rounds=30, num_regions=8,
+    res_k = repro.run(prob, KEY, num_rounds=30, num_regions=8,
                      curvature="diag", use_kernel=True, policy=pol)
-    res_o = run_ranl(prob, KEY, num_rounds=30, num_regions=8,
+    res_o = repro.run(prob, KEY, num_rounds=30, num_regions=8,
                      curvature="diag", use_kernel=False, policy=pol)
     np.testing.assert_allclose(res_k.xs, res_o.xs, rtol=1e-6, atol=1e-6)
     assert float(res_k.dist_sq[-1]) < 1e-9 * float(res_k.dist_sq[0])
@@ -498,7 +498,7 @@ def test_diag_batch_runs_under_vmap():
     prob = make_quadratic(KEY, num_workers=4, dim=16, kappa=10.0,
                           coupling=0.0, num_regions=16)
     keys = jax.random.split(KEY, 3)
-    bat = run_ranl_batch(prob, keys, num_rounds=5, num_regions=4,
+    bat = repro.run(prob, keys, engine="batch", num_rounds=5, num_regions=4,
                          curvature="diag")
     assert bat.xs.shape == (3, 7, 16)
     assert np.isfinite(np.asarray(bat.dist_sq)).all()
@@ -513,21 +513,21 @@ def test_tau_star_zero_when_region_goes_uncovered():
     prob = make_quadratic(KEY, num_workers=4, dim=32, kappa=20.0,
                           coupling=0.0, num_regions=4)
     pol = PolicyConfig(name="staleness", stale_period=3)
-    res = run_ranl(prob, KEY, num_rounds=8, num_regions=4, policy=pol)
+    res = repro.run(prob, KEY, num_rounds=8, num_regions=4, policy=pol)
     cov = np.asarray(res.coverage)
     assert (cov < 1.0).any(), "staleness policy must uncover region 0"
     assert res.tau_star == 0
     assert res.tau_covered >= 1            # covered regions stayed covered
     # engine agreement: host-loop reference and batch engine report the same
-    ref = run_ranl_reference(prob, KEY, num_rounds=8, num_regions=4,
+    ref = repro.run(prob, KEY, engine="reference", num_rounds=8, num_regions=4,
                              policy=pol)
     assert ref.tau_star == 0 and ref.tau_covered == res.tau_covered
-    bat = run_ranl_batch(prob, jnp.asarray(KEY)[None], num_rounds=8,
+    bat = repro.run(prob, jnp.asarray(KEY)[None], engine="batch", num_rounds=8,
                          num_regions=4, policy=pol)
     assert int(bat.tau_star[0]) == res.tau_star
     assert int(bat.tau_covered[0]) == res.tau_covered
     # fully-covered runs are unchanged: tau_star == tau_covered >= 1
-    full = run_ranl(prob, KEY, num_rounds=8, num_regions=4,
+    full = repro.run(prob, KEY, num_rounds=8, num_regions=4,
                     policy=PolicyConfig(name="full"))
     assert full.tau_star == full.tau_covered == 4
 
@@ -537,7 +537,7 @@ def test_staleness_floor_monotone():
                           coupling=0.0, num_regions=8)
     floors = []
     for period in (0, 2, 4):
-        res = run_ranl(prob, KEY, num_rounds=40, num_regions=8,
+        res = repro.run(prob, KEY, num_rounds=40, num_regions=8,
                        policy=PolicyConfig(name="staleness", keep_prob=0.5,
                                            stale_period=period,
                                            heterogeneous=False))

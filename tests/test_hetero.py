@@ -21,9 +21,9 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+import repro
 from repro.core import (PolicyConfig, ensure_coverage, make_quadratic,
-                        run_ranl, run_ranl_batch, run_ranl_reference,
-                        run_ranl_sharded, run_ranl_sharded2d, sample_masks)
+                        sample_masks)
 from repro.hetero import (CostModel, PolicyController,
                           ResourceProportionalController,
                           StalenessBoundedController, Telemetry, available,
@@ -133,7 +133,7 @@ def test_dirichlet_weights_and_scenario_problem():
     scen = make_scenario("dirichlet:alpha=0.3", KEY, 8)
     prob = scenario_problem(scen, KEY, kind="quadratic", num_workers=8,
                             dim=16, kappa=10.0, coupling=0.0)
-    res = run_ranl(prob, KEY, num_rounds=5, num_regions=4)
+    res = repro.run(prob, KEY, num_rounds=5, num_regions=4)
     assert np.isfinite(np.asarray(res.dist_sq)).all()
     # non-IID shards genuinely spread the per-worker optima
     spread = float(jnp.abs(prob.b - prob.b.mean(axis=0)).max())
@@ -156,15 +156,15 @@ def test_policy_shim_is_bit_exact():
                           coupling=0.0, num_regions=4, grad_noise=0.1)
     pol = PolicyConfig(keep_prob=0.5, tau_star=1)
     kw = dict(num_rounds=10, num_regions=4)
-    a = run_ranl(prob, KEY, policy=pol, **kw)
-    b = run_ranl(prob, KEY, controller=PolicyController(pol), **kw)
+    a = repro.run(prob, KEY, policy=pol, **kw)
+    b = repro.run(prob, KEY, controller=PolicyController(pol), **kw)
     np.testing.assert_array_equal(np.asarray(a.xs), np.asarray(b.xs))
     np.testing.assert_array_equal(np.asarray(a.round_time),
                                   np.asarray(b.round_time))
     np.testing.assert_array_equal(np.asarray(a.max_stale),
                                   np.asarray(b.max_stale))
-    ref = run_ranl_reference(prob, KEY, policy=pol, **kw)
-    refc = run_ranl_reference(prob, KEY, controller=PolicyController(pol),
+    ref = repro.run(prob, KEY, engine="reference", policy=pol, **kw)
+    refc = repro.run(prob, KEY, engine="reference", controller=PolicyController(pol),
                               **kw)
     np.testing.assert_array_equal(np.asarray(ref.xs), np.asarray(refc.xs))
 
@@ -253,12 +253,12 @@ def test_staleness_bounded_controller_caps_staleness():
     prob = make_quadratic(KEY, num_workers=4, dim=32, kappa=50.0,
                           coupling=0.0, num_regions=8)
     base = PolicyConfig(keep_prob=0.08, tau_star=0, heterogeneous=False)
-    unbounded = run_ranl(prob, KEY, num_rounds=40, num_regions=8,
+    unbounded = repro.run(prob, KEY, num_rounds=40, num_regions=8,
                          policy=base)
     assert int(np.asarray(unbounded.max_stale).max()) > 4
     for s in (2, 4):
         ctrl = StalenessBoundedController(base=base, max_stale=s)
-        res = run_ranl(prob, KEY, num_rounds=40, num_regions=8,
+        res = repro.run(prob, KEY, num_rounds=40, num_regions=8,
                        controller=ctrl)
         trace = np.asarray(res.max_stale)
         assert trace.max() <= s, (s, trace)
@@ -294,8 +294,8 @@ def test_closed_loop_reference_parity():
     ctrl = ResourceProportionalController(keep_prob=0.5, tau_star=1)
     kw = dict(num_rounds=10, num_regions=4, controller=ctrl,
               cost=scen.cost)
-    res = run_ranl(prob, KEY, **kw)
-    ref = run_ranl_reference(prob, KEY, **kw)
+    res = repro.run(prob, KEY, **kw)
+    ref = repro.run(prob, KEY, engine="reference", **kw)
     np.testing.assert_allclose(np.asarray(res.xs), np.asarray(ref.xs),
                                rtol=1e-6, atol=1e-6)
     np.testing.assert_array_equal(np.asarray(res.comm_floats),
@@ -308,7 +308,7 @@ def test_closed_loop_reference_parity():
 
 
 def test_closed_loop_batch_engine():
-    """run_ranl_batch threads per-seed controller state/telemetry; rows
+    """The batch engine threads per-seed controller state/telemetry; rows
     match per-seed single runs."""
     N = 8
     prob = make_quadratic(KEY, num_workers=N, dim=32, kappa=50.0,
@@ -317,11 +317,11 @@ def test_closed_loop_batch_engine():
     ctrl = ResourceProportionalController(keep_prob=0.5, tau_star=1)
     keys = jax.random.split(KEY, 3)
     kw = dict(num_rounds=8, num_regions=4, controller=ctrl, cost=scen.cost)
-    bat = run_ranl_batch(prob, keys, **kw)
+    bat = repro.run(prob, keys, engine="batch", **kw)
     assert bat.round_time.shape == (3, 8)
     assert bat.max_stale.shape == (3, 8)
     for b in range(3):
-        single = run_ranl(prob, keys[b], **kw)
+        single = repro.run(prob, keys[b], **kw)
         np.testing.assert_allclose(np.asarray(bat.xs[b]),
                                    np.asarray(single.xs), atol=2e-4)
         np.testing.assert_array_equal(np.asarray(bat.round_time[b]),
@@ -330,7 +330,7 @@ def test_closed_loop_batch_engine():
 
 def test_closed_loop_sharded_engines_single_device_parity():
     """Controller + cost + availability dynamics through the sharded
-    engines on degenerate meshes: parity with run_ranl, and the
+    engines on degenerate meshes: parity with the scan engine, and the
     double-buffered overlap loop exactly equal to sequential (controller
     state rides the rotated carry)."""
     N = 8
@@ -341,9 +341,9 @@ def test_closed_loop_sharded_engines_single_device_parity():
     ctrl = ResourceProportionalController(keep_prob=0.5, tau_star=1)
     kw = dict(num_rounds=10, num_regions=6, controller=ctrl,
               cost=scen.cost)
-    ref = run_ranl(prob, KEY, **kw)
+    ref = repro.run(prob, KEY, **kw)
     mesh = jax.make_mesh((1,), ("data",))
-    sh = run_ranl_sharded(prob, KEY, mesh=mesh, **kw)
+    sh = repro.run(prob, KEY, engine="sharded", mesh=mesh, **kw)
     assert np.abs(np.asarray(sh.xs) - np.asarray(ref.xs)).max() <= 1e-6
     np.testing.assert_array_equal(np.asarray(sh.comm_floats),
                                   np.asarray(ref.comm_floats))
@@ -351,17 +351,17 @@ def test_closed_loop_sharded_engines_single_device_parity():
                                   np.asarray(ref.round_time))
     np.testing.assert_array_equal(np.asarray(sh.max_stale),
                                   np.asarray(ref.max_stale))
-    ov = run_ranl_sharded(prob, KEY, mesh=mesh, overlap=True, **kw)
+    ov = repro.run(prob, KEY, engine="sharded", mesh=mesh, overlap=True, **kw)
     np.testing.assert_array_equal(np.asarray(ov.xs), np.asarray(sh.xs))
     np.testing.assert_array_equal(np.asarray(ov.round_time),
                                   np.asarray(sh.round_time))
     mesh2 = jax.make_mesh((1, 1), ("data", "model"))
     for curv in ("dense", "diag"):
-        ref2 = run_ranl(prob, KEY, curvature=curv,
+        ref2 = repro.run(prob, KEY, curvature=curv,
                         use_kernel=(curv == "diag"),
                         projection="ns" if curv == "dense" else "eigh",
                         **kw)
-        sh2 = run_ranl_sharded2d(prob, KEY, mesh=mesh2, curvature=curv,
+        sh2 = repro.run(prob, KEY, engine="sharded2d", mesh=mesh2, curvature=curv,
                                  **kw)
         assert np.abs(np.asarray(sh2.xs)
                       - np.asarray(ref2.xs)).max() <= 1e-5, curv
@@ -369,7 +369,7 @@ def test_closed_loop_sharded_engines_single_device_parity():
                                       np.asarray(ref2.comm_floats))
         np.testing.assert_array_equal(np.asarray(sh2.round_time),
                                       np.asarray(ref2.round_time))
-        ov2 = run_ranl_sharded2d(prob, KEY, mesh=mesh2, curvature=curv,
+        ov2 = repro.run(prob, KEY, engine="sharded2d", mesh=mesh2, curvature=curv,
                                  overlap=True, **kw)
         np.testing.assert_array_equal(np.asarray(ov2.xs),
                                       np.asarray(sh2.xs))
@@ -388,8 +388,8 @@ def test_closed_loop_beats_static_on_pareto_stragglers():
     pol = PolicyConfig(keep_prob=0.5, tau_star=1, heterogeneous=True)
     ctrl = make_controller("resource:keep=0.5,tau=1")
     kw = dict(num_rounds=60, num_regions=8, lr=0.5, cost=scen.cost)
-    static = run_ranl(prob, KEY, policy=pol, **kw)
-    closed = run_ranl(prob, KEY, controller=ctrl, **kw)
+    static = repro.run(prob, KEY, policy=pol, **kw)
+    closed = repro.run(prob, KEY, controller=ctrl, **kw)
     target = 1e-8 * float(static.dist_sq[0])
     t_static = time_to_target(static.dist_sq, static.round_time, target)
     t_closed = time_to_target(closed.dist_sq, closed.round_time, target)
@@ -408,7 +408,7 @@ def test_dropout_scenario_engages_memory_fallback():
     prob = make_quadratic(KEY, num_workers=N, dim=32, kappa=20.0,
                           coupling=0.0, num_regions=4)
     scen = make_scenario("dropout:p=0.6", jax.random.PRNGKey(5), N)
-    res = run_ranl(prob, KEY, num_rounds=20, num_regions=4,
+    res = repro.run(prob, KEY, num_rounds=20, num_regions=4,
                    policy=PolicyConfig(keep_prob=0.4, tau_star=1),
                    cost=scen.cost)
     assert res.tau_star == 0                   # some region went uncovered
@@ -445,8 +445,8 @@ import jax.numpy as jnp
 import numpy as np
 assert jax.device_count() == 8, jax.devices()
 KEY = jax.random.PRNGKey(0)
-from repro.core import (PolicyConfig, make_quadratic, run_ranl,
-                        run_ranl_sharded, lower_ranl_sharded)
+import repro
+from repro.core import PolicyConfig, make_quadratic
 from repro.hetero import make_controller, make_scenario
 from repro.launch.hlo_analysis import collect_collectives
 
@@ -458,11 +458,11 @@ out = {"parity": {}}
 for scen_spec in ('pareto-stragglers', 'churn:period=3,cohorts=4,alpha=1.2'):
     scen = make_scenario(scen_spec, jax.random.PRNGKey(3), N)
     kw = dict(num_rounds=12, num_regions=6, controller=ctrl, cost=scen.cost)
-    ref = run_ranl(prob, KEY, **kw)
+    ref = repro.run(prob, KEY, **kw)
     for ndev in (1, 8):
         mesh = jax.make_mesh((ndev,), ('data',))
         for ov in (False, True):
-            sh = run_ranl_sharded(prob, KEY, mesh=mesh, overlap=ov, **kw)
+            sh = repro.run(prob, KEY, engine="sharded", mesh=mesh, overlap=ov, **kw)
             out["parity"]["%s_%d_%s" % (scen.name, ndev, ov)] = {
                 "xs_err": float(np.abs(np.asarray(sh.xs)
                                        - np.asarray(ref.xs)).max()),
@@ -484,7 +484,7 @@ mesh8 = jax.make_mesh((8,), ('data',))
 scen = make_scenario('pareto-stragglers', jax.random.PRNGKey(3), N)
 out["hlo"] = {}
 for leg, ov in (("seq", False), ("overlap", True)):
-    txt = lower_ranl_sharded(prob_h, KEY, mesh=mesh8, num_rounds=T,
+    txt = repro.lower(prob_h, KEY, engine="sharded", mesh=mesh8, num_rounds=T,
                              num_regions=8, controller=ctrl,
                              cost=scen.cost,
                              overlap=ov).compile().as_text()
@@ -553,7 +553,7 @@ def test_staleness_policy_custom_regions():
     # routed through the controller shim it drives the staleness trace
     prob = make_quadratic(KEY, num_workers=8, dim=32, kappa=20.0,
                           coupling=0.0, num_regions=4)
-    res = run_ranl(prob, KEY, num_rounds=8, num_regions=4,
+    res = repro.run(prob, KEY, num_rounds=8, num_regions=4,
                    controller=PolicyController(PolicyConfig(
                        name="staleness", stale_period=3,
                        stale_regions=(0, 2))))

@@ -4,14 +4,15 @@ The multi-device tests force ``XLA_FLAGS=--xla_force_host_platform_
 device_count=8`` in a subprocess (the parent's jax device count is locked
 at first import — same pattern as ``test_subprocess_mini_dryrun``) and pin:
 
-* ``run_ranl_sharded`` trajectory parity (<= 1e-6; diagnostics exact)
-  against ``run_ranl`` on 1/2/8-device ``("data",)`` meshes, dense and
+* sharded-engine trajectory parity (<= 1e-6; diagnostics exact)
+  against the scan engine on 1/2/8-device ``("data",)`` meshes, dense and
   diag curvature — and ``overlap=True`` (the double-buffered loop)
   exactly equal to the sequential loop;
-* ``run_ranl_sharded2d`` parity: the dense path (whole program sharded,
+* sharded2d parity: the dense path (whole program sharded,
   init included — Newton–Schulz projection, no eigh) against
-  ``run_ranl(projection="ns")``, the diag path against the diag oracle;
-* ``run_ranl_batch(mesh=...)`` parity against the unsharded batch engine,
+  the scan engine with ``projection="ns"``, the diag path against the
+  diag oracle;
+* batch-engine ``mesh=...`` parity against the unsharded batch engine,
   with the seed axis actually partitioned across devices;
 * ``ranl_llm.train_step(mesh=...)`` parity against the single-device step
   on 1/2/8-device meshes (params to reduction-reorder tolerance);
@@ -37,9 +38,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (PolicyConfig, make_quadratic, run_ranl,
-                        run_ranl_batch, run_ranl_sharded,
-                        run_ranl_sharded2d)
+import repro
+from repro.core import PolicyConfig, make_quadratic
 
 KEY = jax.random.PRNGKey(0)
 
@@ -71,9 +71,10 @@ KEY = jax.random.PRNGKey(0)
 # in-process checks (single real device)
 # --------------------------------------------------------------------------
 
-def test_sharded_single_device_mesh_matches_run_ranl():
+def test_sharded_single_device_mesh_matches_scan():
     """On a degenerate 1-device mesh the shard_map engine must reproduce
-    run_ranl bit-for-bit (same PRNG stream, same reduction order) — and
+    the scan engine bit-for-bit (same PRNG stream, same reduction
+    order) — and
     the double-buffered ``overlap=True`` loop must match the sequential
     one exactly (identical values, only the schedule moves)."""
     prob = make_quadratic(KEY, num_workers=8, dim=48, kappa=80.0,
@@ -81,16 +82,16 @@ def test_sharded_single_device_mesh_matches_run_ranl():
                           hess_noise=0.1)
     pol = PolicyConfig(keep_prob=0.5, tau_star=1, heterogeneous=False)
     mesh = jax.make_mesh((1,), ("data",))
-    sh = run_ranl_sharded(prob, KEY, mesh=mesh, num_rounds=8,
+    sh = repro.run(prob, KEY, engine="sharded", mesh=mesh, num_rounds=8,
                           num_regions=6, policy=pol)
-    ref = run_ranl(prob, KEY, num_rounds=8, num_regions=6, policy=pol)
+    ref = repro.run(prob, KEY, num_rounds=8, num_regions=6, policy=pol)
     np.testing.assert_array_equal(np.asarray(sh.xs), np.asarray(ref.xs))
     np.testing.assert_array_equal(np.asarray(sh.comm_floats),
                                   np.asarray(ref.comm_floats))
     np.testing.assert_array_equal(np.asarray(sh.coverage),
                                   np.asarray(ref.coverage))
     assert sh.tau_star == ref.tau_star
-    ov = run_ranl_sharded(prob, KEY, mesh=mesh, num_rounds=8,
+    ov = repro.run(prob, KEY, engine="sharded", mesh=mesh, num_rounds=8,
                           num_regions=6, policy=pol, overlap=True)
     np.testing.assert_array_equal(np.asarray(ov.xs), np.asarray(sh.xs))
     np.testing.assert_array_equal(np.asarray(ov.comm_floats),
@@ -106,16 +107,17 @@ def test_sharded_mesh_validation_errors():
                           coupling=0.0, num_regions=4)
     no_data = jax.make_mesh((1,), ("model",))
     with pytest.raises(ValueError, match="data"):
-        run_ranl_sharded(prob, KEY, mesh=no_data, num_rounds=2)
+        repro.run(prob, KEY, engine="sharded", mesh=no_data, num_rounds=2)
     with pytest.raises(ValueError, match="data"):
-        run_ranl_batch(prob, jax.random.split(KEY, 2), num_rounds=2,
+        repro.run(prob, jax.random.split(KEY, 2), engine="batch", num_rounds=2,
                        mesh=no_data)
 
 
-def test_sharded2d_single_device_mesh_matches_run_ranl():
+def test_sharded2d_single_device_mesh_matches_scan():
     """On a degenerate 1x1 ("data","model") mesh the dimension-sharded
     engine must reproduce its single-device oracle (<= 1e-5): for dense
-    that is now ``run_ranl(projection="ns")`` — the whole 2-D dense
+    that is now the scan engine with ``projection="ns"`` — the whole
+    2-D dense
     program, init included, runs the matmul-only Newton–Schulz
     projection, never an eigh — and for diag the diag path.  Diagnostics
     exact, including the tau_star/tau_covered split under an adversarial
@@ -131,8 +133,8 @@ def test_sharded2d_single_device_mesh_matches_run_ranl():
                       (PolicyConfig(keep_prob=0.5, tau_star=1,
                                     heterogeneous=False), "diag")):
         kw = dict(num_rounds=8, num_regions=6, policy=pol, curvature=curv)
-        sh = run_ranl_sharded2d(prob, KEY, mesh=mesh, **kw)
-        ref = run_ranl(prob, KEY, use_kernel=(curv == "diag"),
+        sh = repro.run(prob, KEY, engine="sharded2d", mesh=mesh, **kw)
+        ref = repro.run(prob, KEY, use_kernel=(curv == "diag"),
                        projection="ns" if curv == "dense" else "eigh",
                        **kw)
         assert np.abs(np.asarray(sh.xs) - np.asarray(ref.xs)).max() <= 1e-5
@@ -144,7 +146,7 @@ def test_sharded2d_single_device_mesh_matches_run_ranl():
         assert sh.tau_covered == ref.tau_covered
         if pol.name == "staleness":
             assert sh.tau_star == 0 and sh.tau_covered >= 1
-        ov = run_ranl_sharded2d(prob, KEY, mesh=mesh, overlap=True, **kw)
+        ov = repro.run(prob, KEY, engine="sharded2d", mesh=mesh, overlap=True, **kw)
         np.testing.assert_array_equal(np.asarray(ov.xs), np.asarray(sh.xs))
         np.testing.assert_array_equal(np.asarray(ov.comm_floats),
                                       np.asarray(sh.comm_floats))
@@ -155,10 +157,10 @@ def test_sharded2d_mesh_validation_errors():
     prob = make_quadratic(KEY, num_workers=4, dim=16, kappa=10.0,
                           coupling=0.0, num_regions=4)
     with pytest.raises(ValueError, match="model"):
-        run_ranl_sharded2d(prob, KEY, mesh=jax.make_mesh((1,), ("data",)),
+        repro.run(prob, KEY, engine="sharded2d", mesh=jax.make_mesh((1,), ("data",)),
                            num_rounds=2)
     with pytest.raises(ValueError, match="data"):
-        run_ranl_sharded2d(prob, KEY, mesh=jax.make_mesh((1,), ("model",)),
+        repro.run(prob, KEY, engine="sharded2d", mesh=jax.make_mesh((1,), ("model",)),
                            num_rounds=2)
 
 
@@ -167,22 +169,22 @@ def test_sharded2d_mesh_validation_errors():
 # --------------------------------------------------------------------------
 
 @pytest.mark.slow
-def test_sharded_run_ranl_parity_and_hlo_one_allreduce():
+def test_sharded_scan_parity_and_hlo_one_allreduce():
     """Dense + diag parity on 1/2/8-device meshes, the worker-divisibility
     guard, and the one-param-sized-all-reduce-per-round HLO invariant."""
     code = _PRELUDE + r"""
-from repro.core import (PolicyConfig, make_quadratic, run_ranl,
-                        run_ranl_sharded, lower_ranl_sharded)
+import repro
+from repro.core import PolicyConfig, make_quadratic
 from repro.launch.hlo_analysis import collect_collectives
 
 prob = make_quadratic(KEY, num_workers=8, dim=48, kappa=80.0, coupling=0.0,
                       num_regions=6, grad_noise=0.1, hess_noise=0.1)
 pol = PolicyConfig(keep_prob=0.5, tau_star=1, heterogeneous=False)
-ref = run_ranl(prob, KEY, num_rounds=12, num_regions=6, policy=pol)
+ref = repro.run(prob, KEY, num_rounds=12, num_regions=6, policy=pol)
 out = {"parity": {}}
 for ndev in (1, 2, 8):
     mesh = jax.make_mesh((ndev,), ('data',))
-    sh = run_ranl_sharded(prob, KEY, mesh=mesh, num_rounds=12,
+    sh = repro.run(prob, KEY, engine="sharded", mesh=mesh, num_rounds=12,
                           num_regions=6, policy=pol)
     out["parity"][str(ndev)] = {
         "xs_err": float(np.abs(np.asarray(sh.xs)
@@ -195,9 +197,9 @@ for ndev in (1, 2, 8):
     }
 
 mesh8 = jax.make_mesh((8,), ('data',))
-sh_d = run_ranl_sharded(prob, KEY, mesh=mesh8, num_rounds=12,
+sh_d = repro.run(prob, KEY, engine="sharded", mesh=mesh8, num_rounds=12,
                         num_regions=6, policy=pol, curvature='diag')
-ref_d = run_ranl(prob, KEY, num_rounds=12, num_regions=6, policy=pol,
+ref_d = repro.run(prob, KEY, num_rounds=12, num_regions=6, policy=pol,
                  curvature='diag', use_kernel=False)
 out["diag_err"] = float(np.abs(np.asarray(sh_d.xs)
                                - np.asarray(ref_d.xs)).max())
@@ -205,7 +207,7 @@ out["diag_err"] = float(np.abs(np.asarray(sh_d.xs)
 # workers must divide across devices
 bad = make_quadratic(KEY, num_workers=6, dim=16, kappa=10.0, coupling=0.0)
 try:
-    run_ranl_sharded(bad, KEY, mesh=mesh8, num_rounds=2)
+    repro.run(bad, KEY, engine="sharded", mesh=mesh8, num_rounds=2)
     out["divisibility_raises"] = False
 except ValueError:
     out["divisibility_raises"] = True
@@ -216,7 +218,7 @@ except ValueError:
 D, T = 512, 7
 prob_h = make_quadratic(KEY, num_workers=8, dim=D, kappa=10.0,
                         coupling=0.0, num_regions=8)
-txt = lower_ranl_sharded(prob_h, KEY, mesh=mesh8, num_rounds=T,
+txt = repro.lower(prob_h, KEY, engine="sharded", mesh=mesh8, num_rounds=T,
                          num_regions=8, policy=pol).compile().as_text()
 recs = collect_collectives(txt, default_trip=1)
 in_loop = [r for r in recs if r.kind == 'all-reduce' and r.multiplier > 1]
@@ -252,8 +254,8 @@ def test_overlap_sharded_parity_and_hlo():
     the param-psum window, it never changes a value — and the compiled
     HLO still issues exactly ONE param-sized all-reduce per round."""
     code = _PRELUDE + r"""
-from repro.core import (PolicyConfig, make_quadratic, run_ranl_sharded,
-                        lower_ranl_sharded)
+import repro
+from repro.core import PolicyConfig, make_quadratic
 from repro.launch.hlo_analysis import collect_collectives
 
 prob = make_quadratic(KEY, num_workers=8, dim=48, kappa=80.0, coupling=0.0,
@@ -262,8 +264,8 @@ pol = PolicyConfig(keep_prob=0.5, tau_star=1, heterogeneous=False)
 mesh8 = jax.make_mesh((8,), ('data',))
 out = {}
 kw = dict(num_rounds=12, num_regions=6, policy=pol)
-seq = run_ranl_sharded(prob, KEY, mesh=mesh8, **kw)
-ov = run_ranl_sharded(prob, KEY, mesh=mesh8, overlap=True, **kw)
+seq = repro.run(prob, KEY, engine="sharded", mesh=mesh8, **kw)
+ov = repro.run(prob, KEY, engine="sharded", mesh=mesh8, overlap=True, **kw)
 out["xs_eq"] = bool((np.asarray(seq.xs) == np.asarray(ov.xs)).all())
 out["comm_eq"] = bool((np.asarray(seq.comm_floats)
                        == np.asarray(ov.comm_floats)).all())
@@ -271,8 +273,8 @@ out["cov_eq"] = bool((np.asarray(seq.coverage)
                       == np.asarray(ov.coverage)).all())
 out["tau_eq"] = bool(seq.tau_star == ov.tau_star
                      and seq.tau_covered == ov.tau_covered)
-seq_d = run_ranl_sharded(prob, KEY, mesh=mesh8, curvature='diag', **kw)
-ov_d = run_ranl_sharded(prob, KEY, mesh=mesh8, curvature='diag',
+seq_d = repro.run(prob, KEY, engine="sharded", mesh=mesh8, curvature='diag', **kw)
+ov_d = repro.run(prob, KEY, engine="sharded", mesh=mesh8, curvature='diag',
                         overlap=True, **kw)
 out["diag_xs_eq"] = bool((np.asarray(seq_d.xs)
                           == np.asarray(ov_d.xs)).all())
@@ -282,7 +284,7 @@ out["diag_xs_eq"] = bool((np.asarray(seq_d.xs)
 D, T = 512, 7
 prob_h = make_quadratic(KEY, num_workers=8, dim=D, kappa=10.0,
                         coupling=0.0, num_regions=8)
-txt = lower_ranl_sharded(prob_h, KEY, mesh=mesh8, num_rounds=T,
+txt = repro.lower(prob_h, KEY, engine="sharded", mesh=mesh8, num_rounds=T,
                          num_regions=8, policy=pol,
                          overlap=True).compile().as_text()
 recs = collect_collectives(txt, default_trip=1)
@@ -321,7 +323,7 @@ def test_sharded2d_parity_and_hlo_memory_claims():
     """Dimension-sharded engine on emulated 2-D meshes:
 
     * trajectory parity (<= 1e-5) on 2x2 and 1x4 ("data","model") meshes
-      vs the matching single-device oracle — ``run_ranl(projection="ns")``
+      vs the matching single-device oracle — scan with ``projection="ns"``
       for dense (the whole sharded dense program, init included, runs the
       Newton-Schulz projection, never an eigh), the diag oracle for diag
       (the 1x4 run exercises the fused Pallas kernel on local d-slices);
@@ -337,8 +339,8 @@ def test_sharded2d_parity_and_hlo_memory_claims():
       slack) ANYWHERE in the program — the last replicated O(d^2) is gone.
     """
     code = _PRELUDE4 + r"""
-from repro.core import (PolicyConfig, make_quadratic, run_ranl,
-                        run_ranl_sharded2d, lower_ranl_sharded2d)
+import repro
+from repro.core import PolicyConfig, make_quadratic
 from repro.launch.hlo_analysis import (collect_collectives, max_array_bytes)
 from repro.launch.mesh import make_engine_mesh
 
@@ -348,11 +350,11 @@ pol = PolicyConfig(keep_prob=0.5, tau_star=1, heterogeneous=False)
 out = {"parity": {}, "overlap": {}}
 for curv in ("dense", "diag"):
     kw = dict(num_rounds=12, num_regions=6, policy=pol, curvature=curv)
-    ref = run_ranl(prob, KEY, use_kernel=False,
+    ref = repro.run(prob, KEY, use_kernel=False,
                    projection="ns" if curv == "dense" else "eigh", **kw)
     for shape in ((2, 2), (1, 4)):
         mesh = make_engine_mesh(*shape)
-        sh = run_ranl_sharded2d(prob, KEY, mesh=mesh, **kw)
+        sh = repro.run(prob, KEY, engine="sharded2d", mesh=mesh, **kw)
         out["parity"]["%s_%dx%d" % ((curv,) + shape)] = {
             "xs_err": float(np.abs(np.asarray(sh.xs)
                                    - np.asarray(ref.xs)).max()),
@@ -364,7 +366,7 @@ for curv in ("dense", "diag"):
                            and sh.tau_covered == ref.tau_covered),
         }
         if shape == (2, 2):
-            ov = run_ranl_sharded2d(prob, KEY, mesh=mesh, overlap=True,
+            ov = repro.run(prob, KEY, engine="sharded2d", mesh=mesh, overlap=True,
                                     **kw)
             out["overlap"][curv] = {
                 "xs_eq": bool((np.asarray(ov.xs)
@@ -380,11 +382,11 @@ bad_w = make_quadratic(KEY, num_workers=3, dim=16, kappa=10.0, coupling=0.0)
 bad_d = make_quadratic(KEY, num_workers=4, dim=15, kappa=10.0, coupling=0.0)
 out["bad_workers_raises"] = out["bad_dim_raises"] = False
 try:
-    run_ranl_sharded2d(bad_w, KEY, mesh=mesh22, num_rounds=2)
+    repro.run(bad_w, KEY, engine="sharded2d", mesh=mesh22, num_rounds=2)
 except ValueError:
     out["bad_workers_raises"] = True
 try:
-    run_ranl_sharded2d(bad_d, KEY, mesh=mesh22, num_rounds=2)
+    repro.run(bad_d, KEY, engine="sharded2d", mesh=mesh22, num_rounds=2)
 except ValueError:
     out["bad_dim_raises"] = True
 from repro.core import project_psd_sharded
@@ -405,7 +407,7 @@ prob_h = make_quadratic(KEY, num_workers=2, dim=D, kappa=10.0,
 P_SHARD = D // NM
 out["hlo"] = {}
 for leg, ov in (("seq", False), ("overlap", True)):
-    txt = lower_ranl_sharded2d(prob_h, KEY, mesh=mesh22, num_rounds=T,
+    txt = repro.lower(prob_h, KEY, engine="sharded2d", mesh=mesh22, num_rounds=T,
                                num_regions=8, policy=pol, ns_iters=NS_IT,
                                overlap=ov).compile().as_text()
     recs = collect_collectives(txt, default_trip=1)
@@ -480,20 +482,21 @@ print(json.dumps(out))
 
 @pytest.mark.slow
 def test_sharded_batch_parity_and_placement():
-    """run_ranl_batch(mesh=...) matches the unsharded batch engine and
+    """Batch engine with mesh=... matches the unsharded batch engine and
     actually spreads the seed axis across the mesh devices."""
     code = _PRELUDE + r"""
-from repro.core import PolicyConfig, make_quadratic, run_ranl_batch
+import repro
+from repro.core import PolicyConfig, make_quadratic
 
 prob = make_quadratic(KEY, num_workers=8, dim=32, kappa=50.0, coupling=0.0,
                       num_regions=4, grad_noise=0.1)
 pol = PolicyConfig(keep_prob=0.5, tau_star=1)
 keys = jax.random.split(KEY, 8)
-ref = run_ranl_batch(prob, keys, num_rounds=10, num_regions=4, policy=pol)
+ref = repro.run(prob, keys, engine="batch", num_rounds=10, num_regions=4, policy=pol)
 out = {}
 for ndev in (1, 2, 8):
     mesh = jax.make_mesh((ndev,), ('data',))
-    bat = run_ranl_batch(prob, keys, num_rounds=10, num_regions=4,
+    bat = repro.run(prob, keys, engine="batch", num_rounds=10, num_regions=4,
                          policy=pol, mesh=mesh)
     out[str(ndev)] = {
         "xs_err": float(np.abs(np.asarray(bat.xs)
@@ -505,7 +508,7 @@ for ndev in (1, 2, 8):
         "n_devices_used": len(bat.xs.sharding.device_set),
     }
 try:
-    run_ranl_batch(prob, jax.random.split(KEY, 6), num_rounds=2,
+    repro.run(prob, jax.random.split(KEY, 6), engine="batch", num_rounds=2,
                    mesh=jax.make_mesh((8,), ('data',)))
     out["divisibility_raises"] = False
 except ValueError:
