@@ -460,3 +460,52 @@ def bench_quorum(smoke: bool = False):
                          f"{int(np.asarray(res_q.max_stale).max())}")},
         ]
     return rows
+
+
+def bench_compression(smoke: bool = False):
+    """Compressed uplink (``core.compression``): simulated time-to-target
+    on a FINITE-uplink straggler scenario
+    (``pareto-stragglers:alpha=1.2,bw=...`` — bandwidth in bytes per
+    simulated time unit, so bytes-on-the-wire shape every round's clock).
+
+    Rows ``engine/compress_{none,int8,topk4}``: same problem, same policy,
+    same cluster — only the wire format changes.  ``derived`` carries the
+    simulated wall-clock to the pinned target, the ratio against the
+    uncompressed run, and the mean modeled uplink bytes per round
+    (``RanlResult.comm_bytes``).  The acceptance claim (pinned by
+    tests/test_compression.py on the same scenario): error-feedback
+    compression reaches the target in LESS simulated time than f32.
+    """
+    from repro.hetero import make_scenario, time_to_target
+    dim, rounds = (32, 30) if smoke else (64, 60)
+    N = 16
+    prob = make_quadratic(KEY, num_workers=N, dim=dim, kappa=100.0,
+                          coupling=0.0, num_regions=8)
+    scen = make_scenario("pareto-stragglers:alpha=1.2,bw=1",
+                         jax.random.PRNGKey(101), N)
+    tol = 1e-4 if smoke else 1e-8
+    kw = dict(num_rounds=rounds, num_regions=8, lr=0.5, cost=scen.cost,
+              policy=PolicyConfig(keep_prob=0.5, tau_star=1,
+                                  heterogeneous=False))
+    rows = []
+    t_none = None
+    for comp, tag in ((None, "none"), ("int8", "int8"),
+                      ("topk:2", "topk2")):
+        repro.run(prob, KEY, compression=comp, **kw)         # compile
+        res, us = _timed(lambda: repro.run(prob, KEY, compression=comp,
+                                           **kw))
+        target = tol * float(res.dist_sq[0])
+        t = time_to_target(res.dist_sq, res.round_time, target)
+        bpr = float(np.asarray(res.comm_bytes).mean())
+        if comp is None:
+            t_none = t
+            derived = (f"sim_time_to_{tol:.0e}={t:.0f};"
+                       f"bytes_per_round={bpr:.0f}")
+        else:
+            derived = (f"sim_time_to_{tol:.0e}={t:.0f};"
+                       f"uncompressed_sim_time={t_none:.0f};"
+                       f"ratio={t / t_none:.2f}x;"
+                       f"bytes_per_round={bpr:.0f}")
+        rows.append({"name": f"engine/compress_{tag}", "us_per_call": us,
+                     "derived": derived})
+    return rows

@@ -51,7 +51,8 @@ def main() -> None:
                    claims.bench_init_projection,
                    claims.bench_overlap,
                    claims.bench_hetero,
-                   claims.bench_quorum):
+                   claims.bench_quorum,
+                   claims.bench_compression):
             rows.extend(fn(smoke=args.smoke))
     if args.only in (None, "kernels"):
         from . import kernels_bench as kb

@@ -31,6 +31,9 @@ Engine-compatibility rules enforced here, before any trace:
   or ``projection="ns"`` there is an error;
 * ``projection="eigh"`` on the 2-D dense path is rejected (no device
   may hold a d×d buffer — the engine's default there is ``"ns"``);
+* ``hessian_rank`` (the low-rank [H]_μ init) exists only where the
+  dense init materializes per-worker Hessians — the reference oracle
+  and the panel-sharded 2-D dense init reject it;
 * a :class:`~repro.hetero.controller.QuorumController` unwraps: its
   quorum knobs move onto the options (setting ``options.quorum`` too is
   a conflict) and its inner controller drives mask allocation.
@@ -84,6 +87,16 @@ def _resolve(engine, options, mesh, controller, overrides):
             raise ValueError("the reference engine is the dense-eigh "
                              "oracle — projection='ns' has no host-loop "
                              "form")
+        if opts.hessian_rank is not None:
+            raise ValueError("the reference engine is the dense-eigh "
+                             "oracle — hessian_rank has no host-loop "
+                             "form (use engine='scan')")
+    if engine == "sharded2d" and opts.hessian_rank is not None:
+        raise ValueError(
+            "hessian_rank is not implementable on the 2-D engine: its "
+            "dense init is panel-sharded (no device may hold the d×d "
+            "buffer the rank-r eigh fold reads) — use engine='scan', "
+            "'batch' or 'sharded'")
     if isinstance(controller, str):
         controller = make_controller(controller)
     if isinstance(controller, QuorumController):

@@ -12,6 +12,15 @@ from .baselines import (  # noqa: F401
     run_newton_zero,
     run_sgd,
 )
+from .compression import (  # noqa: F401
+    CompressionSpec,
+    chol_rank1_update,
+    compressed_quorum_aggregate,
+    compressed_server_aggregate,
+    lowrank_hmu_factor,
+    parse_compression,
+    uplink_bytes,
+)
 from .convex import Logistic, Quadratic, make_logistic, make_quadratic  # noqa: F401
 from .hessian import (  # noqa: F401
     blocked_cho_solve,

@@ -35,6 +35,22 @@ class PolicyConfig:
     stale_regions: tuple[int, ...] = (0,)   # staleness: which regions starve
     tau_star: int = 0            # 0 = no coverage repair
 
+    def __post_init__(self):
+        # construction-time validation, matching the RanlOptions error
+        # style: keep_prob outside (0, 1] would give worker_keep_probs a
+        # negative half-width (inverted uniform bounds — silently
+        # garbage masks)
+        if not 0.0 < self.keep_prob <= 1.0:
+            raise ValueError(f"keep_prob={self.keep_prob} must be in "
+                             f"(0, 1]")
+        if self.keep_k < 1:
+            raise ValueError(f"keep_k={self.keep_k} must be >= 1")
+        if self.stale_period < 0:
+            raise ValueError(f"stale_period={self.stale_period} must be "
+                             f">= 0")
+        if self.tau_star < 0:
+            raise ValueError(f"tau_star={self.tau_star} must be >= 0")
+
 
 def worker_keep_probs(key, num_workers: int, base: float,
                       heterogeneous: bool):

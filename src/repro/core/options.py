@@ -67,6 +67,17 @@ class RanlOptions:
       ``gamma**s`` (``gamma=0`` drops all late work);
     * ``max_delay``: contributions later than this many rounds are
       dropped outright (and do not refresh the gradient memory).
+
+    Compressed communication (``core.compression``):
+
+    * ``compression``: ``None`` (uncompressed — bit-exact default) |
+      ``"int8"`` | ``"bf16"`` | ``"topk:k"`` — lossy uplink compression
+      with an error-feedback residual riding the scan carry; metered in
+      ``RanlResult.comm_bytes`` and charged by the cost model's uplink
+      bandwidth;
+    * ``hessian_rank``: fold only the top-r eigenpairs of workers'
+      init-phase Hessians into [H]_μ via Cholesky rank-1 updates
+      (``None`` = the exact dense init).
     """
     num_rounds: int = 30
     num_regions: int = 8
@@ -84,6 +95,8 @@ class RanlOptions:
     quorum_tau: int | None = None
     gamma: float = 0.5
     max_delay: int = 2
+    compression: str | None = None
+    hessian_rank: int | None = None
 
     def __post_init__(self):
         if not isinstance(self.policy, PolicyConfig):
@@ -119,6 +132,13 @@ class RanlOptions:
         if self.quorum_tau is not None and self.quorum is None:
             raise ValueError("quorum_tau is set but quorum is None — set "
                              "quorum to enable semi-synchronous rounds")
+        # construction-time validation, like the quorum family: a bad
+        # spec raises here, not inside a shard_map trace
+        from .compression import parse_compression
+        parse_compression(self.compression)
+        if self.hessian_rank is not None and self.hessian_rank < 1:
+            raise ValueError(f"hessian_rank={self.hessian_rank} must be "
+                             f">= 1 (or None for the dense init)")
 
     def merged(self, **overrides) -> "RanlOptions":
         """A copy with ``overrides`` applied (unknown keys raise)."""
@@ -135,6 +155,12 @@ class RanlOptions:
                            quorum_tau=self.quorum_tau,
                            gamma=float(self.gamma),
                            max_delay=int(self.max_delay)))
+
+    def compression_spec(self):
+        """-> ``core.compression.CompressionSpec | None`` (the static
+        record the engines branch on; ``None`` = uncompressed)."""
+        from .compression import parse_compression
+        return parse_compression(self.compression)
 
 
 @dataclass(frozen=True)

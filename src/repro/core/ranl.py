@@ -111,6 +111,9 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from .aggregation import late_fold_updates, quorum_aggregate, \
     server_aggregate
+from .compression import CompressionSpec, compressed_quorum_aggregate, \
+    compressed_server_aggregate, lowrank_hmu_factor, psum_compressed, \
+    uplink_bytes
 from .hessian import hutchinson_diag, project_diag, project_psd, \
     project_psd_ns, project_psd_ns_panels, running_mean_hessian, \
     solve_projected
@@ -142,11 +145,15 @@ class RanlResult:
                                # kept-coordinate counts when none given)
     max_stale: jnp.ndarray = None    # (T,) max region staleness after each
                                # round (rounds since last covered)
+    comm_bytes: jnp.ndarray = None   # (T,) modeled uplink BYTES actually
+                               # transmitted per round (the
+                               # core.compression wire model;
+                               # 4 · comm_floats when uncompressed)
 
 
 def _init_phase(problem, k_init, *, mu: float, lr: float, curvature: str,
                 hutch_samples: int, projection: str = "eigh",
-                ns_iters: int = 60):
+                ns_iters: int = 60, hessian_rank: int | None = None):
     """Alg. 1 lines 1–8, worker evaluations vmapped/scanned.
 
     Returns (x1, C0, cho_c, cho_lower, hdiag): the post-init iterate, the
@@ -167,7 +174,17 @@ def _init_phase(problem, k_init, *, mu: float, lr: float, curvature: str,
     gkeys = jax.random.split(jax.random.fold_in(k_init, 1), N)
     g0 = grad_at(worker_ids, x0, gkeys)          # (N, d)
 
-    if curvature == "dense":
+    if curvature == "dense" and hessian_rank is not None:
+        # compressed init exchange: project worker 0's Hessian once, fold
+        # only the top-r eigenpairs of every other worker's curvature via
+        # Cholesky rank-1 updates — no mean-Hessian re-projection (see
+        # compression.lowrank_hmu_factor for the exactness regime)
+        cho_c, cho_lower = lowrank_hmu_factor(
+            problem, x0, hkeys, mu, rank=hessian_rank), True
+        hdiag = None
+        step0 = jax.scipy.linalg.cho_solve((cho_c, cho_lower),
+                                           g0.mean(axis=0))
+    elif curvature == "dense":
         # O(d²)-peak shared fold (see running_mean_hessian: the eager
         # left-to-right order is what keeps reference parity bit-tight;
         # the sharded2d dense init, whose oracle tolerance is 1e-5, uses
@@ -241,19 +258,21 @@ def _controller_mask(controller, cost, ctrl_state, telem, kt, t,
     return M, ctrl_state
 
 
-def _observe_round(cost, telem, M_full, count_q, sizes_q, t):
+def _observe_round(cost, telem, M_full, count_q, sizes_q, t, ubytes=None):
     """Fold one round's observations into the telemetry carry.
 
     ``M_full``: the round's FULL (N, Q) mask (replicated in the sharded
     engines — per-worker work needs every row); ``count_q``: the (Q,)
-    coverage counts the aggregation already computed.  Returns the new
+    coverage counts the aggregation already computed; ``ubytes``: the
+    per-worker uplink bytes of the round's (possibly compressed) wire
+    model (None = the uncompressed 4 bytes/coordinate).  Returns the new
     telemetry, whose ``times``/``stale_q`` feed the per-round wall-clock
     and max-staleness traces.
     """
     from ..hetero.cost import worker_times
     from ..hetero.controller import next_telemetry
     work = (M_full * sizes_q[None, :]).sum(axis=1)
-    times = worker_times(cost, work, t)
+    times = worker_times(cost, work, t, ubytes)
     return next_telemetry(telem, count_q, work, times)
 
 
@@ -270,14 +289,15 @@ def _hetero_defaults(problem, policy, controller, cost):
 
 _ROUND_STATIC = ("num_rounds", "num_regions", "controller", "mu", "lr",
                  "curvature", "use_kernel", "interpret", "cho_lower",
-                 "qspec")
+                 "qspec", "comp")
 
 
 def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
                  num_rounds: int, num_regions: int, controller, mu: float,
                  lr: float, curvature: str, use_kernel: bool,
                  interpret: bool | None, cho_lower: bool,
-                 qspec: QuorumSpec | None = None):
+                 qspec: QuorumSpec | None = None,
+                 comp: CompressionSpec | None = None):
     """Alg. 1 lines 9–23 as one ``lax.scan``; returns the full result set
     (xs, dist_sq, losses, coverage, comm, tau, times, stale) as arrays.
 
@@ -293,6 +313,14 @@ def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
     the synchronous loop compiles unchanged (no buffer, no split).  The
     fused diag kernel has no late-fold form, so the quorum path always
     takes the jnp aggregation.
+
+    ``comp`` switches on per-worker uplink compression with error
+    feedback: the (N, d) residual rides the carry, the aggregation
+    routes through ``compressed_server_aggregate`` /
+    ``compressed_quorum_aggregate``, and the fused diag kernel is
+    bypassed (it has no EF form).  ``comp=None`` is a static branch —
+    the uncompressed loop compiles unchanged (no residual in the
+    carry), which is the bit-exactness rail the tests pin.
     """
     from ..hetero.controller import initial_telemetry, next_telemetry
     from ..hetero.cost import quorum_split, worker_times
@@ -304,7 +332,7 @@ def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
     grad_pruned = jax.vmap(problem.worker_grad, in_axes=(0, 0, 0))
 
     def body(carry, t):
-        x, C, late_buf, ctrl_state, telem = carry
+        x, C, err, late_buf, ctrl_state, telem = carry
         kt = jax.random.fold_in(k_loop, t)
         M, ctrl_state = _controller_mask(controller, cost, ctrl_state,
                                          telem, kt, t, N, Q)  # (N, Q) bool
@@ -312,15 +340,22 @@ def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
         x_pruned = jnp.where(Mx, x[None, :], 0.0)        # x ⊙ m_i
         gk = jax.random.split(jax.random.fold_in(kt, 7), N)
         G = grad_pruned(worker_ids, x_pruned, gk) * Mx   # ∇F_i ⊙ m_i
+        ubytes = uplink_bytes(comp, M, sizes_q)          # (N,) wire model
         if qspec is not None:
             work = (M * sizes_q[None, :]).sum(axis=1)
-            times = worker_times(cost, work, t)
+            times = worker_times(cost, work, t, ubytes)
             deadline, on_time, delays = quorum_split(
                 times, M, quorum=qspec.quorum, quorum_tau=qspec.quorum_tau,
                 max_delay=qspec.max_delay)
-            g, C, late_buf = quorum_aggregate(
-                G, Mx, C, on_time, delays, late_buf, gamma=qspec.gamma,
-                max_delay=qspec.max_delay)
+            if comp is None:
+                g, C, late_buf = quorum_aggregate(
+                    G, Mx, C, on_time, delays, late_buf, gamma=qspec.gamma,
+                    max_delay=qspec.max_delay)
+            else:
+                g, C, err, late_buf = compressed_quorum_aggregate(
+                    G, Mx, C, err, on_time, delays, late_buf, comp,
+                    region_ids=region_ids, num_regions=Q,
+                    gamma=qspec.gamma, max_delay=qspec.max_delay)
             if curvature == "dense":
                 step = jax.scipy.linalg.cho_solve((cho_c, cho_lower), g)
             else:
@@ -329,14 +364,19 @@ def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
             count_q = (M & on_time[:, None]).sum(axis=0)  # on-time counts
             telem = next_telemetry(telem, count_q, work, times)
             round_t = deadline
-        elif curvature == "diag" and use_kernel:
+        elif curvature == "diag" and use_kernel and comp is None:
             from ..kernels.region_aggregate import ranl_update
             # interpret=None lets the kernel layer pick the dispatch mode
             # (interpret off-TPU, compiled on TPU) — single source of truth
             x, C = ranl_update(x, hdiag, G, Mx, C, mu=mu, lr=lr,
                                interpret=interpret)
         else:
-            g, C = server_aggregate(G, Mx, C)
+            if comp is None:
+                g, C = server_aggregate(G, Mx, C)
+            else:
+                g, C, err = compressed_server_aggregate(
+                    G, Mx, C, err, comp, region_ids=region_ids,
+                    num_regions=Q)
             if curvature == "dense":
                 step = jax.scipy.linalg.cho_solve((cho_c, cho_lower), g)
             else:
@@ -344,23 +384,25 @@ def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
             x = x - lr * step
         if qspec is None:
             count_q = M.sum(axis=0)
-            telem = _observe_round(cost, telem, M, count_q, sizes_q, t)
+            telem = _observe_round(cost, telem, M, count_q, sizes_q, t,
+                                   ubytes)
             round_t = telem.times.max()
         cov_mean, min_count, min_cov_count = _round_diagnostics(
             count_q > 0, count_q, N)
-        return (x, C, late_buf, ctrl_state, telem), (
+        return (x, C, err, late_buf, ctrl_state, telem), (
             x, cov_mean, Mx.sum(), min_count, min_cov_count,
-            round_t, telem.stale_q.max())
+            round_t, telem.stale_q.max(), ubytes.sum())
 
     x0 = jnp.zeros(d)
     late_buf0 = (() if qspec is None
                  else jnp.zeros((qspec.max_delay, d)))
+    err0 = (() if comp is None else jnp.zeros((N, d)))
     if num_rounds > 0:
         ts = jnp.arange(1, num_rounds + 1)
-        carry0 = (x1, C0, late_buf0, controller.init_state(N, Q),
+        carry0 = (x1, C0, err0, late_buf0, controller.init_state(N, Q),
                   initial_telemetry(N, Q))
         _, (xs_t, cov, comm, min_counts, min_cov_counts, times,
-            stale) = jax.lax.scan(body, carry0, ts)
+            stale, cbytes) = jax.lax.scan(body, carry0, ts)
         xs = jnp.concatenate([jnp.stack([x0, x1]), xs_t], axis=0)
         tau, tau_cov = _tau_pair(min_counts, min_cov_counts, N)
     else:
@@ -371,10 +413,11 @@ def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
         tau_cov = jnp.asarray(N, jnp.int32)
         times = jnp.zeros((0,))
         stale = jnp.zeros((0,), jnp.int32)
+        cbytes = jnp.zeros((0,))
 
     dist = jnp.sum((xs - problem.x_star[None, :]) ** 2, axis=1)
     losses = jax.vmap(problem.loss)(xs)
-    return xs, dist, losses, cov, comm, tau, tau_cov, times, stale
+    return xs, dist, losses, cov, comm, tau, tau_cov, times, stale, cbytes
 
 
 _rounds_jit = functools.partial(
@@ -382,25 +425,25 @@ _rounds_jit = functools.partial(
 
 _BATCH_STATIC = ("num_rounds", "num_regions", "controller", "mu", "lr",
                  "curvature", "use_kernel", "interpret", "hutch_samples",
-                 "projection", "ns_iters", "qspec")
+                 "projection", "ns_iters", "qspec", "comp", "hessian_rank")
 
 
 def _ranl_batch_engine(problem, keys, cost, *, num_rounds, num_regions,
                        controller, mu, lr, curvature, use_kernel,
                        interpret, hutch_samples, projection, ns_iters,
-                       qspec=None):
+                       qspec=None, comp=None, hessian_rank=None):
     def one(key):
         k_init, k_loop = jax.random.split(key)
         x1, C0, cho_c, cho_lower, hdiag = _init_phase(
             problem, k_init, mu=mu, lr=lr, curvature=curvature,
             hutch_samples=hutch_samples, projection=projection,
-            ns_iters=ns_iters)
+            ns_iters=ns_iters, hessian_rank=hessian_rank)
         return _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, cost,
                             num_rounds=num_rounds, num_regions=num_regions,
                             controller=controller, mu=mu, lr=lr,
                             curvature=curvature, use_kernel=use_kernel,
                             interpret=interpret, cho_lower=cho_lower,
-                            qspec=qspec)
+                            qspec=qspec, comp=comp)
     return jax.vmap(one)(keys)
 
 
@@ -433,7 +476,8 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
                          axis_name: str, num_rounds: int, num_regions: int,
                          controller, mu: float, lr: float,
                          curvature: str, cho_lower: bool, num_workers: int,
-                         overlap: bool, qspec: QuorumSpec | None = None):
+                         overlap: bool, qspec: QuorumSpec | None = None,
+                         comp: CompressionSpec | None = None):
     """Per-device round loop (runs under ``shard_map``).
 
     ``problem``/``C0`` arrive worker-sharded (N/n_dev local workers);
@@ -465,6 +509,15 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
     param-sized psum (each device contributes its own workers' damped
     late mass), so the quorum path adds NO collective.  ``qspec=None``
     compiles the synchronous loop unchanged.
+
+    With ``comp`` the round's one param-sized psum carries a COMPRESSED
+    payload (``psum_compressed``): the device's pre-reduction contribution
+    — plus, in quorum mode, its due late-buffer row, since the late mass
+    physically rides the same all-reduce on this wire — is quantized
+    (int8 shared-scale / bf16) or top-k sparsified, with a per-device
+    error-feedback residual ``err`` (d,) in the scan carry.  The memory C
+    and the late buffer stay device-local and exact.  ``comp=None`` is a
+    static Python branch: the uncompressed loop compiles unchanged.
     """
     from ..hetero.cost import quorum_split, worker_times
     from ..hetero.controller import initial_telemetry, next_telemetry
@@ -474,6 +527,7 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
     region_ids = contiguous_regions(d, Q)
     sizes_q = region_sizes(region_ids, Q)
     n_local = problem.num_workers         # workers held by this shard
+    n_dev = max(N // max(n_local, 1), 1)  # devices joining the psum
     shard = jax.lax.axis_index(axis_name)
     local_ids = jnp.arange(n_local)
     grad_pruned = jax.vmap(problem.worker_grad, in_axes=(0, 0, 0))
@@ -495,7 +549,8 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
         gk = jax.lax.dynamic_slice_in_dim(gk_full, start, n_local)
         count_q = jax.lax.psum(M.sum(axis=0), axis_name)
         work = (M_full * sizes_q[None, :]).sum(axis=1)
-        times = worker_times(cost, work, t)
+        ubytes = uplink_bytes(comp, M_full, sizes_q)
+        times = worker_times(cost, work, t, ubytes)
         if qspec is None:
             qinfo = ()
         else:
@@ -507,9 +562,18 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
                      jax.lax.dynamic_slice_in_dim(on_time, start, n_local),
                      jax.lax.dynamic_slice_in_dim(delays, start, n_local),
                      deadline)
-        return (M, gk, count_q, work, times, qinfo), ctrl_state
+        return (M, gk, count_q, work, times, qinfo, ubytes), ctrl_state
 
-    def round_update(x, C, late_buf, sampled):
+    def _psum_payload(y, err):
+        """The round's ONE param-sized all-reduce — compressed when
+        ``comp`` is set (returns the updated error-feedback residual)."""
+        if comp is None:
+            return jax.lax.psum(y, axis_name), err
+        return psum_compressed(comp, y, err, axis_name=axis_name,
+                               n_agg=n_dev, region_ids=region_ids,
+                               num_regions=Q)
+
+    def round_update(x, C, err, late_buf, sampled):
         """The x-dependent half, up to issuing the round's ONE param-sized
         all-reduce: pruned local gradients, then the single-reduction
         aggregation (masked_aggregate's form) — covered fresh-mean and
@@ -520,7 +584,7 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
         the FULL count, so late γ-damped arrivals reconstruct the
         synchronous mean), the device-local late buffer's due row joins
         the same psum, and this round's late work enqueues."""
-        M, gk, count_q, work, times, qinfo = sampled
+        M, gk, count_q, work, times, qinfo, _ = sampled
         Mx = expand_mask(M, region_ids)                  # (n_local, d)
         x_pruned = jnp.where(Mx, x[None, :], 0.0)
         G = grad_pruned(local_ids, x_pruned, gk) * Mx
@@ -529,14 +593,14 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
         if qspec is None:
             covered_x = jnp.take(count_q > 0, region_ids)
             contrib = jnp.where(covered_x[None, :], G / denom, C / N)
-            g = jax.lax.psum(contrib.sum(axis=0), axis_name)
+            g, err = _psum_payload(contrib.sum(axis=0), err)
             C = jnp.where(Mx, G, C)                      # device-local
-            return g, C, Mx, late_buf
+            return g, C, err, Mx, late_buf
         count_on, on_loc, delays_loc, _ = qinfo
         covered_x = jnp.take(count_on > 0, region_ids)
         fresh = jnp.where(on_loc[:, None], G, 0.0)
         contrib = jnp.where(covered_x[None, :], fresh / denom, C / N)
-        g = jax.lax.psum(contrib.sum(axis=0) + late_buf[0], axis_name)
+        g, err = _psum_payload(contrib.sum(axis=0) + late_buf[0], err)
         adds = late_fold_updates(G, Mx, count_x.astype(G.dtype),
                                  delays_loc, gamma=qspec.gamma,
                                  max_delay=qspec.max_delay)
@@ -544,7 +608,7 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
             [late_buf[1:], jnp.zeros_like(late_buf[:1])], axis=0) + adds
         dropped = delays_loc > qspec.max_delay
         C = jnp.where(Mx & ~dropped[:, None], G, C)
-        return g, C, Mx, late_buf
+        return g, C, err, Mx, late_buf
 
     def finish_step(x, g):
         if curvature == "dense":
@@ -556,7 +620,7 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
     def round_obs(sampled):
         """(telemetry count, round-time trace value) for this round —
         on-time counts and the quorum deadline in quorum mode."""
-        _, _, count_q, _, times, qinfo = sampled
+        _, _, count_q, _, times, qinfo, _ = sampled
         if qspec is None:
             return count_q, times.max()
         return qinfo[0], qinfo[3]
@@ -571,11 +635,12 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
     telem0 = initial_telemetry(N, Q)
     late_buf0 = (() if qspec is None
                  else jnp.zeros((qspec.max_delay, d)))
+    err0 = (() if comp is None else jnp.zeros(d))
     if overlap:
         def body(carry, t):
-            x, C, late_buf, ctrl_state, telem, sampled = carry
-            g, C, Mx, late_buf = round_update(x, C, late_buf,
-                                              sampled)      # psum issued
+            x, C, err, late_buf, ctrl_state, telem, sampled = carry
+            g, C, err, Mx, late_buf = round_update(x, C, err, late_buf,
+                                                   sampled)  # psum issued
             # overlap window: fold round t's observations into the
             # telemetry, sample round t+1 (controller step + count psum),
             # and compute round t's diagnostics — none of it touches g
@@ -586,50 +651,52 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
             comm, cov_mean, min_count, min_cov_count = diagnostics(
                 Mx, count_obs)
             x = finish_step(x, g)             # first consumer of the psum
-            return (x, C, late_buf, ctrl_state, telem, nxt), (
+            return (x, C, err, late_buf, ctrl_state, telem, nxt), (
                 x, cov_mean, comm, min_count, min_cov_count,
-                round_t, telem.stale_q.max())
+                round_t, telem.stale_q.max(), sampled[6].sum())
 
         nxt0, ctrl_state0 = sample_round(1, ctrl_state0, telem0)
-        init_carry = (x1, C0, late_buf0, ctrl_state0, telem0, nxt0)
+        init_carry = (x1, C0, err0, late_buf0, ctrl_state0, telem0, nxt0)
     else:
         def body(carry, t):
-            x, C, late_buf, ctrl_state, telem = carry
+            x, C, err, late_buf, ctrl_state, telem = carry
             sampled, ctrl_state = sample_round(t, ctrl_state, telem)
-            g, C, Mx, late_buf = round_update(x, C, late_buf, sampled)
+            g, C, err, Mx, late_buf = round_update(x, C, err, late_buf,
+                                                   sampled)
             x = finish_step(x, g)
             count_obs, round_t = round_obs(sampled)
             telem = next_telemetry(telem, count_obs, sampled[3],
                                    sampled[4])
             comm, cov_mean, min_count, min_cov_count = diagnostics(
                 Mx, count_obs)
-            return (x, C, late_buf, ctrl_state, telem), (
+            return (x, C, err, late_buf, ctrl_state, telem), (
                 x, cov_mean, comm, min_count, min_cov_count,
-                round_t, telem.stale_q.max())
+                round_t, telem.stale_q.max(), sampled[6].sum())
 
-        init_carry = (x1, C0, late_buf0, ctrl_state0, telem0)
+        init_carry = (x1, C0, err0, late_buf0, ctrl_state0, telem0)
 
     ts = jnp.arange(1, num_rounds + 1)
     _, (xs_t, cov, comm, min_counts, min_cov_counts, times,
-        stale) = jax.lax.scan(body, init_carry, ts)
+        stale, cbytes) = jax.lax.scan(body, init_carry, ts)
     xs = jnp.concatenate([jnp.stack([jnp.zeros(d), x1]), xs_t], axis=0)
     tau, tau_cov = _tau_pair(min_counts, min_cov_counts, N)
-    return xs, cov, comm, tau, tau_cov, times, stale
+    return xs, cov, comm, tau, tau_cov, times, stale, cbytes
 
 
 _SHARDED_STATIC = ("mesh", "axis_name", "num_rounds", "num_regions",
                    "controller", "mu", "lr", "curvature", "cho_lower",
-                   "num_workers", "overlap", "qspec")
+                   "num_workers", "overlap", "qspec", "comp")
 
 
 def _sharded_engine(problem, k_loop, x1, C0, cho_c, hdiag, cost, *, mesh,
                     axis_name, num_rounds, num_regions, controller, mu, lr,
-                    curvature, cho_lower, num_workers, overlap, qspec=None):
+                    curvature, cho_lower, num_workers, overlap, qspec=None,
+                    comp=None):
     body = functools.partial(
         _sharded_rounds_body, axis_name=axis_name, num_rounds=num_rounds,
         num_regions=num_regions, controller=controller, mu=mu, lr=lr,
         curvature=curvature, cho_lower=cho_lower, num_workers=num_workers,
-        overlap=overlap, qspec=qspec)
+        overlap=overlap, qspec=qspec, comp=comp)
     in_specs = (_worker_sharded_specs(problem, axis_name),
                 _replicated_specs(k_loop), _replicated_specs(x1),
                 P(axis_name, None), _replicated_specs(cho_c),
@@ -638,7 +705,7 @@ def _sharded_engine(problem, k_loop, x1, C0, cho_c, hdiag, cost, *, mesh,
     # the psum); check_rep=False because the replication checker cannot
     # track the axis_index-based worker slicing
     fn = shard_map(body, mesh=mesh, in_specs=in_specs,
-                   out_specs=(P(),) * 7, check_rep=False)
+                   out_specs=(P(),) * 8, check_rep=False)
     return fn(problem, k_loop, x1, C0, cho_c, hdiag, cost)
 
 
@@ -673,7 +740,8 @@ def _sharded_args(problem, key, opts: RanlOptions, *, mesh, axis_name,
     x1, C0, cho_c, cho_lower, hdiag = _init_phase(
         problem, k_init, mu=cfg["mu"], lr=cfg["lr"],
         curvature=cfg["curvature"], hutch_samples=hutch,
-        projection=projection, ns_iters=opts.ns_iters)
+        projection=projection, ns_iters=opts.ns_iters,
+        hessian_rank=opts.hessian_rank)
     args = (problem, k_loop, x1, C0, cho_c, hdiag, cost)
     static = dict(mesh=mesh, axis_name=axis_name,
                   num_rounds=int(opts.num_rounds),
@@ -681,7 +749,7 @@ def _sharded_args(problem, key, opts: RanlOptions, *, mesh, axis_name,
                   controller=controller, cho_lower=cho_lower,
                   num_workers=problem.num_workers,
                   overlap=bool(opts.overlap), qspec=opts.quorum_spec(),
-                  **cfg)
+                  comp=opts.compression_spec(), **cfg)
     return args, static
 
 
@@ -713,14 +781,15 @@ def _run_sharded(problem, key, opts: RanlOptions, *, mesh,
     args, static = _sharded_args(problem, key, opts, mesh=mesh,
                                  axis_name=axis_name,
                                  controller=controller, cost=cost)
-    xs, cov, comm, tau, tau_cov, times, stale = _sharded_jit(
+    xs, cov, comm, tau, tau_cov, times, stale, cbytes = _sharded_jit(
         *args, **static)
     dist = jnp.sum((xs - problem.x_star[None, :]) ** 2, axis=1)
     losses = jax.vmap(problem.loss)(xs)
     return _subsampled(RanlResult(
         xs=xs, dist_sq=dist, losses=losses, coverage=cov,
         comm_floats=comm, tau_star=int(tau), tau_covered=int(tau_cov),
-        round_time=times, max_stale=stale), opts.record_every)
+        round_time=times, max_stale=stale, comm_bytes=cbytes),
+        opts.record_every)
 
 
 def _lower_sharded(problem, key, opts: RanlOptions, *, mesh,
@@ -830,7 +899,8 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
                            lr: float, curvature: str, use_kernel: bool,
                            interpret: bool | None, num_workers: int,
                            n_data: int, n_model: int, overlap: bool,
-                           qspec: QuorumSpec | None = None):
+                           qspec: QuorumSpec | None = None,
+                           comp: CompressionSpec | None = None):
     """Per-device round loop on the 2-D mesh (runs under ``shard_map`` for
     the diag path, called inline by ``_sharded2d_dense_body`` for dense).
 
@@ -856,6 +926,14 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
     ``(max_delay, p)`` late-buffer tile folds into the round's one
     data-axis param-shard psum, and the fused kernel path is bypassed
     (it has no late-fold form).
+
+    With ``comp`` that one data-axis psum carries a compressed payload
+    (``psum_compressed`` on the local d/n_model-column slice, per-device
+    error-feedback residual (p,) in the carry); top-k region selection is
+    per-model-shard (each shard keeps the locally heaviest regions — the
+    residual absorbs the difference).  The fused kernel path is bypassed
+    (``comp`` changes the wire format of the psum the kernel fuses away).
+    ``comp=None`` compiles the uncompressed loop unchanged.
     """
     from ..hetero.cost import quorum_split, worker_times
     from ..hetero.controller import initial_telemetry, next_telemetry
@@ -879,7 +957,7 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
     # meshes); otherwise the collective jnp form is used.  It has no
     # late-fold form, so quorum runs always take the jnp path.
     kernel_ok = (use_kernel and curvature == "diag" and n_data == 1
-                 and qspec is None)
+                 and qspec is None and comp is None)
 
     def sample_round(t, ctrl_state, telem):
         """Everything x-independent about round t: step the controller on
@@ -896,7 +974,8 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
         gk = jax.lax.dynamic_slice_in_dim(gk_full, wstart, n_local)
         count_q = jax.lax.psum(M.sum(axis=0), data_axis)
         work = (M_full * sizes_q[None, :]).sum(axis=1)
-        times = worker_times(cost, work, t)
+        ubytes = uplink_bytes(comp, M_full, sizes_q)
+        times = worker_times(cost, work, t, ubytes)
         if qspec is None:
             qinfo = ()
         else:
@@ -910,7 +989,7 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
                      jax.lax.dynamic_slice_in_dim(delays, wstart,
                                                   n_local),
                      deadline)
-        return (M, gk, count_q, work, times, qinfo), ctrl_state
+        return (M, gk, count_q, work, times, qinfo, ubytes), ctrl_state
 
     def scatter_rows(vec_loc):
         """Assemble a replicated (d,) vector from local rows — one
@@ -919,16 +998,25 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
             jax.lax.dynamic_update_slice(jnp.zeros(d, vec_loc.dtype),
                                          vec_loc, (row_start,)), model_axis)
 
-    def round_update(x, C, late_buf, sampled):
+    def _psum_payload(y_loc, err):
+        """The round's ONE data-axis param-shard all-reduce — compressed
+        on the local column slice when ``comp`` is set."""
+        if comp is None:
+            return jax.lax.psum(y_loc, data_axis), err
+        return psum_compressed(comp, y_loc, err, axis_name=data_axis,
+                               n_agg=n_data, region_ids=region_ids_loc,
+                               num_regions=Q)
+
+    def round_update(x, C, err, late_buf, sampled):
         """The x-dependent half, up to issuing the round's main
-        collective.  Returns (x_new, C, g_loc, late_buf): for the kernel
-        path the new iterate directly (its model-axis assembly psum
-        issued), otherwise ``g_loc`` — the result of the round's ONE
+        collective.  Returns (x_new, C, err, g_loc, late_buf): for the
+        kernel path the new iterate directly (its model-axis assembly
+        psum issued), otherwise ``g_loc`` — the result of the round's ONE
         data-axis param-shard all-reduce — for ``finish_step`` to
         consume.  Quorum mode folds the local late-buffer tile into that
         same psum and enqueues this round's late work (see the 1-D
         body)."""
-        M, gk, count_q, _, _, qinfo = sampled
+        M, gk, count_q, _, _, qinfo, _ = sampled
         Mx_full = expand_mask(M, region_ids)        # (n_local, d)
         Mx = expand_mask(M, region_ids_loc)         # (n_local, p) local cols
         x_pruned = jnp.where(Mx_full, x[None, :], 0.0)
@@ -940,7 +1028,7 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
             x_loc = jax.lax.dynamic_slice(x, (row_start,), (p,))
             x_loc, C = ranl_update(x_loc, hdiag, G, Mx, C, mu=mu, lr=lr,
                                    interpret=interpret)
-            return scatter_rows(x_loc), C, None, late_buf
+            return scatter_rows(x_loc), C, err, None, late_buf
         # single-reduction aggregation on the local d-slice: the
         # worker-axis sum below is the round's ONE data-axis param-shard
         # all-reduce (d/n_model floats)
@@ -949,14 +1037,14 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
         if qspec is None:
             covered_x = jnp.take(count_q > 0, region_ids_loc)
             contrib = jnp.where(covered_x[None, :], G / denom, C / N)
-            g_loc = jax.lax.psum(contrib.sum(axis=0), data_axis)
+            g_loc, err = _psum_payload(contrib.sum(axis=0), err)
             C = jnp.where(Mx, G, C)                 # device-local tile
-            return None, C, g_loc, late_buf
+            return None, C, err, g_loc, late_buf
         count_on, on_loc, delays_loc, _ = qinfo
         covered_x = jnp.take(count_on > 0, region_ids_loc)
         fresh = jnp.where(on_loc[:, None], G, 0.0)
         contrib = jnp.where(covered_x[None, :], fresh / denom, C / N)
-        g_loc = jax.lax.psum(contrib.sum(axis=0) + late_buf[0], data_axis)
+        g_loc, err = _psum_payload(contrib.sum(axis=0) + late_buf[0], err)
         adds = late_fold_updates(G, Mx, count_x.astype(G.dtype),
                                  delays_loc, gamma=qspec.gamma,
                                  max_delay=qspec.max_delay)
@@ -964,7 +1052,7 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
             [late_buf[1:], jnp.zeros_like(late_buf[:1])], axis=0) + adds
         dropped = delays_loc > qspec.max_delay
         C = jnp.where(Mx & ~dropped[:, None], G, C)
-        return None, C, g_loc, late_buf
+        return None, C, err, g_loc, late_buf
 
     def finish_step(x, g_loc):
         if curvature == "dense":
@@ -978,7 +1066,7 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
     def round_obs(sampled):
         """(telemetry count, round-time trace value) for this round —
         on-time counts and the quorum deadline in quorum mode."""
-        _, _, count_q, _, times, qinfo = sampled
+        _, _, count_q, _, times, qinfo, _ = sampled
         if qspec is None:
             return count_q, times.max()
         return qinfo[0], qinfo[3]
@@ -996,11 +1084,12 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
     telem0 = initial_telemetry(N, Q)
     late_buf0 = (() if qspec is None
                  else jnp.zeros((qspec.max_delay, p)))
+    err0 = (() if comp is None else jnp.zeros(p))
     if overlap:
         def body(carry, t):
-            x, C, late_buf, ctrl_state, telem, sampled = carry
-            x_new, C, g_loc, late_buf = round_update(x, C, late_buf,
-                                                     sampled)
+            x, C, err, late_buf, ctrl_state, telem, sampled = carry
+            x_new, C, err, g_loc, late_buf = round_update(
+                x, C, err, late_buf, sampled)
             # overlap window: round t's telemetry fold + diagnostics and
             # round t+1's sampling + count psum — none of it touches the
             # in-flight psum
@@ -1012,19 +1101,19 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
                 sampled[2], count_obs)
             if x_new is None:
                 x_new = finish_step(x, g_loc)     # first psum consumer
-            return (x_new, C, late_buf, ctrl_state, telem, nxt), (
+            return (x_new, C, err, late_buf, ctrl_state, telem, nxt), (
                 x_new, cov_mean, comm, min_count, min_cov_count,
-                round_t, telem.stale_q.max())
+                round_t, telem.stale_q.max(), sampled[6].sum())
 
         nxt0, ctrl_state0 = sample_round(1, ctrl_state0, telem0)
-        init_carry = (x1, C0, late_buf0, ctrl_state0, telem0, nxt0)
+        init_carry = (x1, C0, err0, late_buf0, ctrl_state0, telem0, nxt0)
     else:
         def body(carry, t):
-            x, C, late_buf, ctrl_state, telem = carry
+            x, C, err, late_buf, ctrl_state, telem = carry
             # x: (d,) replicated; C: (n_local, p)
             sampled, ctrl_state = sample_round(t, ctrl_state, telem)
-            x_new, C, g_loc, late_buf = round_update(x, C, late_buf,
-                                                     sampled)
+            x_new, C, err, g_loc, late_buf = round_update(
+                x, C, err, late_buf, sampled)
             if x_new is None:
                 x_new = finish_step(x, g_loc)
             count_obs, round_t = round_obs(sampled)
@@ -1032,30 +1121,31 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
                                    sampled[4])
             comm, cov_mean, min_count, min_cov_count = diagnostics(
                 sampled[2], count_obs)
-            return (x_new, C, late_buf, ctrl_state, telem), (
+            return (x_new, C, err, late_buf, ctrl_state, telem), (
                 x_new, cov_mean, comm, min_count, min_cov_count,
-                round_t, telem.stale_q.max())
+                round_t, telem.stale_q.max(), sampled[6].sum())
 
-        init_carry = (x1, C0, late_buf0, ctrl_state0, telem0)
+        init_carry = (x1, C0, err0, late_buf0, ctrl_state0, telem0)
 
     ts = jnp.arange(1, num_rounds + 1)
     _, (xs_t, cov, comm, min_counts, min_cov_counts, times,
-        stale) = jax.lax.scan(body, init_carry, ts)
+        stale, cbytes) = jax.lax.scan(body, init_carry, ts)
     xs = jnp.concatenate([jnp.stack([jnp.zeros(d), x1]), xs_t], axis=0)
     tau, tau_cov = _tau_pair(min_counts, min_cov_counts, N)
-    return xs, cov, comm, tau, tau_cov, times, stale
+    return xs, cov, comm, tau, tau_cov, times, stale, cbytes
 
 
 _SHARDED2D_STATIC = ("mesh", "data_axis", "model_axis", "num_rounds",
                      "num_regions", "controller", "mu", "lr", "curvature",
                      "use_kernel", "interpret", "num_workers", "n_data",
-                     "n_model", "overlap", "qspec")
+                     "n_model", "overlap", "qspec", "comp")
 
 
 def _sharded2d_engine(problem, k_loop, x1, C0, hdiag, cost, *, mesh,
                       data_axis, model_axis, num_rounds, num_regions,
                       controller, mu, lr, curvature, use_kernel, interpret,
-                      num_workers, n_data, n_model, overlap, qspec=None):
+                      num_workers, n_data, n_model, overlap, qspec=None,
+                      comp=None):
     """Diag-curvature 2-D engine: host-side O(d) init, sharded rounds."""
     from ..launch.shard import ranl2d_pspecs
 
@@ -1067,7 +1157,7 @@ def _sharded2d_engine(problem, k_loop, x1, C0, hdiag, cost, *, mesh,
             num_regions=num_regions, controller=controller, mu=mu, lr=lr,
             curvature=curvature, use_kernel=use_kernel, interpret=interpret,
             num_workers=num_workers, n_data=n_data, n_model=n_model,
-            overlap=overlap, qspec=qspec)
+            overlap=overlap, qspec=qspec, comp=comp)
 
     specs = ranl2d_pspecs(problem, worker_axis=data_axis,
                           dim_axis=model_axis)
@@ -1075,7 +1165,7 @@ def _sharded2d_engine(problem, k_loop, x1, C0, hdiag, cost, *, mesh,
                 _replicated_specs(x1), specs["memory"], specs["hdiag"],
                 _replicated_specs(cost))
     fn = shard_map(body, mesh=mesh, in_specs=in_specs,
-                   out_specs=(P(),) * 7, check_rep=False)
+                   out_specs=(P(),) * 8, check_rep=False)
     return fn(problem, k_loop, x1, C0, hdiag, cost)
 
 
@@ -1086,7 +1176,7 @@ _sharded2d_jit = functools.partial(
 def _sharded2d_dense_body(problem, key, cost, *, data_axis, model_axis,
                           num_rounds, num_regions, controller, mu, lr,
                           ns_iters, overlap, num_workers, n_data, n_model,
-                          qspec=None):
+                          qspec=None, comp=None):
     """Dense-curvature 2-D program, init INCLUDED (runs under shard_map).
 
     Alg. 1 lines 1–8 with every d-sized object as model-axis row panels:
@@ -1146,32 +1236,33 @@ def _sharded2d_dense_body(problem, key, cost, *, data_axis, model_axis,
         num_regions=num_regions, controller=controller, mu=mu, lr=lr,
         curvature="dense", use_kernel=False, interpret=None,
         num_workers=N, n_data=n_data, n_model=n_model, overlap=overlap,
-        qspec=qspec)
+        qspec=qspec, comp=comp)
 
 
 _SHARDED2D_DENSE_STATIC = ("mesh", "data_axis", "model_axis", "num_rounds",
                            "num_regions", "controller", "mu", "lr",
                            "ns_iters", "overlap", "num_workers", "n_data",
-                           "n_model", "qspec")
+                           "n_model", "qspec", "comp")
 
 
 def _sharded2d_dense_engine(problem, key, cost, *, mesh, data_axis,
                             model_axis, num_rounds, num_regions,
                             controller, mu, lr, ns_iters, overlap,
-                            num_workers, n_data, n_model, qspec=None):
+                            num_workers, n_data, n_model, qspec=None,
+                            comp=None):
     from ..launch.shard import ranl2d_pspecs
     body = functools.partial(
         _sharded2d_dense_body, data_axis=data_axis, model_axis=model_axis,
         num_rounds=num_rounds, num_regions=num_regions,
         controller=controller, mu=mu, lr=lr, ns_iters=ns_iters,
         overlap=overlap, num_workers=num_workers, n_data=n_data,
-        n_model=n_model, qspec=qspec)
+        n_model=n_model, qspec=qspec, comp=comp)
     specs = ranl2d_pspecs(problem, worker_axis=data_axis,
                           dim_axis=model_axis)
     in_specs = (specs["problem"], _replicated_specs(key),
                 _replicated_specs(cost))
     fn = shard_map(body, mesh=mesh, in_specs=in_specs,
-                   out_specs=(P(),) * 7, check_rep=False)
+                   out_specs=(P(),) * 8, check_rep=False)
     return fn(problem, key, cost)
 
 
@@ -1226,6 +1317,7 @@ def _sharded2d_args(problem, key, opts: RanlOptions, *, mesh, data_axis,
                   or ("ns" if opts.curvature == "dense" else "eigh"))
     hutch = cfg.pop("hutch_samples")
     qspec = opts.quorum_spec()
+    comp = opts.compression_spec()
 
     if cfg["curvature"] == "dense":
         static = dict(mesh=mesh, data_axis=data_axis, model_axis=model_axis,
@@ -1237,7 +1329,8 @@ def _sharded2d_args(problem, key, opts: RanlOptions, *, mesh, data_axis,
                       else int(opts.ns_iters),
                       overlap=bool(opts.overlap),
                       num_workers=problem.num_workers,
-                      n_data=n_data, n_model=n_model, qspec=qspec)
+                      n_data=n_data, n_model=n_model, qspec=qspec,
+                      comp=comp)
         return _sharded2d_dense_jit, (problem, key, cost), static
 
     def make_args(problem, key):
@@ -1257,7 +1350,8 @@ def _sharded2d_args(problem, key, opts: RanlOptions, *, mesh, data_axis,
                   controller=controller, use_kernel=bool(opts.use_kernel),
                   interpret=None, num_workers=problem.num_workers,
                   n_data=n_data, n_model=n_model,
-                  overlap=bool(opts.overlap), qspec=qspec, **cfg)
+                  overlap=bool(opts.overlap), qspec=qspec, comp=comp,
+                  **cfg)
     return _sharded2d_jit, (*args, cost), static
 
 
@@ -1310,13 +1404,15 @@ def _run_sharded2d(problem, key, opts: RanlOptions, *, mesh,
     engine, args, static = _sharded2d_args(
         problem, key, opts, mesh=mesh, data_axis=data_axis,
         model_axis=model_axis, controller=controller, cost=cost)
-    xs, cov, comm, tau, tau_cov, times, stale = engine(*args, **static)
+    xs, cov, comm, tau, tau_cov, times, stale, cbytes = engine(*args,
+                                                              **static)
     dist = jnp.sum((xs - problem.x_star[None, :]) ** 2, axis=1)
     losses = jax.vmap(problem.loss)(xs)
     return _subsampled(RanlResult(
         xs=xs, dist_sq=dist, losses=losses, coverage=cov,
         comm_floats=comm, tau_star=int(tau), tau_covered=int(tau_cov),
-        round_time=times, max_stale=stale), opts.record_every)
+        round_time=times, max_stale=stale, comm_bytes=cbytes),
+        opts.record_every)
 
 
 def _lower_sharded2d(problem, key, opts: RanlOptions, *, mesh,
@@ -1402,18 +1498,21 @@ def _run_scan(problem, key, opts: RanlOptions, *, controller=None,
     x1, C0, cho_c, cho_lower, hdiag = _init_phase(
         problem, k_init, mu=cfg["mu"], lr=cfg["lr"],
         curvature=cfg["curvature"], hutch_samples=hutch,
-        projection=projection, ns_iters=opts.ns_iters)
-    xs, dist, losses, cov, comm, tau, tau_cov, times, stale = _rounds_jit(
+        projection=projection, ns_iters=opts.ns_iters,
+        hessian_rank=opts.hessian_rank)
+    (xs, dist, losses, cov, comm, tau, tau_cov, times, stale,
+     cbytes) = _rounds_jit(
         problem, k_loop, x1, C0, cho_c, hdiag, cost,
         num_rounds=int(opts.num_rounds),
         num_regions=int(opts.num_regions),
         controller=ctrl, use_kernel=bool(opts.use_kernel),
         interpret=None, cho_lower=cho_lower, qspec=opts.quorum_spec(),
-        **cfg)
+        comp=opts.compression_spec(), **cfg)
     return _subsampled(RanlResult(
         xs=xs, dist_sq=dist, losses=losses, coverage=cov,
         comm_floats=comm, tau_star=int(tau), tau_covered=int(tau_cov),
-        round_time=times, max_stale=stale), opts.record_every)
+        round_time=times, max_stale=stale, comm_bytes=cbytes),
+        opts.record_every)
 
 
 def _run_batch(problem, keys, opts: RanlOptions, *, mesh=None,
@@ -1453,18 +1552,21 @@ def _run_batch(problem, keys, opts: RanlOptions, *, mesh=None,
                   curvature=opts.curvature,
                   hutchinson_samples=opts.hutchinson_samples,
                   projection=projection)
-    xs, dist, losses, cov, comm, tau, tau_cov, times, stale = _batch_jit(
+    (xs, dist, losses, cov, comm, tau, tau_cov, times, stale,
+     cbytes) = _batch_jit(
         problem, keys, cost, num_rounds=int(opts.num_rounds),
         num_regions=int(opts.num_regions), controller=ctrl,
         use_kernel=bool(opts.use_kernel), interpret=None,
         projection=projection,
         ns_iters=opts.ns_iters if opts.ns_iters == "auto"
         else int(opts.ns_iters),
-        qspec=opts.quorum_spec(), **cfg)
+        qspec=opts.quorum_spec(), comp=opts.compression_spec(),
+        hessian_rank=opts.hessian_rank, **cfg)
     return _subsampled(RanlResult(
         xs=xs, dist_sq=dist, losses=losses, coverage=cov,
         comm_floats=comm, tau_star=tau, tau_covered=tau_cov,
-        round_time=times, max_stale=stale), opts.record_every)
+        round_time=times, max_stale=stale, comm_bytes=cbytes),
+        opts.record_every)
 
 
 def _run_reference(problem, key, opts: RanlOptions, *, controller=None,
@@ -1485,6 +1587,7 @@ def _run_reference(problem, key, opts: RanlOptions, *, controller=None,
     num_rounds, num_regions = opts.num_rounds, opts.num_regions
     ctrl, cost = _hetero_defaults(problem, opts.policy, controller, cost)
     qspec = opts.quorum_spec()
+    comp = opts.compression_spec()
     mu = problem.mu if opts.mu is None else opts.mu
     lr = float(opts.lr)
     N, d = problem.num_workers, problem.dim
@@ -1507,10 +1610,12 @@ def _run_reference(problem, key, opts: RanlOptions, *, controller=None,
     xs = [x0, x]
     min_cov, min_cov_covered = N, N
     cov_hist, comm_hist, time_hist, stale_hist = [], [], [], []
+    bytes_hist = []
     ctrl_state = ctrl.init_state(N, Q)
     telem = initial_telemetry(N, Q)
     late_buf = (None if qspec is None
                 else jnp.zeros((qspec.max_delay, d)))
+    err = (None if comp is None else jnp.zeros((N, d)))
     for t in range(1, num_rounds + 1):
         kt = jax.random.fold_in(k_loop, t)
         M, ctrl_state = _controller_mask(ctrl, cost, ctrl_state, telem,
@@ -1519,20 +1624,33 @@ def _run_reference(problem, key, opts: RanlOptions, *, controller=None,
         x_pruned = jnp.where(Mx, x[None, :], 0.0)        # x ⊙ m_i
         gk = jax.random.split(jax.random.fold_in(kt, 7), N)
         G = grad_all(worker_ids, x_pruned, gk) * Mx      # ∇F_i ⊙ m_i
+        ubytes = uplink_bytes(comp, M, sizes_q)
         if qspec is None:
-            g, C = server_aggregate(G, Mx, C)
+            if comp is None:
+                g, C = server_aggregate(G, Mx, C)
+            else:
+                g, C, err = compressed_server_aggregate(
+                    G, Mx, C, err, comp, region_ids=region_ids,
+                    num_regions=Q)
             count_q = M.sum(axis=0)
-            telem = _observe_round(cost, telem, M, count_q, sizes_q, t)
+            telem = _observe_round(cost, telem, M, count_q, sizes_q, t,
+                                   ubytes)
             round_t = telem.times.max()
         else:
             work = (M * sizes_q[None, :]).sum(axis=1)
-            times = worker_times(cost, work, t)
+            times = worker_times(cost, work, t, ubytes)
             deadline, on_time, delays = quorum_split(
                 times, M, quorum=qspec.quorum,
                 quorum_tau=qspec.quorum_tau, max_delay=qspec.max_delay)
-            g, C, late_buf = quorum_aggregate(
-                G, Mx, C, on_time, delays, late_buf,
-                gamma=qspec.gamma, max_delay=qspec.max_delay)
+            if comp is None:
+                g, C, late_buf = quorum_aggregate(
+                    G, Mx, C, on_time, delays, late_buf,
+                    gamma=qspec.gamma, max_delay=qspec.max_delay)
+            else:
+                g, C, err, late_buf = compressed_quorum_aggregate(
+                    G, Mx, C, err, on_time, delays, late_buf, comp,
+                    region_ids=region_ids, num_regions=Q,
+                    gamma=qspec.gamma, max_delay=qspec.max_delay)
             count_q = (M & on_time[:, None]).sum(axis=0)  # on-time counts
             telem = next_telemetry(telem, count_q, work, times)
             round_t = deadline
@@ -1543,6 +1661,7 @@ def _run_reference(problem, key, opts: RanlOptions, *, controller=None,
             count_q > 0, count_q, N)
         cov_hist.append(cov_mean)
         comm_hist.append(Mx.sum())                       # uplink floats
+        bytes_hist.append(ubytes.sum())                  # uplink bytes
         time_hist.append(round_t)
         stale_hist.append(telem.stale_q.max())
         min_cov = min(min_cov, int(min_count))
@@ -1557,7 +1676,8 @@ def _run_reference(problem, key, opts: RanlOptions, *, controller=None,
         comm_floats=jnp.stack(comm_hist),
         tau_star=min_cov, tau_covered=min_cov_covered,
         round_time=jnp.stack(time_hist),
-        max_stale=jnp.stack(stale_hist)), opts.record_every)
+        max_stale=jnp.stack(stale_hist),
+        comm_bytes=jnp.stack(bytes_hist)), opts.record_every)
 
 
 # --------------------------------------------------------------------------

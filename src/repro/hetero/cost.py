@@ -4,15 +4,18 @@ The paper's adaptivity claim is about *time*, not rounds: a policy that
 keeps coverage high but always waits on the slowest worker converges fast
 per round and slowly per second.  ``CostModel`` gives every worker a
 compute rate (gradient floats / time unit), an uplink bandwidth
-(transmitted floats / time unit), and an availability/capacity trace, so
+(transmitted BYTES / time unit), and an availability/capacity trace, so
 an engine run can report the simulated wall-clock a real heterogeneous
 cluster would have paid:
 
-    time_i(t) = overhead + work_i / (rate_i · capacity_i(t)) + work_i / bw_i
+    time_i(t) = overhead + work_i / (rate_i · capacity_i(t)) + bytes_i / bw_i
     round_time(t) = max over participating workers i of time_i(t)
 
 where ``work_i`` is the number of parameter coordinates worker i trains
-and uplinks this round (its mask row expanded to coordinates).  The
+this round (its mask row expanded to coordinates) and ``bytes_i`` is
+what it uplinks — 4·work_i uncompressed, less under the
+``core.compression`` wire models, which is how compression wins show up
+in simulated wall-clock on finite-bandwidth clusters.  The
 default server is synchronous — it waits for the slowest participant —
 which is exactly the regime where resource-proportional allocation wins.
 
@@ -46,10 +49,10 @@ import numpy as np
 class CostModel:
     """Per-worker resource description; see the module docstring.
 
-    ``compute_rate``/``bandwidth``: (N,) positive floats (floats
-    processed / transmitted per simulated time unit; ``jnp.inf``
-    bandwidth models free communication).  The remaining fields are
-    static trace parameters:
+    ``compute_rate``: (N,) positive floats processed per simulated time
+    unit; ``bandwidth``: (N,) uplink BYTES transmitted per simulated
+    time unit (``jnp.inf`` models free communication).  The remaining
+    fields are static trace parameters:
 
     * ``overhead``: fixed per-round latency each participating worker
       pays (scheduling / handshake);
@@ -150,16 +153,23 @@ def capacity(cost: CostModel, t) -> jnp.ndarray:
     return jnp.maximum(1.0 + cost.diurnal_amplitude * wave, 0.05)
 
 
-def worker_times(cost: CostModel, work, t) -> jnp.ndarray:
+def worker_times(cost: CostModel, work, t, uplink_bytes=None) -> jnp.ndarray:
     """(N,) simulated time per worker for a round.
 
-    ``work``: (N,) floats each worker trains + uplinks (0 for workers
-    with an empty or unavailable mask — they cost nothing; the fixed
-    ``overhead`` applies only to participants).
+    ``work``: (N,) parameter coordinates each worker trains this round
+    (0 for workers with an empty or unavailable mask — they cost
+    nothing; the fixed ``overhead`` applies only to participants).
+    ``uplink_bytes``: (N,) BYTES each worker transmits — ``None`` means
+    the uncompressed 4 bytes/coordinate, so ``bandwidth`` is denominated
+    in bytes/time and compression (``core.compression.uplink_bytes``)
+    shows up in simulated wall-clock on finite-uplink clusters.
     """
     work = jnp.asarray(work, jnp.float32)
+    if uplink_bytes is None:
+        uplink_bytes = 4.0 * work
     rate = cost.compute_rate * capacity(cost, t)
-    per = cost.overhead + work / rate + work / cost.bandwidth
+    per = cost.overhead + work / rate \
+        + jnp.asarray(uplink_bytes, jnp.float32) / cost.bandwidth
     return jnp.where(work > 0, per, 0.0)
 
 
@@ -232,19 +242,38 @@ def quorum_split(times, masks, *, quorum: float,
     return deadline, on_time, delays
 
 
-def time_to_target(trace, round_times, target: float) -> float:
+def time_to_target(trace, round_times, target: float, *,
+                   record_every: int = 1) -> float:
     """Simulated time until ``trace`` first drops to ``target``.
 
-    ``trace``: (T+2,) per-iterate series (``RanlResult.dist_sq`` or
-    ``.losses`` — entries 2.. correspond to rounds 1..T); ``round_times``:
-    (T,) per-round simulated times.  Returns the cumulative simulated
-    time through the first round whose iterate meets the target, or
-    ``inf`` if none does — the time-to-accuracy metric the heterogeneity
-    benchmarks report.
+    ``trace``: per-iterate series (``RanlResult.dist_sq`` or
+    ``.losses``); ``round_times``: (T,) per-round simulated times —
+    ALWAYS full length, the engines never thin it.  With
+    ``record_every > 1`` the iterate traces are thinned
+    (``core.ranl._subsampled``: x⁰, x¹, every k-th round and round T),
+    so ``trace[j]`` for j >= 2 maps to round ``rounds[j-2]`` of the
+    kept-round schedule, NOT round j-1 — the historical indexing
+    silently scored thinned traces against the wrong rounds' clock.
+    Pass the run's ``record_every`` and the kept iterates are charged
+    the cumulative time through THEIR rounds; a trace whose length
+    matches neither that schedule nor the full one raises.  Returns the
+    cumulative simulated time through the first round whose (kept)
+    iterate meets the target, or ``inf`` if none does.
     """
     trace = np.asarray(trace)
     times = np.cumsum(np.asarray(round_times, np.float64))
-    hits = np.nonzero(trace[2:2 + len(times)] <= target)[0]
+    T = len(times)
+    k = int(record_every)
+    if k > 1:
+        rounds = sorted(set(range(k, T + 1, k)) | ({T} if T > 0 else set()))
+    else:
+        rounds = list(range(1, T + 1))
+    if len(trace) != len(rounds) + 2:
+        raise ValueError(
+            f"trace length {len(trace)} does not match {T} rounds at "
+            f"record_every={k} (expected {len(rounds) + 2} entries: "
+            f"x0, x1 and the kept rounds {rounds})")
+    hits = np.nonzero(trace[2:] <= target)[0]
     if len(hits) == 0:
         return float("inf")
-    return float(times[hits[0]])
+    return float(times[rounds[hits[0]] - 1])

@@ -19,7 +19,11 @@ is one string:
 Parameters override with ``name:key=value,...`` — e.g.
 ``pareto-stragglers:alpha=1.0`` or ``dropout:p=0.4,alpha=1.5`` (dropout /
 churn / diurnal ride on pareto compute rates when ``alpha`` is given,
-uniform otherwise).
+uniform otherwise).  Every scenario also takes ``bw`` — a finite uplink
+bandwidth in BYTES per simulated time unit (default inf), e.g.
+``pareto-stragglers:alpha=1.2,bw=64`` — the finite-uplink variants the
+compressed-communication bench runs on, so ``work / bw`` stops being
+dead code and bytes-on-the-wire shows up in round times.
 """
 
 from __future__ import annotations
@@ -53,18 +57,24 @@ def dirichlet_weights(key, num_workers: int, alpha: float) -> jnp.ndarray:
 
 
 def _base_cost(key, num_workers: int, p: dict) -> CostModel:
+    bw = float(p.get("bw", float("inf")))
     if "alpha" in p:
-        return pareto_cost(key, num_workers, alpha=float(p["alpha"]))
-    return uniform_cost(num_workers)
+        return pareto_cost(key, num_workers, alpha=float(p["alpha"]),
+                           bandwidth=bw)
+    return uniform_cost(num_workers, bandwidth=bw)
 
 
 def _uniform(key, n, p):
-    return Scenario("uniform", uniform_cost(n))
+    return Scenario("uniform",
+                    uniform_cost(n, bandwidth=float(p.get("bw",
+                                                          float("inf")))))
 
 
 def _pareto(key, n, p):
     return Scenario("pareto-stragglers",
-                    pareto_cost(key, n, alpha=float(p.get("alpha", 1.2))))
+                    pareto_cost(key, n, alpha=float(p.get("alpha", 1.2)),
+                                bandwidth=float(p.get("bw",
+                                                      float("inf")))))
 
 
 def _dropout(key, n, p):

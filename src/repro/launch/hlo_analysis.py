@@ -21,6 +21,12 @@ DATA-axis param-shard all-reduce per round" while its model-axis solve
 broadcasts ride in the same loop.  ``max_array_bytes`` reports the
 largest single (non-tuple) buffer in the partitioned module — the
 per-device memory claim (no d×d curvature buffer) is asserted on it.
+
+Each collective record also carries ``operand_dtypes`` (parsed from the
+operand definitions) and per-collective ``operand_bytes``, so payload
+compression is assertable per collective: the int8-compressed engine's
+in-loop param psum must show an ``s8`` operand at ≥ 3.5× fewer bytes
+than the uncompressed build's ``f32`` one.
 """
 
 from __future__ import annotations
@@ -153,6 +159,7 @@ class Instr:
     operands: list[str]
     line: str
     tuple_result: bool = False
+    result_dtypes: tuple[str, ...] = ()
 
 
 @dataclass
@@ -164,6 +171,7 @@ class CollectiveRecord:
     multiplier: int
     count: int = 1
     replica_groups: tuple | None = None
+    operand_dtypes: tuple[str, ...] = ()
 
     @property
     def total_bytes(self) -> int:
@@ -196,7 +204,10 @@ def parse_module(text: str):
         instrs[name] = Instr(name=name, comp=current, opcode=opcode,
                              result_bytes=shape_bytes(rtype),
                              operands=ops, line=line.strip(),
-                             tuple_result=rtype.strip().startswith("("))
+                             tuple_result=rtype.strip().startswith("("),
+                             result_dtypes=tuple(
+                                 dt for dt, _ in _SHAPE_RE.findall(rtype)
+                                 if dt in DTYPE_BYTES))
         comp_instrs.setdefault(current, []).append(name)
     return instrs, comp_instrs
 
@@ -270,13 +281,18 @@ def collect_collectives(text: str, default_trip: int = 1):
             continue
         operand_bytes = sum(instrs[o].result_bytes for o in ins.operands
                             if o in instrs)
+        operand_dtypes = tuple(
+            dt for o in ins.operands if o in instrs
+            for dt in instrs[o].result_dtypes)
         if operand_bytes == 0:
             operand_bytes = ins.result_bytes
+            operand_dtypes = ins.result_dtypes
         records.append(CollectiveRecord(
             kind=base, comp=ins.comp, operand_bytes=operand_bytes,
             result_bytes=ins.result_bytes,
             multiplier=mult.get(ins.comp, 1),
-            replica_groups=parse_replica_groups(ins.line)))
+            replica_groups=parse_replica_groups(ins.line),
+            operand_dtypes=operand_dtypes))
     return records
 
 
@@ -324,6 +340,7 @@ def module_report(text: str, default_trip: int = 1) -> dict:
         "collectives": summarize_collectives(records),
         "records": [
             {"kind": r.kind, "operand_bytes": r.operand_bytes,
-             "multiplier": r.multiplier, "comp": r.comp}
+             "multiplier": r.multiplier, "comp": r.comp,
+             "operand_dtypes": list(r.operand_dtypes)}
             for r in sorted(records, key=lambda r: -r.total_bytes)],
     }

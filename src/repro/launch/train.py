@@ -90,6 +90,11 @@ def run(argv=None):
     ap.add_argument("--quorum-tau", type=int, default=1,
                     help="per-region on-time coverage floor for "
                          "--quorum (0 = full participating coverage)")
+    ap.add_argument("--compression", default="",
+                    choices=["", "int8", "bf16"],
+                    help="lossy uplink compression of the per-worker "
+                         "gradients before the aggregate (RANL only; "
+                         "empty = exact f32 wire)")
     ap.add_argument("--keep-prob", type=float, default=0.7)
     ap.add_argument("--mu", type=float, default=1e-4)
     ap.add_argument("--lr", type=float, default=1.0)
@@ -111,6 +116,9 @@ def run(argv=None):
     if (args.scenario or args.controller) and args.optimizer != "ranl":
         raise SystemExit("--scenario/--controller drive the RANL "
                          "region-mask loop; rerun with --optimizer ranl")
+    if args.compression and args.optimizer != "ranl":
+        raise SystemExit("--compression shapes the RANL uplink; rerun "
+                         "with --optimizer ranl")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -148,7 +156,8 @@ def run(argv=None):
     if args.optimizer == "ranl":
         rcfg = RanlLLMConfig(num_workers=args.workers,
                              keep_prob=args.keep_prob, mu=args.mu,
-                             lr=args.lr)
+                             lr=args.lr,
+                             compression=args.compression or None)
         state = init_state(params, loss_fn, batch0, rcfg, ko, mesh=mesh)
         step_fn = jax.jit(partial(train_step, loss_fn=loss_fn, cfg=rcfg,
                                   mesh=mesh))

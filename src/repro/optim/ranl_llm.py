@@ -51,6 +51,19 @@ class RanlLLMConfig:
     # int8 gradient memory: per-(worker, region-row) absmax-scaled int8
     # for C — 2x below bf16; RANL's dominant state cost.
     memory_int8: bool = False
+    # lossy uplink compression of the per-worker gradients before the
+    # aggregate (None | "int8" | "bf16") — the deep-net face of
+    # ``core.compression``; the region top-k sparsifier has no LLM form
+    # (regions here are whole layers, pruned by the mask already).
+    compression: str | None = None
+
+    def __post_init__(self):
+        if self.compression not in (None, "int8", "bf16"):
+            raise ValueError(
+                f"unknown compression {self.compression!r} on the LLM "
+                f"path (expected None, 'int8' or 'bf16' — 'topk:k' only "
+                f"exists on the convex engines, where regions are "
+                f"coordinate blocks rather than layers)")
 
     @property
     def policy(self) -> PolicyConfig:
@@ -338,6 +351,14 @@ def train_step(params, state, batch, rng, *, loss_fn, cfg: RanlLLMConfig,
     is_mem_leaf = lambda x: not isinstance(x, dict) or "q" in x
     c_old = jax.tree_util.tree_leaves(state["memory"], is_leaf=is_mem_leaf)
     for Gl, ml, Cl in zip(leaves, lmasks, c_old):
+        if cfg.compression == "int8":
+            # lossy uplink: per-(worker, region-row) absmax int8
+            # round-trip — what the server decodes from the wire (the
+            # exact local gradient still refreshes nothing; memory C is
+            # seeded from the decoded value the server actually saw)
+            Gl = dequantize_memory(quantize_memory(Gl)).astype(Gl.dtype)
+        elif cfg.compression == "bf16":
+            Gl = Gl.astype(jnp.bfloat16).astype(Gl.dtype)
         Cl_arr = _decode_memory(Cl, cfg, Gl.dtype)
         g, c = masked_aggregate(Gl, ml, Cl_arr)
         g_leaves.append(g)

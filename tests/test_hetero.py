@@ -46,12 +46,16 @@ def test_uniform_cost_times_are_work():
     t = worker_times(cost, work, 3)
     np.testing.assert_allclose(np.asarray(t), np.asarray(work))
     assert float(t.max()) == 30.0
-    # idle workers cost nothing even with per-round overhead
+    # idle workers cost nothing even with per-round overhead; bandwidth
+    # divides uplink BYTES (default wire model: 4 bytes per masked float)
     cost_oh = CostModel(compute_rate=jnp.ones(4), bandwidth=jnp.ones(4),
                         overhead=7.0)
     t2 = np.asarray(worker_times(cost_oh, work, 0))
     assert t2[0] == 0.0
-    np.testing.assert_allclose(t2[1:], 7.0 + 2 * np.asarray(work)[1:])
+    np.testing.assert_allclose(t2[1:], 7.0 + 5 * np.asarray(work)[1:])
+    # explicit uplink_bytes (a compressed wire) override the default
+    t3 = np.asarray(worker_times(cost_oh, work, 0, work))
+    np.testing.assert_allclose(t3[1:], 7.0 + 2 * np.asarray(work)[1:])
 
 
 def test_pareto_cost_is_heavy_tailed_and_bounded():
