@@ -7,7 +7,7 @@ The supported engine surface is ``repro.run`` / ``repro.lower`` with a
 ...) import as before.
 """
 
-from .api import ENGINES, lower, run  # noqa: F401
+from .api import ENGINES, lower, run, trace  # noqa: F401
 from .core.options import (  # noqa: F401
     EngineDeprecationWarning,
     QuorumSpec,

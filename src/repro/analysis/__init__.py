@@ -1,0 +1,33 @@
+"""Static verification: declarative contracts, jaxpr + HLO auditors, lint.
+
+The paper's efficiency claims — one param-sized aggregation per round, no
+device materializing a d×d curvature buffer, compressed uplinks — are
+statically checkable artifacts here, the same way ``BENCH_engine.json``
+pins performance:
+
+- ``contracts``    declarative ``CommContract`` / ``MemoryContract``
+                   schema + ``engine_contract`` (the per-engine expected
+                   contract) + the ``CONTRACTS.json`` registry
+- ``jaxpr_audit``  pre-compile auditor over closed jaxprs: collective
+                   inventory, PRNG key-reuse, f64/weak-type promotion
+                   leaks, host-sync hazards
+- ``hlo_audit``    post-compile ``verify_contract(lowered, contract)``
+                   on partitioned HLO (built on ``launch.hlo_analysis``)
+- ``lint``         AST-based repo lint (``python -m repro.analysis.lint``)
+- ``audit``        CLI (``python -m repro.analysis.audit``) lowering all
+                   five engines across option combos on an 8-emulated-
+                   device mesh and diffing against ``CONTRACTS.json``
+"""
+
+from .contracts import (  # noqa: F401
+    CollectiveBudget,
+    CommContract,
+    MemoryContract,
+    contract_key,
+    engine_contract,
+    load_registry,
+    registry_path,
+    save_registry,
+)
+from .hlo_audit import ContractReport, verify_contract  # noqa: F401
+from .jaxpr_audit import JaxprAuditReport, audit_fn, audit_jaxpr  # noqa: F401

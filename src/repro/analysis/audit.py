@@ -1,0 +1,237 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""``python -m repro.analysis.audit`` — the full static-verification pass.
+
+The two lines above must run before any jax import (jax locks the device
+count at first init): the audit lowers the sharded engines on an
+8-emulated-device CPU mesh, exactly like CI.
+
+For every engine × option combination in the matrix (all five engines
+across {compression ∈ {none, int8}} × {quorum on/off} × {overlap on/off
+where the engine supports it} + the low-rank ``hessian_rank`` variants),
+the audit:
+
+1. re-derives the expected contract from code
+   (:func:`repro.analysis.contracts.engine_contract`) and traces the full
+   program to a jaxpr (``repro.trace``) whose collective signature and
+   hazard counters come from :func:`repro.analysis.jaxpr_audit.audit_jaxpr`;
+2. diffs that derived entry against the committed ``CONTRACTS.json`` —
+   any mismatch is contract DRIFT and fails (run with ``--update`` after
+   an intentional engine change, then commit the new registry);
+3. fails outright on jaxpr hazards (PRNG key reuse, f64 leaks,
+   host-sync callbacks) in any engine;
+4. for the sharded engines, lowers + compiles the partitioned module and
+   verifies it against the COMMITTED contract with
+   :func:`repro.analysis.hlo_audit.verify_contract` (one param-sized
+   psum per round, axis attribution, small-payload ceiling, no in-loop
+   gathers, peak-buffer window).
+
+Exit status 0 = every combination verified; 1 = any drift/violation.
+"""
+
+import argparse
+import json
+import sys
+
+# audit problem: small enough to compile 30 configs in seconds, large
+# enough that every payload window is distinguishable from the small-
+# payload ceiling
+DIM = 64
+NUM_WORKERS = 8
+NUM_REGIONS = 8
+ROUNDS = 3
+NS_ITERS = 8
+BATCH_SEEDS = 4
+
+MESH_1D = ((8,), ("data",))
+MESH_2D = ((2, 2), ("data", "model"))
+
+
+def _configs():
+    """Yield (engine, options, mesh_spec) over the audit matrix."""
+    from ..core.options import RanlOptions
+    base = RanlOptions(num_rounds=ROUNDS, num_regions=NUM_REGIONS,
+                       ns_iters=NS_ITERS)
+    comps = (None, "int8")
+    quorums = (None, 0.75)
+    for engine, mesh_spec in (("sharded", MESH_1D), ("sharded2d", MESH_2D)):
+        for comp in comps:
+            for q in quorums:
+                for ov in (False, True):
+                    yield (engine,
+                           base.merged(compression=comp, quorum=q,
+                                       overlap=ov),
+                           mesh_spec)
+    for engine in ("scan", "batch", "reference"):
+        for comp in comps:
+            for q in quorums:
+                yield engine, base.merged(compression=comp, quorum=q), None
+    yield "scan", base.merged(hessian_rank=4), None
+    yield "sharded", base.merged(hessian_rank=4), MESH_1D
+
+
+def _make_mesh(mesh_spec):
+    import jax
+    import numpy as np
+    shape, axes = mesh_spec
+    n = int(np.prod(shape))
+    devs = np.array(jax.devices()[:n]).reshape(shape)
+    from jax.sharding import Mesh
+    return Mesh(devs, axes)
+
+
+def _jsonify(entry: dict) -> dict:
+    """Canonical JSON form (tuples -> lists) for registry diffing."""
+    return json.loads(json.dumps(entry))
+
+
+def _diff_lines(old: dict, new: dict, prefix="") -> list[str]:
+    lines = []
+    for k in sorted(set(old) | set(new)):
+        a, b = old.get(k), new.get(k)
+        if a == b:
+            continue
+        if isinstance(a, dict) and isinstance(b, dict):
+            lines += _diff_lines(a, b, prefix=f"{prefix}{k}.")
+        else:
+            lines.append(f"  {prefix}{k}: committed={a!r} derived={b!r}")
+    return lines
+
+
+def audit_one(engine, opts, mesh_spec, registry, *, update: bool):
+    """-> (key, derived_entry, failures: list[str])."""
+    import jax
+
+    import repro
+    from .contracts import (
+        JaxprContract,
+        contract_from_json,
+        contract_key,
+        contract_to_json,
+        engine_contract,
+    )
+    from .hlo_audit import verify_contract
+    from .jaxpr_audit import audit_jaxpr
+
+    key = contract_key(engine, opts)
+    shape, axes = mesh_spec if mesh_spec else ((), ())
+    mesh = _make_mesh(mesh_spec) if mesh_spec else None
+    failures: list[str] = []
+
+    prob = _audit_problem()
+    rng = jax.random.PRNGKey(0)
+    prng = (jax.random.split(rng, BATCH_SEEDS) if engine == "batch"
+            else rng)
+
+    comm, mem = engine_contract(engine, opts, dim=DIM,
+                                num_workers=NUM_WORKERS,
+                                mesh_shape=shape, mesh_axes=axes)
+
+    traced = repro.trace(prob, prng, engine=engine, options=opts,
+                         mesh=mesh)
+    jrep = audit_jaxpr(traced)
+    for kind, items in (("key_reuse", jrep.key_reuse),
+                        ("f64_leak", jrep.f64_leaks),
+                        ("host_sync", jrep.host_syncs)):
+        for item in items:
+            failures.append(f"jaxpr {kind}: {item}")
+    jc = JaxprContract(collectives=tuple(sorted(jrep.signature().items())))
+    derived = contract_to_json(comm, mem, jc)
+
+    committed = registry.get(key)
+    if committed is None:
+        if not update:
+            failures.append("no committed contract — run with --update "
+                            "and commit CONTRACTS.json")
+        committed = derived
+    else:
+        drift = _diff_lines(_jsonify(committed), _jsonify(derived))
+        if drift and not update:
+            failures.append("contract drift vs CONTRACTS.json "
+                            "(--update after an intentional change):")
+            failures += drift
+
+    # verify the compiled module against the COMMITTED contract (the
+    # registry is the source of truth; code drift was flagged above)
+    if engine in ("sharded", "sharded2d"):
+        c_comm, c_mem, _ = contract_from_json(
+            _jsonify(derived if update else committed))
+        lowered = repro.lower(prob, prng, engine=engine, options=opts,
+                              mesh=mesh)
+        rep = verify_contract(lowered, c_comm, c_mem)
+        failures += [f"hlo: {v}" for v in rep.violations]
+
+    return key, derived, failures
+
+
+_PROBLEM = None
+
+
+def _audit_problem():
+    global _PROBLEM
+    if _PROBLEM is None:
+        import jax
+
+        from ..core import make_quadratic
+        _PROBLEM = make_quadratic(jax.random.PRNGKey(7), dim=DIM,
+                                  num_workers=NUM_WORKERS,
+                                  num_regions=NUM_REGIONS)
+    return _PROBLEM
+
+
+def main(argv=None) -> int:
+    from .contracts import load_registry, registry_path, save_registry
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.audit",
+        description="verify every engine's comm/memory contract")
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite CONTRACTS.json from the derived "
+                         "contracts instead of failing on drift")
+    ap.add_argument("--engine", nargs="*", default=None,
+                    help="restrict to these engines")
+    ap.add_argument("--registry", default=None,
+                    help="path to CONTRACTS.json (default: repo root)")
+    args = ap.parse_args(argv)
+
+    path = args.registry or registry_path()
+    try:
+        registry = load_registry(path)
+    except FileNotFoundError:
+        registry = {}
+
+    import jax
+    if len(jax.devices()) < 8:
+        print(f"audit needs 8 devices, found {len(jax.devices())} — "
+              f"set XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+              f"before python starts", file=sys.stderr)
+        return 1
+
+    new_registry = {}
+    n_fail = 0
+    for engine, opts, mesh_spec in _configs():
+        if args.engine and engine not in args.engine:
+            continue
+        key, derived, failures = audit_one(engine, opts, mesh_spec,
+                                           registry, update=args.update)
+        new_registry[key] = _jsonify(derived)
+        status = "OK  " if not failures else "FAIL"
+        n_fail += bool(failures)
+        print(f"[{status}] {key}", flush=True)
+        for f in failures:
+            print(f"       {f}")
+
+    if args.update:
+        save_registry(new_registry, path)
+        print(f"wrote {len(new_registry)} contracts to {path}")
+        return 0
+    if n_fail:
+        print(f"{n_fail} combination(s) failed", file=sys.stderr)
+        return 1
+    print(f"all {len(new_registry)} combinations verified against {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

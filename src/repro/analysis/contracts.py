@@ -1,0 +1,279 @@
+"""Declarative communication/memory contracts for the RANL engines.
+
+A ``CommContract`` states, per engine × option combination, what the
+compiled round loop is ALLOWED to do on the wire: how many param-sized
+collectives per round, over which mesh axis, with what payload dtype and
+byte window, what the auxiliary (e.g. model-axis solve broadcast)
+budgets are, and how large any other in-loop payload may be.  A
+``MemoryContract`` bounds the largest single per-device buffer.  The
+schema is the declarative form of the hand-rolled HLO assertions the
+multidevice/quorum/compression test files used to copy-paste.
+
+``engine_contract`` derives the expected contract for any engine ×
+``RanlOptions`` combination from first principles (payload windows from
+dim/mesh/compression kind, multipliers from ``num_rounds``/``ns_iters``)
+— these are the per-engine contract annotations.  ``CONTRACTS.json`` at
+the repo root commits one entry per audited combination; the
+``repro.analysis.audit`` CLI re-derives contracts from code, diffs them
+against the registry (contract drift fails), and verifies freshly
+lowered HLO + jaxprs against the committed entries (see the README's
+"Static verification" section for the update workflow).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import asdict, dataclass, replace
+
+#: Extra in-loop bytes an XLA fusion may attribute to the param psum's
+#: operand (e.g. the overlap engine's coverage-count psum riding along).
+PARAM_SLACK = 256
+
+#: Per-region quantization scales etc. riding a compressed payload.
+COMPRESSED_SLACK = 64
+
+#: Block slack over the (d/n_model, d) panel in the 2-D memory claim.
+MEMORY_SLACK = 64 * 1024
+
+GATHER_KINDS = ("all-gather", "all-to-all", "collective-permute",
+                "ragged-all-to-all")
+
+
+@dataclass(frozen=True)
+class CollectiveBudget:
+    """Budget for one class of expected in-loop collectives.
+
+    ``axis``: mesh axis name the replica groups must reduce over, or
+    ``"replicated"`` for degenerate (size-1) axes where the collective
+    moves no data.  ``count``: exact number of matching collectives
+    (``None`` = one or more).  ``min_bytes``/``max_bytes``: per-collective
+    operand payload window.  ``dtypes``: dtype(s) of which at least one
+    must appear among the operand dtypes (``()`` = unchecked).
+    ``multipliers``: allowed loop trip-count multipliers (``()`` = the
+    contract's ``rounds``).
+    """
+    axis: str
+    kind: str = "all-reduce"
+    count: int | None = 1
+    min_bytes: int = 0
+    max_bytes: int = 1 << 62
+    dtypes: tuple[str, ...] = ()
+    multipliers: tuple[int, ...] = ()
+
+
+@dataclass(frozen=True)
+class CommContract:
+    """What the compiled program may put on the wire.
+
+    ``budgets`` are the expected "big" in-loop collectives (matched by
+    axis + payload window, greedily in order).  Any other in-loop
+    collective must be a reduction of at most ``small_max_bytes``.
+    In-loop gather-like collectives (``GATHER_KINDS``) are forbidden
+    unless ``allow_inloop_gather``.  Out-of-loop collectives (multiplier
+    1 — the init phase's psums and the blocked factorization's
+    all-gathers) are unconstrained unless ``in_loop_only=False``, in
+    which case EVERY collective is checked.  ``require_classified``
+    additionally demands that every in-loop collective's replica groups
+    attribute to a declared mesh axis (or "replicated").
+    """
+    mesh_axes: tuple[str, ...] = ()
+    mesh_shape: tuple[int, ...] = ()
+    rounds: int = 1
+    budgets: tuple[CollectiveBudget, ...] = ()
+    small_max_bytes: int = PARAM_SLACK
+    allow_inloop_gather: bool = False
+    in_loop_only: bool = True
+    require_classified: bool = True
+    aggregate_bytes: bool = False
+
+
+@dataclass(frozen=True)
+class MemoryContract:
+    """Peak per-device buffer bound: ``max_array_bytes`` of the
+    partitioned module must land inside the window."""
+    max_array_bytes: int
+    min_array_bytes: int = 0
+
+
+@dataclass(frozen=True)
+class JaxprContract:
+    """Pre-compile (jaxpr) expectations: the committed collective
+    signature (``"prim|axes|dtype[shape]|xMULT" -> count``) plus the
+    always-zero hazard counters."""
+    collectives: tuple[tuple[str, int], ...] = ()
+    key_reuse: int = 0
+    f64_leaks: int = 0
+    host_syncs: int = 0
+
+
+# --------------------------------------------------------------------------
+# JSON round-trip
+# --------------------------------------------------------------------------
+
+def contract_to_json(comm: CommContract, memory: MemoryContract | None,
+                     jaxpr: JaxprContract | None = None) -> dict:
+    out = {"comm": asdict(comm)}
+    out["comm"]["budgets"] = [asdict(b) for b in comm.budgets]
+    out["memory"] = None if memory is None else asdict(memory)
+    if jaxpr is not None:
+        j = asdict(jaxpr)
+        j["collectives"] = dict(jaxpr.collectives)
+        out["jaxpr"] = j
+    return out
+
+
+def _tup(x):
+    return tuple(x) if isinstance(x, (list, tuple)) else x
+
+
+def contract_from_json(entry: dict):
+    c = dict(entry["comm"])
+    c["budgets"] = tuple(
+        CollectiveBudget(**{k: _tup(v) for k, v in b.items()})
+        for b in c["budgets"])
+    for k in ("mesh_axes", "mesh_shape"):
+        c[k] = tuple(c[k])
+    comm = CommContract(**c)
+    memory = (None if entry.get("memory") is None
+              else MemoryContract(**entry["memory"]))
+    jaxpr = None
+    if entry.get("jaxpr") is not None:
+        j = dict(entry["jaxpr"])
+        j["collectives"] = tuple(sorted(j["collectives"].items()))
+        jaxpr = JaxprContract(**j)
+    return comm, memory, jaxpr
+
+
+def registry_path(root: str | None = None) -> str:
+    """``CONTRACTS.json`` lives at the repo root, next to
+    ``BENCH_engine.json`` (same commit-the-expectation workflow)."""
+    if root is None:
+        root = os.environ.get("REPRO_CONTRACTS_DIR") or os.getcwd()
+    return os.path.join(root, "CONTRACTS.json")
+
+
+def load_registry(path: str | None = None) -> dict:
+    path = path or registry_path()
+    with open(path) as f:
+        return json.load(f)
+
+
+def save_registry(registry: dict, path: str | None = None) -> str:
+    path = path or registry_path()
+    with open(path, "w") as f:
+        json.dump(registry, f, indent=1, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def contract_key(engine: str, opts) -> str:
+    """Canonical registry key for an engine × options combination."""
+    comp = opts.compression_spec()
+    return "|".join([
+        engine,
+        f"comp={comp.kind if comp is not None else 'none'}",
+        f"quorum={'on' if opts.quorum_spec() is not None else 'off'}",
+        f"overlap={'on' if opts.overlap else 'off'}",
+        f"rank={opts.hessian_rank if opts.hessian_rank else 'none'}",
+    ])
+
+
+# --------------------------------------------------------------------------
+# expected contracts per engine (the contract annotations)
+# --------------------------------------------------------------------------
+
+def _payload_window(comp, nbytes_f32: int):
+    """(min, max, required dtypes) of a (possibly compressed) payload of
+    ``nbytes_f32`` uncompressed f32 bytes."""
+    if comp is None:
+        return nbytes_f32, nbytes_f32 + PARAM_SLACK, ("f32",)
+    if comp.kind == "int8":
+        n = nbytes_f32 // 4
+        return n, n + COMPRESSED_SLACK + PARAM_SLACK, ("s8",)
+    if comp.kind == "bf16":
+        n = nbytes_f32 // 2
+        return n, n + PARAM_SLACK, ("bf16",)
+    # topk keeps a dense f32 wire tensor (sparsity is in the values)
+    return nbytes_f32, nbytes_f32 + PARAM_SLACK, ("f32",)
+
+
+def engine_contract(engine: str, opts, *, dim: int, num_workers: int,
+                    mesh_shape: tuple[int, ...] = (),
+                    mesh_axes: tuple[str, ...] = (),
+                    data_axis: str = "data", model_axis: str = "model"):
+    """Expected (CommContract, MemoryContract | None) for an engine run.
+
+    The single-device engines (scan / batch / reference) promise ZERO
+    collectives.  The 1-D sharded engine promises exactly one param-sized
+    data-axis psum per round (compression shrinks its window and pins its
+    dtype; quorum and overlap change nothing — the late fold and the
+    pipelined count psum ride the same reduction).  The 2-D engine
+    promises one param-SHARD-sized data-axis psum per round, model-axis
+    solve broadcasts of at most d floats (round loop) or two panels (the
+    Newton–Schulz projection loop), no in-loop gathers, and — dense
+    curvature — a peak per-device buffer of one (d/n_model, d) panel.
+
+    A mesh axis of extent 1 moves no data, so its budgets use the
+    explicit ``axis="replicated"`` attribution (see
+    ``hlo_analysis.collective_axes``); the 1-device mesh path is
+    regression-tested on this.
+    """
+    T = int(opts.num_rounds)
+    comp = opts.compression_spec()
+    if engine in ("scan", "batch", "reference"):
+        comm = CommContract(mesh_axes=(), mesh_shape=(), rounds=T,
+                            budgets=(), small_max_bytes=0,
+                            in_loop_only=False, require_classified=False)
+        return comm, None
+    if engine == "sharded":
+        (n_data,) = mesh_shape
+        axis = mesh_axes[0] if n_data > 1 else "replicated"
+        lo, hi, dts = _payload_window(comp, dim * 4)
+        comm = CommContract(
+            mesh_axes=mesh_axes, mesh_shape=mesh_shape, rounds=T,
+            budgets=(CollectiveBudget(axis=axis, count=1, min_bytes=lo,
+                                      max_bytes=hi, dtypes=dts,
+                                      multipliers=(T,)),),
+            small_max_bytes=PARAM_SLACK)
+        return comm, None
+    if engine == "sharded2d":
+        n_data = mesh_shape[mesh_axes.index(data_axis)]
+        n_model = mesh_shape[mesh_axes.index(model_axis)]
+        pshard = dim // n_model
+        panel_bytes = pshard * dim * 4
+        d_axis = data_axis if n_data > 1 else "replicated"
+        m_axis = model_axis if n_model > 1 else "replicated"
+        lo, hi, dts = _payload_window(comp, pshard * 4)
+        ns = opts.ns_iters if opts.ns_iters != "auto" else 60
+        budgets = [CollectiveBudget(axis=d_axis, count=1, min_bytes=lo,
+                                    max_bytes=hi, dtypes=dts,
+                                    multipliers=(T,))]
+        if opts.curvature == "dense":
+            # blocked forward/backward solve: model-axis psums of at most
+            # the full d-vector, once per round
+            budgets.append(CollectiveBudget(
+                axis=m_axis, count=None, min_bytes=0, max_bytes=dim * 4,
+                multipliers=(T,)))
+            # Newton-Schulz projection loop: at most two row panels
+            budgets.append(CollectiveBudget(
+                axis=m_axis, count=None, min_bytes=0,
+                max_bytes=2 * panel_bytes, multipliers=(int(ns),)))
+        memory = (MemoryContract(max_array_bytes=panel_bytes + MEMORY_SLACK,
+                                 min_array_bytes=panel_bytes)
+                  if opts.curvature == "dense" else None)
+        comm = CommContract(
+            mesh_axes=mesh_axes, mesh_shape=mesh_shape, rounds=T,
+            budgets=tuple(budgets), small_max_bytes=PARAM_SLACK)
+        return comm, memory
+    raise ValueError(f"unknown engine {engine!r}")
+
+
+def with_rounds(comm: CommContract, rounds: int) -> CommContract:
+    """Same contract re-pinned to a different round count (budgets whose
+    multiplier was the old round count follow it)."""
+    budgets = tuple(
+        replace(b, multipliers=tuple(rounds if m == comm.rounds else m
+                                     for m in b.multipliers))
+        for b in comm.budgets)
+    return replace(comm, rounds=rounds, budgets=budgets)

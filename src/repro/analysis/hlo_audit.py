@@ -1,0 +1,165 @@
+"""Post-compile contract verification on partitioned HLO.
+
+``verify_contract(lowered, comm, memory)`` is the one call the engine
+test files' hand-rolled one-psum-per-round proofs collapse onto: it
+inventories the module's collectives with loop multipliers
+(``launch.hlo_analysis``), attributes each to a mesh axis explicitly
+(``collective_axes`` — size-1 axes and group-less single-replica modules
+label ``"replicated"`` instead of silently matching anything), matches
+the expected ``CollectiveBudget``s, bounds everything else by the small
+budget, forbids in-loop gathers, and checks the peak per-device buffer
+window.  The report is JSON-serializable so subprocess test legs can
+print it and the parent just asserts ``report["ok"]``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from ..launch.hlo_analysis import (
+    collect_collectives,
+    collective_axes,
+    max_array_bytes,
+)
+from .contracts import GATHER_KINDS, CommContract, MemoryContract
+
+
+@dataclass
+class ContractReport:
+    ok: bool = True
+    violations: list[str] = field(default_factory=list)
+    facts: dict = field(default_factory=dict)
+
+    def fail(self, msg: str):
+        self.ok = False
+        self.violations.append(msg)
+
+    def to_json(self) -> dict:
+        return {"ok": self.ok, "violations": self.violations,
+                "facts": self.facts}
+
+
+def report_from_json(d: dict) -> ContractReport:
+    return ContractReport(ok=d["ok"], violations=list(d["violations"]),
+                          facts=dict(d["facts"]))
+
+
+def _hlo_text(lowered) -> str:
+    if isinstance(lowered, str):
+        return lowered
+    if hasattr(lowered, "compile"):      # jax.stages.Lowered: compile first —
+        return lowered.compile().as_text()   # its as_text() is StableHLO, not HLO
+    if hasattr(lowered, "as_text"):      # jax.stages.Compiled
+        return lowered.as_text()
+    raise TypeError(f"cannot extract HLO text from {type(lowered)!r}")
+
+
+def _record_axes(r, comm: CommContract):
+    if not comm.mesh_axes:
+        return ()
+    return r.axes(comm.mesh_shape, comm.mesh_axes)
+
+
+def verify_contract(lowered, comm: CommContract,
+                    memory: MemoryContract | None = None) -> ContractReport:
+    """Check a compiled partitioned module against its contract.
+
+    ``lowered`` may be HLO text, a ``jax.stages.Lowered``, or a
+    ``jax.stages.Compiled``.  Budgets are matched greedily in contract
+    order against the in-loop collectives (``multiplier > 1``; with
+    ``comm.in_loop_only=False`` every collective is in scope).  Facts
+    carried back: per-budget matched payloads/dtypes/multipliers, the
+    small-payload ceiling observed, out-of-loop byte totals, and the
+    module's ``max_array_bytes``.
+    """
+    text = _hlo_text(lowered)
+    rep = ContractReport()
+    records = collect_collectives(text, default_trip=comm.rounds)
+    scoped = [(not comm.in_loop_only) or r.multiplier > 1
+              for r in records]
+    in_scope = [r for r, s in zip(records, scoped) if s]
+    out_scope = [r for r, s in zip(records, scoped) if not s]
+
+    budget_facts = []
+    matched: set[int] = set()
+    for bi, b in enumerate(comm.budgets):
+        mults = b.multipliers or (comm.rounds,)
+
+        def _matches(ri, r, with_bytes=True):
+            if ri in matched or r.kind != b.kind:
+                return False
+            if comm.mesh_axes and b.axis not in _record_axes(r, comm):
+                return False
+            if r.multiplier not in mults:
+                return False
+            if b.dtypes and not any(dt in r.operand_dtypes
+                                    for dt in b.dtypes):
+                return False
+            return ((not with_bytes)
+                    or b.min_bytes <= r.operand_bytes <= b.max_bytes)
+
+        if comm.aggregate_bytes and b.count is None:
+            # window applies to the TOTAL traffic (payload x multiplier)
+            # of matching collectives — e.g. a grad-sized reduction XLA
+            # may split into several partial all-reduces
+            hits = [ri for ri, r in enumerate(in_scope)
+                    if _matches(ri, r, with_bytes=False)]
+            total = sum(in_scope[ri].total_bytes for ri in hits)
+            if not (b.min_bytes <= total <= b.max_bytes):
+                rep.fail(f"budget[{bi}] {b.axis}/{b.kind}: aggregate "
+                         f"payload {total}B outside "
+                         f"[{b.min_bytes}, {b.max_bytes}]")
+        else:
+            hits = [ri for ri, r in enumerate(in_scope)
+                    if _matches(ri, r)]
+            if b.count is not None and len(hits) != b.count:
+                rep.fail(
+                    f"budget[{bi}] {b.axis}/{b.kind}: expected {b.count} "
+                    f"in-loop collective(s) in "
+                    f"[{b.min_bytes}, {b.max_bytes}]B of {b.dtypes or '*'} "
+                    f"x{mults}, found {len(hits)}")
+        matched.update(hits)
+        budget_facts.append({
+            "axis": b.axis, "kind": b.kind,
+            "matched": [
+                {"operand_bytes": in_scope[ri].operand_bytes,
+                 "multiplier": in_scope[ri].multiplier,
+                 "operand_dtypes": list(in_scope[ri].operand_dtypes)}
+                for ri in hits]})
+
+    small_seen = 0
+    for ri, r in enumerate(in_scope):
+        if ri in matched:
+            continue
+        if r.kind in GATHER_KINDS:
+            if not comm.allow_inloop_gather:
+                rep.fail(f"in-loop {r.kind} ({r.operand_bytes}B "
+                         f"x{r.multiplier}) — gather-like collectives "
+                         f"are forbidden in the round loop")
+            continue
+        if r.operand_bytes > comm.small_max_bytes:
+            rep.fail(f"unbudgeted in-loop {r.kind} of {r.operand_bytes}B "
+                     f"x{r.multiplier} exceeds small-payload ceiling "
+                     f"{comm.small_max_bytes}B")
+        small_seen = max(small_seen, r.operand_bytes)
+        if comm.require_classified and comm.mesh_axes:
+            if not _record_axes(r, comm):
+                rep.fail(f"in-loop {r.kind} ({r.operand_bytes}B) matches "
+                         f"no declared mesh axis "
+                         f"{comm.mesh_axes} and is not replicated")
+
+    mab = max_array_bytes(text)
+    if memory is not None:
+        if not (memory.min_array_bytes <= mab <= memory.max_array_bytes):
+            rep.fail(f"max_array_bytes {mab} outside "
+                     f"[{memory.min_array_bytes}, "
+                     f"{memory.max_array_bytes}]")
+
+    rep.facts = {
+        "budgets": budget_facts,
+        "n_in_scope": len(in_scope),
+        "small_max_seen": small_seen,
+        "out_of_loop_bytes": sum(r.total_bytes for r in out_scope),
+        "max_array_bytes": mab,
+    }
+    return rep

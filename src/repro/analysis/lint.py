@@ -1,0 +1,330 @@
+"""AST-based repo lint: ``python -m repro.analysis.lint [paths...]``.
+
+Four repo-specific rules that generic linters cannot express — each one
+a bug class this codebase has actually had to defend against:
+
+- **RPL001 host-sync-in-scan-body** — no ``.item()`` / ``float()`` /
+  ``np.asarray`` calls inside a ``lax.scan`` body function: on traced
+  values they either fail at trace time or silently force a host sync.
+- **RPL002 non-frozen-static** — a parameter listed in
+  ``static_argnames`` whose annotation names a non-frozen dataclass:
+  non-frozen means unhashable means a ``jit`` cache error (or worse, a
+  mutable hash), so every jit-static config record must be
+  ``@dataclass(frozen=True)``.
+- **RPL003 eigh-confinement** — ``jnp.linalg.eigh`` may appear only in
+  ``core/hessian.py`` (the ``sym_eigh`` chokepoint): the replicated
+  O(d³) factorization is exactly what the dimension-sharded paths must
+  never reach, and one grep-wide confinement keeps the audit honest.
+- **RPL004 undeclared-mesh-axis** — mesh axis string literals (in
+  ``P(...)``/``PartitionSpec(...)`` specs and ``axis_name``-style
+  parameter defaults) must come from the declared mesh axes
+  ``{"data", "model", "pod"}`` of ``launch.mesh``.
+
+Scope is deliberately conservative (direct calls inside the scan-body
+function itself, annotated static parameters only) so the lint runs
+clean-by-construction on correct code — zero-noise, CI-gating.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import sys
+from dataclasses import dataclass
+
+#: The mesh axis names launch.mesh declares (make_engine_mesh /
+#: make_production_mesh).  Keep in sync with src/repro/launch/mesh.py.
+DECLARED_AXES = frozenset({"data", "model", "pod"})
+
+AXIS_PARAM_NAMES = frozenset({"axis_name", "data_axis", "model_axis"})
+EIGH_ALLOWED_SUFFIX = os.path.join("core", "hessian.py")
+
+
+@dataclass(frozen=True)
+class LintViolation:
+    path: str
+    line: int
+    rule: str
+    message: str
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: {self.rule} {self.message}"
+
+
+def _dotted(node) -> str:
+    """'jnp.linalg.eigh' for an Attribute/Name chain, '' otherwise."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _iter_funcdefs(tree):
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node
+
+
+def _is_dataclass_def(node: ast.ClassDef):
+    """(is_dataclass, frozen) from the decorator list."""
+    for dec in node.decorator_list:
+        target = dec.func if isinstance(dec, ast.Call) else dec
+        name = _dotted(target)
+        if name.split(".")[-1] != "dataclass":
+            continue
+        frozen = False
+        if isinstance(dec, ast.Call):
+            for kw in dec.keywords:
+                if kw.arg == "frozen" and isinstance(kw.value, ast.Constant):
+                    frozen = bool(kw.value.value)
+        return True, frozen
+    return False, False
+
+
+def collect_nonfrozen_dataclasses(trees: dict[str, ast.Module]):
+    """Class names declared ``@dataclass`` without ``frozen=True``,
+    repo-wide (name-based: the repo has no colliding dataclass names)."""
+    nonfrozen = set()
+    for tree in trees.values():
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef):
+                is_dc, frozen = _is_dataclass_def(node)
+                if is_dc and not frozen:
+                    nonfrozen.add(node.name)
+    return nonfrozen
+
+
+def _annotation_names(node):
+    if node is None:
+        return
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            yield sub.id
+        elif isinstance(sub, ast.Constant) and isinstance(sub.value, str):
+            # string annotations: 'QuorumSpec | None'
+            for tok in (sub.value.replace("|", " ").replace("[", " ")
+                        .replace("]", " ").replace(",", " ").split()):
+                yield tok.split(".")[-1]
+
+
+def _static_argnames_value(node, module_tuples):
+    """Resolve a ``static_argnames=`` value to a tuple of strings."""
+    if isinstance(node, ast.Name):
+        return module_tuples.get(node.id, ())
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return tuple(e.value for e in node.elts
+                     if isinstance(e, ast.Constant)
+                     and isinstance(e.value, str))
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return (node.value,)
+    return ()
+
+
+def _module_string_tuples(tree):
+    """Module-level ``NAME = ("a", "b", ...)`` assignments."""
+    out = {}
+    for node in tree.body:
+        if (isinstance(node, ast.Assign) and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)
+                and isinstance(node.value, (ast.Tuple, ast.List))):
+            elts = node.value.elts
+            if elts and all(isinstance(e, ast.Constant)
+                            and isinstance(e.value, str) for e in elts):
+                out[node.targets[0].id] = tuple(e.value for e in elts)
+    return out
+
+
+def _scan_body_names(tree):
+    """Function names passed (possibly via functools.partial) as the
+    first argument of a ``*.scan(...)`` call."""
+    names = set()
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.Call)
+                and isinstance(node.func, ast.Attribute)
+                and node.func.attr == "scan" and node.args):
+            continue
+        first = node.args[0]
+        if (isinstance(first, ast.Call)
+                and _dotted(first.func).split(".")[-1] == "partial"
+                and first.args):
+            first = first.args[0]
+        if isinstance(first, ast.Name):
+            names.add(first.id)
+    return names
+
+
+def _jit_static_functions(tree, module_tuples):
+    """[(fn_name, static_names)] for the repo's jit idioms:
+    ``jax.jit(fn, static_argnames=...)`` and
+    ``functools.partial(jax.jit, static_argnames=...)(fn)``."""
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        fn_node, statics = None, None
+        callee = _dotted(node.func).split(".")[-1]
+        if callee == "jit" and node.args:
+            fn_node = node.args[0]
+            for kw in node.keywords:
+                if kw.arg == "static_argnames":
+                    statics = _static_argnames_value(kw.value,
+                                                     module_tuples)
+        elif (isinstance(node.func, ast.Call)
+              and _dotted(node.func.func).split(".")[-1] == "partial"
+              and node.func.args
+              and _dotted(node.func.args[0]).split(".")[-1] == "jit"
+              and node.args):
+            fn_node = node.args[0]
+            for kw in node.func.keywords:
+                if kw.arg == "static_argnames":
+                    statics = _static_argnames_value(kw.value,
+                                                     module_tuples)
+        if statics and isinstance(fn_node, ast.Name):
+            out.append((fn_node.id, statics))
+    return out
+
+
+def lint_file(path: str, tree: ast.Module,
+              nonfrozen: set[str]) -> list[LintViolation]:
+    violations = []
+    module_tuples = _module_string_tuples(tree)
+    funcdefs: dict[str, list] = {}
+    for fd in _iter_funcdefs(tree):
+        funcdefs.setdefault(fd.name, []).append(fd)
+
+    # RPL001: host syncs inside scan bodies
+    for body_name in _scan_body_names(tree):
+        for fd in funcdefs.get(body_name, ()):
+            for node in ast.walk(fd):
+                if not isinstance(node, ast.Call):
+                    continue
+                dotted = _dotted(node.func)
+                bad = None
+                if dotted == "float":
+                    bad = "float()"
+                elif (isinstance(node.func, ast.Attribute)
+                      and node.func.attr == "item"):
+                    bad = ".item()"
+                elif dotted in ("np.asarray", "numpy.asarray"):
+                    bad = "np.asarray()"
+                if bad:
+                    violations.append(LintViolation(
+                        path, node.lineno, "RPL001",
+                        f"{bad} inside scan body {body_name!r} — host "
+                        f"sync / trace break on traced values"))
+
+    # RPL002: non-frozen dataclasses as jit-static arguments
+    for fn_name, statics in _jit_static_functions(tree, module_tuples):
+        for fd in funcdefs.get(fn_name, ()):
+            all_args = (fd.args.posonlyargs + fd.args.args
+                        + fd.args.kwonlyargs)
+            for arg in all_args:
+                if arg.arg not in statics:
+                    continue
+                hit = next((n for n in _annotation_names(arg.annotation)
+                            if n in nonfrozen), None)
+                if hit:
+                    violations.append(LintViolation(
+                        path, fd.lineno, "RPL002",
+                        f"static argument {arg.arg!r} of {fn_name!r} is "
+                        f"annotated with non-frozen dataclass {hit!r} — "
+                        f"jit-static configs must be frozen/hashable"))
+
+    # RPL003: eigh confinement
+    if not path.endswith(EIGH_ALLOWED_SUFFIX):
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Attribute)
+                    and _dotted(node).endswith("linalg.eigh")):
+                violations.append(LintViolation(
+                    path, node.lineno, "RPL003",
+                    "jnp.linalg.eigh outside core/hessian.py — route "
+                    "through hessian.sym_eigh (the replicated O(d^3) "
+                    "chokepoint the sharded paths must avoid)"))
+
+    # RPL004: mesh axis names
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            callee = _dotted(node.func).split(".")[-1]
+            if callee in ("P", "PartitionSpec"):
+                for arg in node.args:
+                    if (isinstance(arg, ast.Constant)
+                            and isinstance(arg.value, str)
+                            and arg.value not in DECLARED_AXES):
+                        violations.append(LintViolation(
+                            path, arg.lineno, "RPL004",
+                            f"partition spec axis {arg.value!r} is not a "
+                            f"declared mesh axis {sorted(DECLARED_AXES)}"))
+            for kw in node.keywords:
+                if (kw.arg in AXIS_PARAM_NAMES
+                        and isinstance(kw.value, ast.Constant)
+                        and isinstance(kw.value.value, str)
+                        and kw.value.value not in DECLARED_AXES):
+                    violations.append(LintViolation(
+                        path, kw.value.lineno, "RPL004",
+                        f"{kw.arg}={kw.value.value!r} is not a declared "
+                        f"mesh axis {sorted(DECLARED_AXES)}"))
+    for fd in _iter_funcdefs(tree):
+        args = fd.args.args + fd.args.kwonlyargs
+        defaults = (([None] * (len(fd.args.args) - len(fd.args.defaults))
+                     + list(fd.args.defaults))
+                    + list(fd.args.kw_defaults))
+        for arg, default in zip(args, defaults):
+            if (arg.arg in AXIS_PARAM_NAMES
+                    and isinstance(default, ast.Constant)
+                    and isinstance(default.value, str)
+                    and default.value not in DECLARED_AXES):
+                violations.append(LintViolation(
+                    path, arg.lineno, "RPL004",
+                    f"default {arg.arg}={default.value!r} is not a "
+                    f"declared mesh axis {sorted(DECLARED_AXES)}"))
+    return violations
+
+
+def _collect_files(paths):
+    files = []
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            files.append(p)
+        elif os.path.isdir(p):
+            for root, _dirs, names in os.walk(p):
+                files.extend(os.path.join(root, n) for n in sorted(names)
+                             if n.endswith(".py"))
+    return sorted(set(files))
+
+
+def lint_paths(paths) -> list[LintViolation]:
+    files = _collect_files(paths)
+    trees = {}
+    violations = []
+    for f in files:
+        with open(f) as fh:
+            src = fh.read()
+        try:
+            trees[f] = ast.parse(src, filename=f)
+        except SyntaxError as e:
+            violations.append(LintViolation(f, e.lineno or 0, "RPL000",
+                                            f"syntax error: {e.msg}"))
+    nonfrozen = collect_nonfrozen_dataclasses(trees)
+    for f, tree in trees.items():
+        violations.extend(lint_file(f, tree, nonfrozen))
+    return violations
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    paths = [a for a in argv if not a.startswith("-")] or ["src"]
+    violations = lint_paths(paths)
+    for v in violations:
+        print(v)
+    n_files = len(_collect_files(paths))
+    print(f"repro.analysis.lint: {n_files} file(s), "
+          f"{len(violations)} violation(s)")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

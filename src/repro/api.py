@@ -51,6 +51,7 @@ from .core.ranl import (
     _run_scan,
     _run_sharded,
     _run_sharded2d,
+    trace_ranl,
 )
 
 ENGINES = ("scan", "batch", "sharded", "sharded2d", "reference")
@@ -173,3 +174,27 @@ def lower(problem, key, *, engine: str = "sharded",
     return _lower_sharded2d(problem, key, opts, mesh=mesh,
                             data_axis=data_axis, model_axis=model_axis,
                             controller=controller, cost=cost)
+
+
+def trace(problem, key, *, engine: str = "scan",
+          options: RanlOptions | None = None, mesh=None,
+          axis_name: str = "data", data_axis: str = "data",
+          model_axis: str = "model", controller=None, cost=None,
+          **overrides):
+    """Trace (without running) any engine's FULL program to a closed
+    jaxpr — init phase and round loop.
+
+    The pre-compile companion of ``repro.lower``: works for all five
+    engines (the eager reference oracle included — its loop is a pure
+    array program), with the same validation as ``repro.run``.  The
+    result feeds ``repro.analysis.jaxpr_audit.audit_jaxpr`` (collective
+    inventory with exact scan trip counts, PRNG key-reuse, dtype-leak
+    and host-sync checks) and the ``repro.analysis.audit`` CLI's
+    contract diffing.
+    """
+    opts, controller = _resolve(engine, options, mesh, controller,
+                                overrides)
+    return trace_ranl(problem, key, opts, engine=engine, mesh=mesh,
+                      axis_name=axis_name, data_axis=data_axis,
+                      model_axis=model_axis, controller=controller,
+                      cost=cost)

@@ -32,6 +32,7 @@ from .hessian import (  # noqa: F401
     project_psd_ns,
     project_psd_sharded,
     solve_projected,
+    sym_eigh,
 )
 from .masks import (  # noqa: F401
     PolicyConfig,
@@ -53,5 +54,6 @@ from .ranl import (  # noqa: F401
     run_ranl_reference,
     run_ranl_sharded,
     run_ranl_sharded2d,
+    trace_ranl,
 )
 from .regions import contiguous_regions, expand_mask, region_sizes  # noqa: F401

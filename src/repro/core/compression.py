@@ -316,7 +316,7 @@ def lowrank_hmu_factor(problem, x0, hkeys, mu: float, *, rank: int):
     (all worker Hessians ⪰ μI) it equals ``chol(mean_i H_i)`` exactly.
     Wire cost: d² + (N−1)·rank·(d+1) floats vs the dense N·d².
     """
-    from .hessian import project_psd
+    from .hessian import project_psd, sym_eigh
     N, d = problem.num_workers, problem.dim
     r = min(int(rank), d)
     S0 = project_psd(problem.worker_hessian(0, x0, hkeys[0]), mu) \
@@ -324,7 +324,7 @@ def lowrank_hmu_factor(problem, x0, hkeys, mu: float, *, rank: int):
     L = jnp.linalg.cholesky(S0)
     for i in range(1, N):
         Hi = problem.worker_hessian(i, x0, hkeys[i])
-        w, V = jnp.linalg.eigh(Hi)
+        w, V = sym_eigh(Hi)
         w = jnp.maximum(w - mu, 0.0)
 
         def fold(L, j):

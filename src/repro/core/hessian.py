@@ -29,6 +29,18 @@ import jax
 import jax.numpy as jnp
 
 
+def sym_eigh(a):
+    """Repo-wide chokepoint for dense symmetric eigendecompositions.
+
+    ``jnp.linalg.eigh`` is an O(d³) replicated factorization — exactly
+    the primitive the dimension-sharded paths must never reach — so the
+    repo lint (``repro.analysis.lint``) confines direct calls to this
+    module; every other caller routes through here, keeping the
+    audit surface one grep wide.
+    """
+    return jnp.linalg.eigh(a)
+
+
 def symmetrize(a):
     return 0.5 * (a + a.T)
 

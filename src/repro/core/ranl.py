@@ -1470,6 +1470,34 @@ def _subsampled(result: RanlResult, record_every: int) -> RanlResult:
         losses=jnp.take(result.losses, idx, axis=-1))
 
 
+def _scan_args(problem, key, opts: RanlOptions, *, controller=None,
+               cost=None):
+    """-> (args, static) for ``_scan_rounds`` — the init phase runs (or
+    traces) here; shared by ``_run_scan`` and the jaxpr-audit hook
+    ``trace_ranl`` so the audited program is the executed program."""
+    ctrl, cost = _hetero_defaults(problem, opts.policy, controller, cost)
+    projection = opts.projection or "eigh"
+    cfg = _config(problem, mu=opts.mu, lr=opts.lr,
+                  curvature=opts.curvature,
+                  hutchinson_samples=opts.hutchinson_samples,
+                  projection=projection)
+    hutch = cfg.pop("hutch_samples")
+    k_init, k_loop = jax.random.split(key)
+    x1, C0, cho_c, cho_lower, hdiag = _init_phase(
+        problem, k_init, mu=cfg["mu"], lr=cfg["lr"],
+        curvature=cfg["curvature"], hutch_samples=hutch,
+        projection=projection, ns_iters=opts.ns_iters,
+        hessian_rank=opts.hessian_rank)
+    args = (problem, k_loop, x1, C0, cho_c, hdiag, cost)
+    static = dict(num_rounds=int(opts.num_rounds),
+                  num_regions=int(opts.num_regions),
+                  controller=ctrl, use_kernel=bool(opts.use_kernel),
+                  interpret=None, cho_lower=cho_lower,
+                  qspec=opts.quorum_spec(),
+                  comp=opts.compression_spec(), **cfg)
+    return args, static
+
+
 def _run_scan(problem, key, opts: RanlOptions, *, controller=None,
               cost=None):
     """Algorithm 1 as one compiled ``lax.scan`` (engine ``"scan"`` of
@@ -1487,27 +1515,10 @@ def _run_scan(problem, key, opts: RanlOptions, *, controller=None,
     ``CostModel``) prices every round.  ``opts.quorum`` switches the
     rounds semi-synchronous (see ``_scan_rounds``).
     """
-    ctrl, cost = _hetero_defaults(problem, opts.policy, controller, cost)
-    projection = opts.projection or "eigh"
-    cfg = _config(problem, mu=opts.mu, lr=opts.lr,
-                  curvature=opts.curvature,
-                  hutchinson_samples=opts.hutchinson_samples,
-                  projection=projection)
-    hutch = cfg.pop("hutch_samples")
-    k_init, k_loop = jax.random.split(key)
-    x1, C0, cho_c, cho_lower, hdiag = _init_phase(
-        problem, k_init, mu=cfg["mu"], lr=cfg["lr"],
-        curvature=cfg["curvature"], hutch_samples=hutch,
-        projection=projection, ns_iters=opts.ns_iters,
-        hessian_rank=opts.hessian_rank)
+    args, static = _scan_args(problem, key, opts, controller=controller,
+                              cost=cost)
     (xs, dist, losses, cov, comm, tau, tau_cov, times, stale,
-     cbytes) = _rounds_jit(
-        problem, k_loop, x1, C0, cho_c, hdiag, cost,
-        num_rounds=int(opts.num_rounds),
-        num_regions=int(opts.num_regions),
-        controller=ctrl, use_kernel=bool(opts.use_kernel),
-        interpret=None, cho_lower=cho_lower, qspec=opts.quorum_spec(),
-        comp=opts.compression_spec(), **cfg)
+     cbytes) = _rounds_jit(*args, **static)
     return _subsampled(RanlResult(
         xs=xs, dist_sq=dist, losses=losses, coverage=cov,
         comm_floats=comm, tau_star=int(tau), tau_covered=int(tau_cov),
@@ -1569,23 +1580,21 @@ def _run_batch(problem, keys, opts: RanlOptions, *, mesh=None,
         opts.record_every)
 
 
-def _run_reference(problem, key, opts: RanlOptions, *, controller=None,
-                   cost=None):
-    """Original host-loop driver (engine ``"reference"`` of ``repro.run``;
-    re-traces every round).
+def _reference_program(problem, key, cost, *, opts: RanlOptions,
+                       controller):
+    """The reference engine's round loop as a pure array program.
 
-    Kept as the semantic oracle: the scan engine must reproduce its
-    trajectory on a fixed key, and the engine-speedup benchmark measures
-    against it.  ``controller``/``cost`` run the same closed loop
-    eagerly, and ``opts.quorum`` runs the same eager rounds through
-    ``quorum_split``/``quorum_aggregate`` — the host-loop oracle of the
-    engines' semi-synchronous path.  Dense ``eigh`` curvature only (the
-    dispatcher enforces this).
+    Factored out of ``_run_reference`` so it is traceable end to end
+    (``jax.make_jaxpr`` / ``jax.jit``) for the static auditors: the
+    over-rounds coverage minima accumulate with ``jnp.minimum`` instead
+    of host-side ``int()``/``min()`` — identical values, the final
+    ``int()`` conversions stay in the caller.  Returns the raw arrays
+    ``(xs, cov, comm, tau, tau_cov, times, stale, cbytes)``.
     """
     from ..hetero.controller import initial_telemetry, next_telemetry
     from ..hetero.cost import quorum_split, worker_times
     num_rounds, num_regions = opts.num_rounds, opts.num_regions
-    ctrl, cost = _hetero_defaults(problem, opts.policy, controller, cost)
+    ctrl = controller
     qspec = opts.quorum_spec()
     comp = opts.compression_spec()
     mu = problem.mu if opts.mu is None else opts.mu
@@ -1608,7 +1617,8 @@ def _run_reference(problem, key, opts: RanlOptions, *, controller=None,
     grad_all = jax.vmap(problem.worker_grad, in_axes=(0, 0, 0))
 
     xs = [x0, x]
-    min_cov, min_cov_covered = N, N
+    min_cov = jnp.asarray(N, jnp.int32)
+    min_cov_covered = jnp.asarray(N, jnp.int32)
     cov_hist, comm_hist, time_hist, stale_hist = [], [], [], []
     bytes_hist = []
     ctrl_state = ctrl.init_state(N, Q)
@@ -1664,20 +1674,109 @@ def _run_reference(problem, key, opts: RanlOptions, *, controller=None,
         bytes_hist.append(ubytes.sum())                  # uplink bytes
         time_hist.append(round_t)
         stale_hist.append(telem.stale_q.max())
-        min_cov = min(min_cov, int(min_count))
-        min_cov_covered = min(min_cov_covered, int(min_cov_count))
+        min_cov = jnp.minimum(min_cov, min_count)
+        min_cov_covered = jnp.minimum(min_cov_covered, min_cov_count)
 
     xs = jnp.stack(xs)
+    return (xs, jnp.stack(cov_hist), jnp.stack(comm_hist), min_cov,
+            min_cov_covered, jnp.stack(time_hist), jnp.stack(stale_hist),
+            jnp.stack(bytes_hist))
+
+
+def _run_reference(problem, key, opts: RanlOptions, *, controller=None,
+                   cost=None):
+    """Original host-loop driver (engine ``"reference"`` of ``repro.run``;
+    re-traces every round).
+
+    Kept as the semantic oracle: the scan engine must reproduce its
+    trajectory on a fixed key, and the engine-speedup benchmark measures
+    against it.  ``controller``/``cost`` run the same closed loop
+    eagerly, and ``opts.quorum`` runs the same eager rounds through
+    ``quorum_split``/``quorum_aggregate`` — the host-loop oracle of the
+    engines' semi-synchronous path.  Dense ``eigh`` curvature only (the
+    dispatcher enforces this).  The loop itself lives in
+    ``_reference_program`` (traceable for the static auditors).
+    """
+    ctrl, cost = _hetero_defaults(problem, opts.policy, controller, cost)
+    xs, cov, comm, min_cov, min_cov_covered, times, stale, cbytes = \
+        _reference_program(problem, key, cost, opts=opts, controller=ctrl)
     dist = jnp.sum((xs - problem.x_star[None, :]) ** 2, axis=1)
     losses = jnp.stack([problem.loss(xi) for xi in xs])
     return _subsampled(RanlResult(
         xs=xs, dist_sq=dist, losses=losses,
-        coverage=jnp.stack(cov_hist),
-        comm_floats=jnp.stack(comm_hist),
-        tau_star=min_cov, tau_covered=min_cov_covered,
-        round_time=jnp.stack(time_hist),
-        max_stale=jnp.stack(stale_hist),
-        comm_bytes=jnp.stack(bytes_hist)), opts.record_every)
+        coverage=cov, comm_floats=comm,
+        tau_star=int(min_cov), tau_covered=int(min_cov_covered),
+        round_time=times, max_stale=stale,
+        comm_bytes=cbytes), opts.record_every)
+
+
+def trace_ranl(problem, key, opts: RanlOptions = RanlOptions(), *,
+               engine: str = "scan", mesh=None, axis_name: str = "data",
+               data_axis: str = "data", model_axis: str = "model",
+               controller=None, cost=None):
+    """Closed jaxpr of the FULL engine program (init phase + round loop).
+
+    The pre-compile artifact ``repro.analysis.jaxpr_audit`` inventories:
+    collective primitives with exact ``lax.scan`` trip counts, PRNG
+    consumption, dtype promotion, host-sync hazards.  Every engine
+    traces the same computation it executes — the prep helpers
+    (``_scan_args`` / ``_sharded_args`` / ``_sharded2d_args`` /
+    ``_reference_program``) are shared with the run paths, only wrapped
+    in ``jax.make_jaxpr`` here instead of being executed.  For
+    ``engine="batch"``, ``key`` is the stacked ``(B,)`` key array the
+    batch engine takes.
+    """
+    ctrl, cost = _hetero_defaults(problem, opts.policy, controller, cost)
+
+    if engine == "scan":
+        def program(problem, key, cost):
+            args, static = _scan_args(problem, key, opts, controller=ctrl,
+                                      cost=cost)
+            return _scan_rounds(*args, **static)
+    elif engine == "batch":
+        projection = opts.projection or "eigh"
+        cfg = _config(problem, mu=opts.mu, lr=opts.lr,
+                      curvature=opts.curvature,
+                      hutchinson_samples=opts.hutchinson_samples,
+                      projection=projection)
+
+        def program(problem, keys, cost):
+            return _ranl_batch_engine(
+                problem, jnp.asarray(keys), cost,
+                num_rounds=int(opts.num_rounds),
+                num_regions=int(opts.num_regions), controller=ctrl,
+                use_kernel=bool(opts.use_kernel), interpret=None,
+                projection=projection,
+                ns_iters=opts.ns_iters if opts.ns_iters == "auto"
+                else int(opts.ns_iters),
+                qspec=opts.quorum_spec(), comp=opts.compression_spec(),
+                hessian_rank=opts.hessian_rank, **cfg)
+    elif engine == "reference":
+        def program(problem, key, cost):
+            return _reference_program(problem, key, cost, opts=opts,
+                                      controller=ctrl)
+    elif engine == "sharded":
+        if mesh is None:
+            raise ValueError("engine='sharded' needs a mesh to trace")
+
+        def program(problem, key, cost):
+            args, static = _sharded_args(problem, key, opts, mesh=mesh,
+                                         axis_name=axis_name,
+                                         controller=ctrl, cost=cost)
+            return _sharded_engine(*args, **static)
+    elif engine == "sharded2d":
+        if mesh is None:
+            raise ValueError("engine='sharded2d' needs a mesh to trace")
+
+        def program(problem, key, cost):
+            eng, args, static = _sharded2d_args(
+                problem, key, opts, mesh=mesh, data_axis=data_axis,
+                model_axis=model_axis, controller=ctrl, cost=cost)
+            return eng(*args, **static)
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
+
+    return jax.make_jaxpr(program)(problem, key, cost)
 
 
 # --------------------------------------------------------------------------

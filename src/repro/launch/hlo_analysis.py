@@ -136,6 +136,30 @@ def groups_reduce_over(record_groups, axis_sizes, axis: int) -> bool:
     return {frozenset(g) for g in record_groups} == want
 
 
+def collective_axes(record_groups, axis_sizes, axis_names):
+    """Explicit mesh-axis attribution of a collective's replica groups.
+
+    Returns a tuple of labels: the matching axis name(s) from
+    ``axis_names``, or ``("replicated",)`` for collectives that move no
+    data between distinct devices — replica_groups absent (single-replica
+    modules print none) or every group a singleton.  A degenerate
+    size-1 mesh axis produces singleton groups, so on a 1-device mesh
+    every collective is labeled "replicated" rather than ambiguously
+    matching every axis (the old ``groups_reduce_over``-only callers
+    silently matched ALL size-1 axes at once).  An empty tuple means the
+    groups match no declared axis (e.g. a joint reduction over two axes).
+    """
+    if record_groups is None:
+        return ("replicated",)
+    if all(len(g) <= 1 for g in record_groups):
+        return ("replicated",)
+    labels = tuple(
+        name for i, name in enumerate(axis_names)
+        if axis_sizes[i] > 1
+        and groups_reduce_over(record_groups, axis_sizes, i))
+    return labels
+
+
 def shape_bytes(type_str: str) -> int:
     """Total bytes of all array shapes in a (possibly tuple) type string."""
     total = 0
@@ -179,6 +203,10 @@ class CollectiveRecord:
 
     def reduces_over(self, axis_sizes, axis: int) -> bool:
         return groups_reduce_over(self.replica_groups, axis_sizes, axis)
+
+    def axes(self, axis_sizes, axis_names):
+        """Explicit axis attribution — see ``collective_axes``."""
+        return collective_axes(self.replica_groups, axis_sizes, axis_names)
 
 
 def parse_module(text: str):

@@ -432,7 +432,7 @@ def test_hlo_int8_one_param_psum_with_smaller_payload():
     code = _PRELUDE + r"""
 import repro
 from repro.core import PolicyConfig, make_quadratic
-from repro.launch.hlo_analysis import collect_collectives
+from repro.analysis import engine_contract, verify_contract
 
 D, T = 512, 7
 prob = make_quadratic(KEY, num_workers=8, dim=D, kappa=10.0,
@@ -442,22 +442,16 @@ mesh = jax.make_mesh((8,), ('data',))
 
 out = {}
 for comp, tag in ((None, 'none'), ('int8', 'int8')):
-    txt = repro.lower(prob, KEY, engine="sharded", mesh=mesh,
-                      num_rounds=T, num_regions=8, policy=pol,
-                      compression=comp).compile().as_text()
-    recs = collect_collectives(txt, default_trip=1)
-    in_loop = [r for r in recs
-               if r.kind == 'all-reduce' and r.multiplier > 1]
-    param = [r for r in in_loop if r.operand_bytes >= D]
-    out[tag] = {
-        "n_param": len(param),
-        "param_bytes": [r.operand_bytes for r in param],
-        "param_dtypes": [list(r.operand_dtypes) for r in param],
-        "multipliers": [r.multiplier for r in param],
-        "small_bytes": sorted(r.operand_bytes for r in in_loop
-                              if r.operand_bytes < D),
-        "rounds": T,
-    }
+    opts = repro.RanlOptions(num_rounds=T, num_regions=8, policy=pol,
+                             compression=comp)
+    low = repro.lower(prob, KEY, engine="sharded", mesh=mesh,
+                      options=opts)
+    # the int8 contract pins the payload dtype to s8 and shrinks the
+    # window to ~d bytes; the pmax shared scale + region counts must
+    # stay under the small-payload ceiling
+    comm, mem = engine_contract("sharded", opts, dim=D, num_workers=8,
+                                mesh_shape=(8,), mesh_axes=("data",))
+    out[tag] = verify_contract(low, comm, mem).to_json()
 
 # parity while we're here: int8 on 8 devices runs and converges
 res = repro.run(prob, KEY, engine="sharded", mesh=mesh, num_rounds=T,
@@ -469,12 +463,14 @@ out["int8_bytes_lt_none"] = bool(
 print(json.dumps(out))
 """
     res = _run_subprocess(code)
+    wire = {}
     for tag in ("none", "int8"):
-        assert res[tag]["n_param"] == 1, res
-        assert res[tag]["multipliers"] == [res[tag]["rounds"]], res
-    assert "s8" in res["int8"]["param_dtypes"][0], res
-    ratio = res["none"]["param_bytes"][0] / res["int8"]["param_bytes"][0]
-    assert ratio >= 3.5, res
-    # the pmax shared scale + region counts stay tiny
-    assert all(b <= 256 for b in res["int8"]["small_bytes"]), res
+        assert res[tag]["ok"], res[tag]
+        matched = res[tag]["facts"]["budgets"][0]["matched"]
+        assert len(matched) == 1, res[tag]
+        wire[tag] = matched[0]
+    assert "s8" in wire["int8"]["operand_dtypes"], res
+    # the compressed wire payload is >= 3.5x smaller than the f32 one
+    ratio = wire["none"]["operand_bytes"] / wire["int8"]["operand_bytes"]
+    assert ratio >= 3.5, (ratio, res)
     assert res["int8_final_finite"] and res["int8_bytes_lt_none"], res

@@ -175,7 +175,6 @@ def test_sharded_scan_parity_and_hlo_one_allreduce():
     code = _PRELUDE + r"""
 import repro
 from repro.core import PolicyConfig, make_quadratic
-from repro.launch.hlo_analysis import collect_collectives
 
 prob = make_quadratic(KEY, num_workers=8, dim=48, kappa=80.0, coupling=0.0,
                       num_regions=6, grad_noise=0.1, hess_noise=0.1)
@@ -212,24 +211,19 @@ try:
 except ValueError:
     out["divisibility_raises"] = True
 
-# HLO: per scanned round, exactly ONE param-sized all-reduce (d floats);
-# the only other in-loop all-reduces are the region-count / scalar-comm
-# reductions, orders of magnitude smaller.
+# HLO: the declarative contract — exactly ONE param-sized data-axis
+# all-reduce per scanned round, every other in-loop reduction under the
+# small-payload ceiling (region counts / scalar comm) — via
+# repro.analysis.verify_contract (the shared one-psum-per-round proof).
+from repro.analysis import engine_contract, verify_contract
 D, T = 512, 7
 prob_h = make_quadratic(KEY, num_workers=8, dim=D, kappa=10.0,
                         coupling=0.0, num_regions=8)
-txt = repro.lower(prob_h, KEY, engine="sharded", mesh=mesh8, num_rounds=T,
-                         num_regions=8, policy=pol).compile().as_text()
-recs = collect_collectives(txt, default_trip=1)
-in_loop = [r for r in recs if r.kind == 'all-reduce' and r.multiplier > 1]
-param_sized = [r for r in in_loop if r.operand_bytes >= D * 4]
-out["hlo"] = {
-    "n_param_sized_in_loop": len(param_sized),
-    "param_sized_multipliers": [r.multiplier for r in param_sized],
-    "small_in_loop_bytes": [r.operand_bytes for r in in_loop
-                            if r.operand_bytes < D * 4],
-    "rounds": T,
-}
+opts = repro.RanlOptions(num_rounds=T, num_regions=8, policy=pol)
+low = repro.lower(prob_h, KEY, engine="sharded", mesh=mesh8, options=opts)
+comm, mem = engine_contract("sharded", opts, dim=D, num_workers=8,
+                            mesh_shape=(8,), mesh_axes=("data",))
+out["hlo"] = verify_contract(low, comm, mem).to_json()
 print(json.dumps(out))
 """
     res = _run_subprocess(code)
@@ -240,10 +234,9 @@ print(json.dumps(out))
     assert res["diag_err"] <= 1e-6, res
     assert res["divisibility_raises"], res
     hlo = res["hlo"]
-    assert hlo["n_param_sized_in_loop"] == 1, hlo
-    assert hlo["param_sized_multipliers"] == [hlo["rounds"]], hlo
-    # the remaining in-loop reductions are the (Q,) counts + scalar comm
-    assert all(b <= 256 for b in hlo["small_in_loop_bytes"]), hlo
+    assert hlo["ok"], hlo
+    # the contract budget (one param-sized psum x rounds) actually matched
+    assert len(hlo["facts"]["budgets"][0]["matched"]) == 1, hlo
 
 
 @pytest.mark.slow
@@ -256,7 +249,6 @@ def test_overlap_sharded_parity_and_hlo():
     code = _PRELUDE + r"""
 import repro
 from repro.core import PolicyConfig, make_quadratic
-from repro.launch.hlo_analysis import collect_collectives
 
 prob = make_quadratic(KEY, num_workers=8, dim=48, kappa=80.0, coupling=0.0,
                       num_regions=6, grad_noise=0.1, hess_noise=0.1)
@@ -280,27 +272,19 @@ out["diag_xs_eq"] = bool((np.asarray(seq_d.xs)
                           == np.asarray(ov_d.xs)).all())
 
 # HLO: pipelining shifts the coverage-count psum across the iteration
-# boundary but never adds a param-sized collective
+# boundary but never adds a param-sized collective — the overlap run must
+# satisfy the SAME contract as the sequential one (the param-psum window
+# carries PARAM_SLACK for the count psum riding the combined all-reduce)
+from repro.analysis import engine_contract, verify_contract
 D, T = 512, 7
 prob_h = make_quadratic(KEY, num_workers=8, dim=D, kappa=10.0,
                         coupling=0.0, num_regions=8)
-txt = repro.lower(prob_h, KEY, engine="sharded", mesh=mesh8, num_rounds=T,
-                         num_regions=8, policy=pol,
-                         overlap=True).compile().as_text()
-recs = collect_collectives(txt, default_trip=1)
-in_loop = [r for r in recs if r.kind == 'all-reduce' and r.multiplier > 1]
-param_sized = [r for r in in_loop if r.operand_bytes >= D * 4]
-out["hlo"] = {
-    "n_param_sized_in_loop": len(param_sized),
-    "param_sized_multipliers": [r.multiplier for r in param_sized],
-    # the count psum may ride in the same (combined) all-reduce as the
-    # contribution psum now that they are independent — allow the tuple
-    "param_sized_bytes_slack": [r.operand_bytes - D * 4
-                                for r in param_sized],
-    "small_in_loop_bytes": [r.operand_bytes for r in in_loop
-                            if r.operand_bytes < D * 4],
-    "rounds": T,
-}
+opts = repro.RanlOptions(num_rounds=T, num_regions=8, policy=pol,
+                         overlap=True)
+low = repro.lower(prob_h, KEY, engine="sharded", mesh=mesh8, options=opts)
+comm, mem = engine_contract("sharded", opts, dim=D, num_workers=8,
+                            mesh_shape=(8,), mesh_axes=("data",))
+out["hlo"] = verify_contract(low, comm, mem).to_json()
 print(json.dumps(out))
 """
     res = _run_subprocess(code)
@@ -308,10 +292,8 @@ print(json.dumps(out))
         and res["tau_eq"], res
     assert res["diag_xs_eq"], res
     hlo = res["hlo"]
-    assert hlo["n_param_sized_in_loop"] == 1, hlo
-    assert hlo["param_sized_multipliers"] == [hlo["rounds"]], hlo
-    assert all(0 <= s <= 256 for s in hlo["param_sized_bytes_slack"]), hlo
-    assert all(b <= 256 for b in hlo["small_in_loop_bytes"]), hlo
+    assert hlo["ok"], hlo
+    assert len(hlo["facts"]["budgets"][0]["matched"]) == 1, hlo
 
 
 _PRELUDE4 = _PRELUDE.replace("device_count=8", "device_count=4").replace(
@@ -341,7 +323,6 @@ def test_sharded2d_parity_and_hlo_memory_claims():
     code = _PRELUDE4 + r"""
 import repro
 from repro.core import PolicyConfig, make_quadratic
-from repro.launch.hlo_analysis import (collect_collectives, max_array_bytes)
 from repro.launch.mesh import make_engine_mesh
 
 prob = make_quadratic(KEY, num_workers=8, dim=48, kappa=80.0, coupling=0.0,
@@ -398,51 +379,28 @@ except ValueError:
 
 # HLO memory + communication claims (compile only, d=512 on a 2x2 mesh:
 # param shard p = 256; N=2 so the per-device problem shard stays < d^2).
-# The dense lowering now covers the WHOLE program — sharded mean-Hessian
+# The dense lowering covers the WHOLE program — sharded mean-Hessian
 # accumulation, NS projection (NS_IT iterations, panel-product psums),
-# blocked factorization, first Newton step, and the round loop.
-D, T, NM, NS_IT = 512, 7, 2, 12
+# blocked factorization, first Newton step, and the round loop.  The
+# declarative sharded2d contract states all of it: one data-axis
+# param-SHARD psum per round, model-axis budgets bounded by d floats
+# (round loop) / two panels (NS loop), no in-loop gathers, every in-loop
+# collective attributed to a mesh axis, and a peak per-device buffer of
+# one (d/n_model, d) panel — no replicated d x d buffer anywhere.
+from repro.analysis import engine_contract, verify_contract
+D, T, NS_IT = 512, 7, 12
 prob_h = make_quadratic(KEY, num_workers=2, dim=D, kappa=10.0,
                         coupling=0.0, num_regions=8)
-P_SHARD = D // NM
 out["hlo"] = {}
 for leg, ov in (("seq", False), ("overlap", True)):
-    txt = repro.lower(prob_h, KEY, engine="sharded2d", mesh=mesh22, num_rounds=T,
-                               num_regions=8, policy=pol, ns_iters=NS_IT,
-                               overlap=ov).compile().as_text()
-    recs = collect_collectives(txt, default_trip=1)
-    in_loop = [r for r in recs if r.multiplier > 1]
-    ar = [r for r in in_loop if r.kind == 'all-reduce']
-    data_ar = [r for r in ar if r.reduces_over((2, 2), 0)]
-    model_ar = [r for r in ar if r.reduces_over((2, 2), 1)]
-    round_model = [r for r in model_ar if r.multiplier == T]
-    ns_model = [r for r in model_ar if r.multiplier == NS_IT]
-    out["hlo"][leg] = {
-        "n_data_param_shard": len([r for r in data_ar
-                                   if r.operand_bytes >= P_SHARD * 4]),
-        # the overlapped loop may legally combine the (Q,) count psum
-        # into the same all-reduce as the contribution psum (they are
-        # independent there), so allow a small slack on the payload
-        "data_param_shard_ok": all(
-            (r.multiplier == T and
-             P_SHARD * 4 <= r.operand_bytes <= P_SHARD * 4 + 256)
-            for r in data_ar if r.operand_bytes >= P_SHARD * 4),
-        "small_data_bytes": [r.operand_bytes for r in data_ar
-                             if r.operand_bytes < P_SHARD * 4],
-        "round_model_max_bytes": max([r.operand_bytes
-                                      for r in round_model], default=0),
-        "ns_model_max_bytes": max([r.operand_bytes for r in ns_model],
-                                  default=0),
-        "n_ns_model": len(ns_model),
-        "model_mults_known": all(r.multiplier in (T, NS_IT)
-                                 for r in model_ar),
-        "all_classified": len(data_ar) + len(model_ar) == len(ar),
-        "n_gatherlike_in_loop": len([r for r in in_loop
-                                     if r.kind != 'all-reduce']),
-        "max_array_bytes": max_array_bytes(txt),
-        "panel_bytes": D * D * 4 // NM,
-        "dxd_bytes": D * D * 4,
-    }
+    opts = repro.RanlOptions(num_rounds=T, num_regions=8, policy=pol,
+                             ns_iters=NS_IT, overlap=ov)
+    low = repro.lower(prob_h, KEY, engine="sharded2d", mesh=mesh22,
+                      options=opts)
+    comm, mem = engine_contract("sharded2d", opts, dim=D, num_workers=2,
+                                mesh_shape=(2, 2),
+                                mesh_axes=("data", "model"))
+    out["hlo"][leg] = verify_contract(low, comm, mem).to_json()
 print(json.dumps(out))
 """
     res = _run_subprocess(code)
@@ -454,30 +412,20 @@ print(json.dumps(out))
         assert r["xs_eq"] and r["comm_eq"] and r["tau_eq"], (curv, res)
     assert res["bad_workers_raises"] and res["bad_dim_raises"], res
     assert res["proj_bad_dim_raises"], res
+    D = 512  # matches the subprocess HLO problem dim
     for leg in ("seq", "overlap"):
         hlo = res["hlo"][leg]
-        # exactly ONE data-axis param-shard all-reduce per round...
-        assert hlo["n_data_param_shard"] == 1, (leg, hlo)
-        assert hlo["data_param_shard_ok"], (leg, hlo)
-        # ...the only other data-axis reduction is the (Q,) coverage
-        # counts...
-        assert all(b <= 256 for b in hlo["small_data_bytes"]), (leg, hlo)
-        # ...round-loop model-axis collectives stay <= d floats (solve
-        # block broadcasts); the NS-loop panel products move (p, d)
-        # panels but never a full d x d payload, and nothing gathers
-        assert hlo["all_classified"] and hlo["model_mults_known"], \
-            (leg, hlo)
-        assert 0 < hlo["round_model_max_bytes"] <= 512 * 4, (leg, hlo)
-        assert hlo["n_ns_model"] > 0, (leg, hlo)
-        assert hlo["ns_model_max_bytes"] <= 2 * hlo["panel_bytes"], \
-            (leg, hlo)
-        assert hlo["n_gatherlike_in_loop"] == 0, (leg, hlo)
-        # the END-TO-END memory claim, init included: the largest
-        # per-device array anywhere in the program is the (d/n_model, d)
-        # panel (+ block slack) — no replicated d x d buffer exists
-        assert hlo["panel_bytes"] <= hlo["max_array_bytes"] \
-            <= hlo["panel_bytes"] + 64 * 1024, (leg, hlo)
-        assert hlo["max_array_bytes"] < hlo["dxd_bytes"], (leg, hlo)
+        assert hlo["ok"], (leg, hlo)
+        budgets = hlo["facts"]["budgets"]
+        # the data-axis param-shard psum matched exactly once, and the
+        # optional model-axis budgets (solve broadcasts, NS panel
+        # products) are actually exercised — this is a positive claim,
+        # not just an upper bound
+        assert len(budgets[0]["matched"]) == 1, (leg, hlo)
+        assert budgets[1]["matched"], (leg, hlo)   # round-loop model psums
+        assert budgets[2]["matched"], (leg, hlo)   # NS-loop panel psums
+        # memory window [panel, panel + slack] sits far below d x d
+        assert hlo["facts"]["max_array_bytes"] < D * D * 4, (leg, hlo)
 
 
 @pytest.mark.slow
@@ -535,7 +483,6 @@ from repro.configs import get_config, smoke_variant
 from repro.data import make_batch
 from repro.models import init_model, lm_loss
 from repro.optim import RanlLLMConfig, init_state, train_step
-from repro.launch.hlo_analysis import collect_collectives
 
 cfg = smoke_variant(get_config('phi4-mini-3.8b'))
 params = init_model(cfg, KEY)
@@ -566,14 +513,24 @@ for ndev in (1, 2, 8):
 
 # single-reduction invariant on the compiled 8-device step: total
 # all-reduce traffic == one fp32 pass over the gradients (+ scalar
-# epsilon for the per-leaf counts / trust-ratio / metric reductions)
+# epsilon for the per-leaf counts / trust-ratio / metric reductions) —
+# stated as an aggregate-bytes contract (the window applies to the SUM
+# of every matching all-reduce, not per-collective)
+from repro.analysis import CollectiveBudget, CommContract, verify_contract
 mesh8 = jax.make_mesh((8,), ('data',))
 sh8 = jax.jit(partial(train_step, loss_fn=loss_fn, cfg=rcfg, mesh=mesh8))
-txt = sh8.lower(params, state, batch, KEY).compile().as_text()
-recs = collect_collectives(txt, default_trip=1)
-ar_bytes = sum(r.total_bytes for r in recs if r.kind == 'all-reduce')
 grad_bytes = sum(l.size * 4 for l in jax.tree.leaves(params))
-out["hlo"] = {"allreduce_bytes": ar_bytes, "grad_bytes": grad_bytes}
+comm = CommContract(
+    mesh_axes=('data',), mesh_shape=(8,), rounds=1,
+    budgets=(CollectiveBudget(axis='data', count=None,
+                              min_bytes=grad_bytes,
+                              max_bytes=grad_bytes + 64 * 1024,
+                              multipliers=(1,)),),
+    small_max_bytes=1 << 30, allow_inloop_gather=True,
+    in_loop_only=False, require_classified=False, aggregate_bytes=True)
+rep = verify_contract(sh8.lower(params, state, batch, KEY), comm)
+out["hlo"] = rep.to_json()
+out["grad_bytes"] = grad_bytes
 print(json.dumps(out))
 """
     res = _run_subprocess(code)
@@ -585,5 +542,5 @@ print(json.dumps(out))
         assert r["coverage_eq"] and r["uplink_eq"] and r["step_eq"], \
             (ndev, res)
     hlo = res["hlo"]
-    assert hlo["grad_bytes"] <= hlo["allreduce_bytes"] \
-        <= hlo["grad_bytes"] + 64 * 1024, hlo
+    assert hlo["ok"], hlo
+    assert hlo["facts"]["budgets"][0]["matched"], hlo

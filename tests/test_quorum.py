@@ -348,7 +348,7 @@ assert jax.device_count() == 8, jax.devices()
 import repro
 from repro.core import PolicyConfig, make_quadratic
 from repro.hetero import make_scenario
-from repro.launch.hlo_analysis import collect_collectives
+from repro.analysis import engine_contract, verify_contract
 
 KEY = jax.random.PRNGKey(0)
 D, T = 512, 7
@@ -359,25 +359,19 @@ mesh = jax.make_mesh((8,), ('data',))
 pol = PolicyConfig(keep_prob=0.5, tau_star=1, heterogeneous=True)
 out = {}
 for overlap in (False, True):
+    opts = repro.RanlOptions(num_rounds=T, num_regions=8, policy=pol,
+                             overlap=overlap, quorum=0.75, quorum_tau=1,
+                             gamma=0.5, max_delay=2, curvature="diag")
     low = repro.lower(prob, KEY, engine="sharded", mesh=mesh,
-                      num_rounds=T, num_regions=8, policy=pol,
-                      cost=scen.cost, overlap=overlap, quorum=0.75,
-                      quorum_tau=1, gamma=0.5, max_delay=2,
-                      curvature="diag")
-    recs = collect_collectives(low.compile().as_text(), default_trip=1)
-    in_loop = [r for r in recs
-               if r.kind == 'all-reduce' and r.multiplier > 1]
-    param = [r for r in in_loop if r.operand_bytes >= D * 4]
-    out[f"overlap={overlap}"] = {
-        "n_param": len(param),
-        "multipliers": sorted(r.multiplier for r in param),
-        "small_bytes": sorted(r.operand_bytes for r in in_loop
-                              if r.operand_bytes < D * 4),
-    }
+                      options=opts, cost=scen.cost)
+    # the quorum contract is IDENTICAL to the synchronous one: the late
+    # buffer and per-round fold ride the same single param-sized psum
+    comm, mem = engine_contract("sharded", opts, dim=D, num_workers=16,
+                                mesh_shape=(8,), mesh_axes=("data",))
+    out[f"overlap={overlap}"] = verify_contract(low, comm, mem).to_json()
 print(json.dumps(out))
 """
     out = _run_subprocess(code)
     for leg, rec in out.items():
-        assert rec["n_param"] == 1, (leg, rec)
-        assert rec["multipliers"] == [7], (leg, rec)
-        assert all(b <= 256 for b in rec["small_bytes"]), (leg, rec)
+        assert rec["ok"], (leg, rec)
+        assert len(rec["facts"]["budgets"][0]["matched"]) == 1, (leg, rec)
