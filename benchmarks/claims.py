@@ -391,13 +391,25 @@ def bench_overlap(smoke: bool = False):
     On one device the pair measures restructure overhead; on a real
     multi-device mesh the ``overlap_on`` row is the latency win of
     hiding the all-reduce behind next-round sampling.
+
+    Both rows also carry the SIMULATED clock on a finite-uplink
+    straggler cluster whose cost model grants ``overlap_credit=0.6``:
+    the pipelined loop hides that fraction of each worker's
+    min(compute, comm) (``hetero.cost.worker_times(overlap=True)``), so
+    ``sim_speedup`` is the deterministic modeled win while the
+    trajectory stays bit-identical.
     """
+    from repro.hetero import make_scenario, time_to_target, \
+        with_overlap_credit
     dim, rounds = (32, 10) if smoke else (64, 30)
     N = 16
     prob = make_quadratic(KEY, num_workers=N, dim=dim, kappa=100.0,
                           coupling=0.0, num_regions=8)
     pol = PolicyConfig(keep_prob=0.5, tau_star=1, heterogeneous=False)
-    kw = dict(num_rounds=rounds, num_regions=8, policy=pol)
+    cost = with_overlap_credit(
+        make_scenario("pareto-stragglers:alpha=1.2,bw=1",
+                      jax.random.PRNGKey(101), N).cost, 0.6)
+    kw = dict(num_rounds=rounds, num_regions=8, policy=pol, cost=cost)
     ndev = max(k for k in range(1, N + 1)
                if N % k == 0 and k <= jax.device_count())
     mesh = jax.sharding.Mesh(np.array(jax.devices()[:ndev]), ("data",))
@@ -408,12 +420,69 @@ def bench_overlap(smoke: bool = False):
     res_on, us_on = _timed(
         lambda: repro.run(prob, KEY, engine="sharded", mesh=mesh, overlap=True, **kw))
     err = float(np.abs(np.asarray(res_on.xs) - np.asarray(res_off.xs)).max())
+    tol = 1e-4 if smoke else 1e-8
+    target = tol * float(res_off.dist_sq[0])
+    t_off = time_to_target(res_off.dist_sq, res_off.round_time, target)
+    t_on = time_to_target(res_on.dist_sq, res_on.round_time, target)
     return [
         {"name": "engine/overlap_off", "us_per_call": us_off,
-         "derived": f"devices={ndev};rounds={rounds}"},
+         "derived": (f"devices={ndev};rounds={rounds};"
+                     f"sim_time_to_{tol:.0e}={t_off:.0f}")},
         {"name": "engine/overlap_on", "us_per_call": us_on,
          "derived": (f"devices={ndev};seq_us={us_off:.0f};"
-                     f"speedup={us_off / us_on:.2f}x;max_err={err:.1e}")},
+                     f"speedup={us_off / us_on:.2f}x;max_err={err:.1e};"
+                     f"sim_time_to_{tol:.0e}={t_on:.0f};"
+                     f"seq_sim_time={t_off:.0f};"
+                     f"sim_speedup={t_off / t_on:.2f}x")},
+    ]
+
+
+def bench_hierarchy(smoke: bool = False):
+    """Hierarchical pod-of-pods aggregation vs flat-synchronous on the
+    uplink-asymmetric ``geo-distributed`` topology (2 pods joined by a
+    slow WAN whose slowest uplink gates every cross-pod exchange).
+
+    Same problem, seed and policy; the flat run's param aggregate
+    crosses the inter-pod links EVERY round (``CostModel.pod_bw``
+    charges ``pod_exchange_time`` per round), the hierarchical run
+    (``hierarchy="pods=2,period=4"``) keeps rounds pod-local and pays
+    the WAN only on every 4th-round anchor exchange.  ``derived``
+    carries simulated time-to-target for both, their ratio (the
+    acceptance bound a test pins at <= 0.8x), and the modeled inter-pod
+    bytes per round (``RanlResult.pod_bytes`` — reduced exactly by the
+    exchange period).
+    """
+    from repro.hetero import make_scenario, time_to_target
+    dim, rounds = (32, 28) if smoke else (64, 60)
+    N = 16
+    prob = make_quadratic(KEY, num_workers=N, dim=dim, kappa=100.0,
+                          coupling=0.0, num_regions=8)
+    scen = make_scenario("geo-distributed", jax.random.PRNGKey(101), N)
+    pol = PolicyConfig(keep_prob=0.5, tau_star=1, heterogeneous=False)
+    tol = 1e-4 if smoke else 1e-8
+    kw = dict(num_rounds=rounds, num_regions=8, lr=0.5, cost=scen.cost,
+              policy=pol)
+    hier = "pods=2,period=4"
+    repro.run(prob, KEY, **kw)                               # compile both
+    repro.run(prob, KEY, hierarchy=hier, **kw)
+    res_f, us_f = _timed(lambda: repro.run(prob, KEY, **kw))
+    res_h, us_h = _timed(lambda: repro.run(prob, KEY, hierarchy=hier,
+                                           **kw))
+    target = tol * float(res_f.dist_sq[0])
+    t_f = time_to_target(res_f.dist_sq, res_f.round_time, target)
+    t_h = time_to_target(res_h.dist_sq, res_h.round_time, target)
+    pb_f = float(np.asarray(res_f.pod_bytes).mean())
+    pb_h = float(np.asarray(res_h.pod_bytes).mean())
+    return [
+        {"name": "engine/hier_flat_wan", "us_per_call": us_f,
+         "derived": (f"sim_time_to_{tol:.0e}={t_f:.0f};"
+                     f"pod_bytes_per_round={pb_f:.0f}")},
+        {"name": "engine/hier_pods2_period4", "us_per_call": us_h,
+         "derived": (f"sim_time_to_{tol:.0e}={t_h:.0f};"
+                     f"flat_sim_time={t_f:.0f};"
+                     f"ratio={t_h / t_f:.2f}x;"
+                     f"pod_bytes_per_round={pb_h:.0f};"
+                     f"flat_pod_bytes={pb_f:.0f}")},
     ]
 
 

@@ -50,6 +50,7 @@ def main() -> None:
                    claims.bench_diag_kernel_path,
                    claims.bench_init_projection,
                    claims.bench_overlap,
+                   claims.bench_hierarchy,
                    claims.bench_hetero,
                    claims.bench_quorum,
                    claims.bench_compression):

@@ -9,7 +9,8 @@ count at first init): the audit lowers the sharded engines on an
 
 For every engine × option combination in the matrix (all five engines
 across {compression ∈ {none, int8}} × {quorum on/off} × {overlap on/off
-where the engine supports it} + the low-rank ``hessian_rank`` variants),
+where the engine supports it} + the low-rank ``hessian_rank`` variants
++ the hierarchical ``hierarchy="pods=2,period=2"`` legs on pod meshes),
 the audit:
 
 1. re-derives the expected contract from code
@@ -46,6 +47,14 @@ BATCH_SEEDS = 4
 
 MESH_1D = ((8,), ("data",))
 MESH_2D = ((2, 2), ("data", "model"))
+MESH_POD1D = ((2, 4), ("pod", "data"))
+MESH_POD2D = ((2, 2, 2), ("pod", "data", "model"))
+
+# hierarchical legs need num_rounds % period == 0 and MORE THAN ONE
+# exchange window (T/period = 2 here) so the pod-axis psum stays inside
+# the outer loop — the multiplier gap the contract asserts
+HIER_ROUNDS = 4
+HIER = "pods=2,period=2"
 
 
 def _configs():
@@ -69,6 +78,18 @@ def _configs():
                 yield engine, base.merged(compression=comp, quorum=q), None
     yield "scan", base.merged(hessian_rank=4), None
     yield "sharded", base.merged(hessian_rank=4), MESH_1D
+    # hierarchical pod-of-pods legs (3-D / pod meshes)
+    hbase = base.merged(num_rounds=HIER_ROUNDS, hierarchy=HIER)
+    for engine, mesh_spec in (("sharded", MESH_POD1D),
+                              ("sharded2d", MESH_POD2D)):
+        yield engine, hbase, mesh_spec
+        yield (engine,
+               base.merged(num_rounds=HIER_ROUNDS,
+                           hierarchy=HIER + ",compression=int8"),
+               mesh_spec)
+    yield "sharded", hbase.merged(quorum=0.75), MESH_POD1D
+    yield "scan", hbase, None
+    yield "batch", hbase, None
 
 
 def _make_mesh(mesh_spec):
@@ -191,6 +212,10 @@ def main(argv=None) -> int:
                          "contracts instead of failing on drift")
     ap.add_argument("--engine", nargs="*", default=None,
                     help="restrict to these engines")
+    ap.add_argument("--options", nargs="*", default=None,
+                    help="restrict to combinations whose contract key "
+                         "contains ALL of these substrings (e.g. "
+                         "--options hier= comp=int8)")
     ap.add_argument("--registry", default=None,
                     help="path to CONTRACTS.json (default: repo root)")
     args = ap.parse_args(argv)
@@ -208,10 +233,15 @@ def main(argv=None) -> int:
               f"before python starts", file=sys.stderr)
         return 1
 
+    from .contracts import contract_key
+
     new_registry = {}
     n_fail = 0
     for engine, opts, mesh_spec in _configs():
         if args.engine and engine not in args.engine:
+            continue
+        if args.options and not all(s in contract_key(engine, opts)
+                                    for s in args.options):
             continue
         key, derived, failures = audit_one(engine, opts, mesh_spec,
                                            registry, update=args.update)
@@ -223,6 +253,9 @@ def main(argv=None) -> int:
             print(f"       {f}")
 
     if args.update:
+        if args.engine or args.options:
+            # a filtered update must not drop the unaudited entries
+            new_registry = {**registry, **new_registry}
         save_registry(new_registry, path)
         print(f"wrote {len(new_registry)} contracts to {path}")
         return 0

@@ -170,13 +170,20 @@ def save_registry(registry: dict, path: str | None = None) -> str:
 def contract_key(engine: str, opts) -> str:
     """Canonical registry key for an engine × options combination."""
     comp = opts.compression_spec()
-    return "|".join([
+    parts = [
         engine,
         f"comp={comp.kind if comp is not None else 'none'}",
         f"quorum={'on' if opts.quorum_spec() is not None else 'off'}",
         f"overlap={'on' if opts.overlap else 'off'}",
         f"rank={opts.hessian_rank if opts.hessian_rank else 'none'}",
-    ])
+    ]
+    hspec = opts.hierarchy_spec()
+    if hspec is not None:
+        tag = f"hier=p{hspec.pods}k{hspec.period}"
+        if hspec.compression is not None:
+            tag += f"-{hspec.compression}"
+        parts.append(tag)
+    return "|".join(parts)
 
 
 # --------------------------------------------------------------------------
@@ -198,10 +205,37 @@ def _payload_window(comp, nbytes_f32: int):
     return nbytes_f32, nbytes_f32 + PARAM_SLACK, ("f32",)
 
 
+def _hier_window(kind: str | None, nbytes_f32: int):
+    """Payload window of the inter-pod exchange (``HierarchySpec
+    .compression`` is a bare kind string, not a CompressionSpec)."""
+    if kind == "int8":
+        n = nbytes_f32 // 4
+        return n, n + COMPRESSED_SLACK + PARAM_SLACK, ("s8",)
+    if kind == "bf16":
+        n = nbytes_f32 // 2
+        return n, n + PARAM_SLACK, ("bf16",)
+    return nbytes_f32, nbytes_f32 + PARAM_SLACK, ("f32",)
+
+
+def _pod_budget(hspec, rounds: int, dim: int, pods: int, pod_axis: str):
+    """The inter-pod exchange budget: one param-sized pod-axis psum per
+    EXCHANGE (every ``period`` rounds — multiplier T/period, the nested
+    outer scan's trip count), or ``None`` when a single exchange window
+    makes the outer loop degenerate (the psum leaves the loop)."""
+    exchanges = rounds // hspec.period
+    if exchanges <= 1:
+        return None
+    lo, hi, dts = _hier_window(hspec.compression, dim * 4)
+    return CollectiveBudget(axis=pod_axis if pods > 1 else "replicated",
+                            count=1, min_bytes=lo, max_bytes=hi,
+                            dtypes=dts, multipliers=(exchanges,))
+
+
 def engine_contract(engine: str, opts, *, dim: int, num_workers: int,
                     mesh_shape: tuple[int, ...] = (),
                     mesh_axes: tuple[str, ...] = (),
-                    data_axis: str = "data", model_axis: str = "model"):
+                    data_axis: str = "data", model_axis: str = "model",
+                    pod_axis: str = "pod"):
     """Expected (CommContract, MemoryContract | None) for an engine run.
 
     The single-device engines (scan / batch / reference) promise ZERO
@@ -218,28 +252,49 @@ def engine_contract(engine: str, opts, *, dim: int, num_workers: int,
     explicit ``axis="replicated"`` attribution (see
     ``hlo_analysis.collective_axes``); the 1-device mesh path is
     regression-tested on this.
+
+    With ``opts.hierarchy`` set, both sharded engines additionally
+    promise ONE param-sized pod-axis psum per exchange window — its
+    multiplier is ``num_rounds // period`` (the nested outer scan's trip
+    count), its payload window follows the hierarchy's own compression
+    kind — while the intra-pod data-axis psum stays exactly one per
+    round.  That multiplier gap IS the bytes-reduced-by-period claim the
+    audit proves on compiled HLO.
     """
     T = int(opts.num_rounds)
     comp = opts.compression_spec()
+    hspec = opts.hierarchy_spec()
     if engine in ("scan", "batch", "reference"):
         comm = CommContract(mesh_axes=(), mesh_shape=(), rounds=T,
                             budgets=(), small_max_bytes=0,
                             in_loop_only=False, require_classified=False)
         return comm, None
     if engine == "sharded":
-        (n_data,) = mesh_shape
-        axis = mesh_axes[0] if n_data > 1 else "replicated"
+        if data_axis in mesh_axes:
+            daxis = data_axis
+        else:                       # historical 1-axis audit mesh
+            (daxis,) = mesh_axes
+        n_data = mesh_shape[mesh_axes.index(daxis)]
+        pods = (mesh_shape[mesh_axes.index(pod_axis)]
+                if hspec is not None else 1)
+        axis = daxis if n_data > 1 else "replicated"
         lo, hi, dts = _payload_window(comp, dim * 4)
+        budgets = [CollectiveBudget(axis=axis, count=1, min_bytes=lo,
+                                    max_bytes=hi, dtypes=dts,
+                                    multipliers=(T,))]
+        if hspec is not None:
+            pb = _pod_budget(hspec, T, dim, pods, pod_axis)
+            if pb is not None:
+                budgets.append(pb)
         comm = CommContract(
             mesh_axes=mesh_axes, mesh_shape=mesh_shape, rounds=T,
-            budgets=(CollectiveBudget(axis=axis, count=1, min_bytes=lo,
-                                      max_bytes=hi, dtypes=dts,
-                                      multipliers=(T,)),),
-            small_max_bytes=PARAM_SLACK)
+            budgets=tuple(budgets), small_max_bytes=PARAM_SLACK)
         return comm, None
     if engine == "sharded2d":
         n_data = mesh_shape[mesh_axes.index(data_axis)]
         n_model = mesh_shape[mesh_axes.index(model_axis)]
+        pods = (mesh_shape[mesh_axes.index(pod_axis)]
+                if hspec is not None else 1)
         pshard = dim // n_model
         panel_bytes = pshard * dim * 4
         d_axis = data_axis if n_data > 1 else "replicated"
@@ -249,6 +304,12 @@ def engine_contract(engine: str, opts, *, dim: int, num_workers: int,
         budgets = [CollectiveBudget(axis=d_axis, count=1, min_bytes=lo,
                                     max_bytes=hi, dtypes=dts,
                                     multipliers=(T,))]
+        if hspec is not None:
+            # the exchange averages the FULL replicated iterate, so its
+            # payload is d floats even on the dimension-sharded engine
+            pb = _pod_budget(hspec, T, dim, pods, pod_axis)
+            if pb is not None:
+                budgets.append(pb)
         if opts.curvature == "dense":
             # blocked forward/backward solve: model-axis psums of at most
             # the full d-vector, once per round

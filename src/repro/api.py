@@ -34,6 +34,10 @@ Engine-compatibility rules enforced here, before any trace:
 * ``hessian_rank`` (the low-rank [H]_μ init) exists only where the
   dense init materializes per-worker Hessians — the reference oracle
   and the panel-sharded 2-D dense init reject it;
+* ``hierarchy="pods=..."`` (pod-of-pods aggregation) exists on the
+  compiled engines only — the eager reference oracle rejects it; on the
+  sharded engines the ``mesh`` must carry the ``pod_axis`` with exactly
+  ``pods`` shards (checked at trace);
 * a :class:`~repro.hetero.controller.QuorumController` unwraps: its
   quorum knobs move onto the options (setting ``options.quorum`` too is
   a conflict) and its inner controller drives mask allocation.
@@ -92,6 +96,11 @@ def _resolve(engine, options, mesh, controller, overrides):
             raise ValueError("the reference engine is the dense-eigh "
                              "oracle — hessian_rank has no host-loop "
                              "form (use engine='scan')")
+        if opts.hierarchy is not None:
+            raise ValueError("hierarchy= (pod-of-pods aggregation) has "
+                             "no host-loop form on the reference oracle "
+                             "— use engine='scan' or a sharded engine "
+                             "on a pod mesh")
     if engine == "sharded2d" and opts.hessian_rank is not None:
         raise ValueError(
             "hessian_rank is not implementable on the 2-D engine: its "
@@ -116,8 +125,8 @@ def _resolve(engine, options, mesh, controller, overrides):
 def run(problem, key, *, engine: str = "scan",
         options: RanlOptions | None = None, mesh=None,
         axis_name: str = "data", data_axis: str = "data",
-        model_axis: str = "model", controller=None, cost=None,
-        **overrides):
+        model_axis: str = "model", pod_axis: str = "pod",
+        controller=None, cost=None, **overrides):
     """Run Algorithm 1 on ``problem`` with the chosen engine.
 
     ``key``: a PRNG key — or (B,)-stacked keys for ``engine="batch"``
@@ -138,12 +147,13 @@ def run(problem, key, *, engine: str = "scan",
                           cost=cost)
     if engine == "sharded":
         return _run_sharded(problem, key, opts, mesh=mesh,
-                            axis_name=axis_name, controller=controller,
-                            cost=cost)
+                            axis_name=axis_name, pod_axis=pod_axis,
+                            controller=controller, cost=cost)
     if engine == "sharded2d":
         return _run_sharded2d(problem, key, opts, mesh=mesh,
                               data_axis=data_axis, model_axis=model_axis,
-                              controller=controller, cost=cost)
+                              pod_axis=pod_axis, controller=controller,
+                              cost=cost)
     return _run_reference(problem, key, opts, controller=controller,
                           cost=cost)
 
@@ -151,8 +161,8 @@ def run(problem, key, *, engine: str = "scan",
 def lower(problem, key, *, engine: str = "sharded",
           options: RanlOptions | None = None, mesh=None,
           axis_name: str = "data", data_axis: str = "data",
-          model_axis: str = "model", controller=None, cost=None,
-          **overrides):
+          model_axis: str = "model", pod_axis: str = "pod",
+          controller=None, cost=None, **overrides):
     """Lower (without running) a sharded engine's program.
 
     Returns the ``jax.stages.Lowered`` for exactly the computation
@@ -169,18 +179,19 @@ def lower(problem, key, *, engine: str = "sharded",
                                 overrides)
     if engine == "sharded":
         return _lower_sharded(problem, key, opts, mesh=mesh,
-                              axis_name=axis_name, controller=controller,
-                              cost=cost)
+                              axis_name=axis_name, pod_axis=pod_axis,
+                              controller=controller, cost=cost)
     return _lower_sharded2d(problem, key, opts, mesh=mesh,
                             data_axis=data_axis, model_axis=model_axis,
-                            controller=controller, cost=cost)
+                            pod_axis=pod_axis, controller=controller,
+                            cost=cost)
 
 
 def trace(problem, key, *, engine: str = "scan",
           options: RanlOptions | None = None, mesh=None,
           axis_name: str = "data", data_axis: str = "data",
-          model_axis: str = "model", controller=None, cost=None,
-          **overrides):
+          model_axis: str = "model", pod_axis: str = "pod",
+          controller=None, cost=None, **overrides):
     """Trace (without running) any engine's FULL program to a closed
     jaxpr — init phase and round loop.
 
@@ -196,5 +207,5 @@ def trace(problem, key, *, engine: str = "scan",
                                 overrides)
     return trace_ranl(problem, key, opts, engine=engine, mesh=mesh,
                       axis_name=axis_name, data_axis=data_axis,
-                      model_axis=model_axis, controller=controller,
-                      cost=cost)
+                      model_axis=model_axis, pod_axis=pod_axis,
+                      controller=controller, cost=cost)

@@ -183,6 +183,36 @@ def psum_compressed(comp: CompressionSpec, y, err, *, axis_name: str,
     return jax.lax.psum(sent, axis_name), y - sent
 
 
+def pod_sum_compressed(comp: CompressionSpec, y, err):
+    """Single-program mirror of ``psum_compressed`` over a leading axis.
+
+    The scan engine's inter-pod exchange: ``y`` is the (P, d) stack of
+    per-pod payloads (one row per pod where the sharded engines hold one
+    shard per device), ``err`` the matching error-feedback carry.
+    Returns ``(total, new_err)`` with ``total`` the (d,) decoded sum —
+    bit-identical to what ``psum_compressed`` over a pod mesh axis of
+    extent P computes, so scan-vs-sharded hierarchical parity holds: the
+    int8 shared scale is the max over pods (the ``pmax``), each pod
+    clips to ``±(127 // P)`` levels, and bf16 sums the rounded payloads.
+    ``topk`` is intra-pod-only and rejected at option parse time.
+    """
+    n_agg = y.shape[0]
+    y = y + err
+    if comp.kind == "int8":
+        scale = jnp.max(jnp.abs(y))
+        cap = max(127 // max(int(n_agg), 1), 1)
+        step = jnp.maximum(scale, _EPS) / cap
+        q = jnp.clip(jnp.round(y / step), -cap, cap).astype(jnp.int8)
+        sent = q.astype(y.dtype) * step
+        total = q.astype(jnp.int32).sum(axis=0).astype(y.dtype) * step
+        return total, y - sent
+    if comp.kind == "bf16":
+        sent = y.astype(jnp.bfloat16).astype(y.dtype)
+        return sent.sum(axis=0), y - sent
+    raise ValueError(f"pod exchange compression {comp.kind!r} is not "
+                     f"supported (int8/bf16 only)")
+
+
 def uplink_bytes(comp: CompressionSpec | None, M, sizes_q):
     """(N,) modeled uplink bytes per worker for one round's mask ``M``.
 

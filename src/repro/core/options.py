@@ -78,6 +78,20 @@ class RanlOptions:
     * ``hessian_rank``: fold only the top-r eigenpairs of workers'
       init-phase Hessians into [H]_μ via Cholesky rank-1 updates
       (``None`` = the exact dense init).
+
+    Hierarchical pod-of-pods aggregation (``None`` = flat — bit-exact
+    default):
+
+    * ``hierarchy``: ``"pods=P,period=k[,gamma=g][,compression=int8]"``
+      — split the worker axis into ``P`` pods.  Intra-pod rounds keep
+      the exact data-axis psum unchanged; pods exchange their
+      accumulated region-update mass over the ``"pod"`` mesh axis only
+      every ``period`` rounds (one pod-axis psum per exchange,
+      optionally int8/bf16-compressed with its own error-feedback
+      residual), then damp pod iterates toward the exact global
+      consensus with weight ``gamma``.  Between exchanges each pod runs
+      on remote-pod gradient mass that is up to ``period`` rounds stale
+      — the hierarchy's staleness bound.
     """
     num_rounds: int = 30
     num_regions: int = 8
@@ -97,6 +111,7 @@ class RanlOptions:
     max_delay: int = 2
     compression: str | None = None
     hessian_rank: int | None = None
+    hierarchy: str | None = None
 
     def __post_init__(self):
         if not isinstance(self.policy, PolicyConfig):
@@ -139,6 +154,7 @@ class RanlOptions:
         if self.hessian_rank is not None and self.hessian_rank < 1:
             raise ValueError(f"hessian_rank={self.hessian_rank} must be "
                              f">= 1 (or None for the dense init)")
+        parse_hierarchy(self.hierarchy)
 
     def merged(self, **overrides) -> "RanlOptions":
         """A copy with ``overrides`` applied (unknown keys raise)."""
@@ -161,6 +177,74 @@ class RanlOptions:
         record the engines branch on; ``None`` = uncompressed)."""
         from .compression import parse_compression
         return parse_compression(self.compression)
+
+    def hierarchy_spec(self) -> "HierarchySpec | None":
+        """-> :class:`HierarchySpec` | None (``None`` = flat — the
+        engines compile the historical computation unchanged)."""
+        return parse_hierarchy(self.hierarchy)
+
+
+@dataclass(frozen=True)
+class HierarchySpec:
+    """The static pod-of-pods parameters the compiled round loops branch
+    on (``None`` in ``RanlOptions.hierarchy`` means no such record and
+    the flat engines compile bit-exact).
+
+    * ``pods``: number of pods the worker axis splits into (``pods=1``
+      degenerates to a flat run with the hierarchical bookkeeping —
+      parity-tested against the flat engines);
+    * ``period``: rounds between inter-pod exchanges; also the
+      hierarchy's staleness bound (remote-pod mass is at most ``period``
+      rounds old).  ``num_rounds % period == 0`` is checked at dispatch;
+    * ``gamma``: consensus damping — pod iterates move
+      ``x_p += gamma * (x̄ - x_p)`` at each exchange (``gamma=1``
+      snaps every pod to the exact global consensus iterate);
+    * ``compression``: ``None`` | ``"int8"`` | ``"bf16"`` — compress
+      the inter-pod exchange payload (its error-feedback residual rides
+      the outer scan carry; ``topk`` is intra-pod-only and rejected).
+    """
+    pods: int = 2
+    period: int = 1
+    gamma: float = 1.0
+    compression: str | None = None
+
+
+def parse_hierarchy(spec: str | None) -> HierarchySpec | None:
+    """``"pods=P,period=k[,gamma=g][,compression=int8|bf16]"`` ->
+    :class:`HierarchySpec` (``None``/empty -> ``None``)."""
+    if spec is None or spec == "":
+        return None
+    if isinstance(spec, HierarchySpec):
+        return spec
+    params = {}
+    for item in str(spec).split(","):
+        k, sep, v = item.partition("=")
+        if not sep or not k.strip():
+            raise ValueError(f"bad hierarchy item {item!r} in {spec!r} "
+                             f"(expected key=value)")
+        params[k.strip()] = v.strip()
+    unknown = set(params) - {"pods", "period", "gamma", "compression"}
+    if unknown:
+        raise ValueError(f"unknown hierarchy key(s) {sorted(unknown)} in "
+                         f"{spec!r} (known: pods, period, gamma, "
+                         f"compression)")
+    if "pods" not in params:
+        raise ValueError(f"hierarchy={spec!r} must set pods=P")
+    pods = int(params["pods"])
+    period = int(params.get("period", 1))
+    gamma = float(params.get("gamma", 1.0))
+    comp = params.get("compression") or None
+    if pods < 1:
+        raise ValueError(f"hierarchy pods={pods} must be >= 1")
+    if period < 1:
+        raise ValueError(f"hierarchy period={period} must be >= 1")
+    if not 0.0 < gamma <= 1.0:
+        raise ValueError(f"hierarchy gamma={gamma} must be in (0, 1]")
+    if comp is not None and comp not in ("int8", "bf16"):
+        raise ValueError(f"hierarchy compression={comp!r} must be None, "
+                         f"'int8' or 'bf16' (topk is intra-pod only)")
+    return HierarchySpec(pods=pods, period=period, gamma=gamma,
+                         compression=comp)
 
 
 @dataclass(frozen=True)

@@ -112,13 +112,14 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from .aggregation import late_fold_updates, quorum_aggregate, \
     server_aggregate
 from .compression import CompressionSpec, compressed_quorum_aggregate, \
-    compressed_server_aggregate, lowrank_hmu_factor, psum_compressed, \
-    uplink_bytes
+    compressed_server_aggregate, lowrank_hmu_factor, parse_compression, \
+    pod_sum_compressed, psum_compressed, uplink_bytes
 from .hessian import hutchinson_diag, project_diag, project_psd, \
     project_psd_ns, project_psd_ns_panels, running_mean_hessian, \
     solve_projected
 from .masks import PolicyConfig
-from .options import EngineDeprecationWarning, QuorumSpec, RanlOptions
+from .options import EngineDeprecationWarning, HierarchySpec, QuorumSpec, \
+    RanlOptions
 from .regions import contiguous_regions, expand_mask, region_sizes
 
 
@@ -149,6 +150,16 @@ class RanlResult:
                                # transmitted per round (the
                                # core.compression wire model;
                                # 4 · comm_floats when uncompressed)
+    pod_bytes: jnp.ndarray = None    # (T,) modeled INTER-POD bytes per
+                               # round: hierarchical runs meter their
+                               # exchange wire (attributed to each
+                               # window's last round), flat runs on a
+                               # pod topology (cost.pod_bw set) pay the
+                               # param aggregate's crossing every round
+    xs_pods: jnp.ndarray = None      # (T+2, P, d) pod-resolved iterates of
+                               # a hierarchical run (``xs`` is their pod
+                               # mean — the consensus estimate); None
+                               # for flat runs
 
 
 def _init_phase(problem, k_init, *, mu: float, lr: float, curvature: str,
@@ -287,9 +298,38 @@ def _hetero_defaults(problem, policy, controller, cost):
     return ctrl, cost
 
 
+def _pod_wire_bytes(comp: CompressionSpec | None, n_coords: int) -> float:
+    """Modeled bytes for an ``n_coords``-float payload crossing the
+    inter-pod links under the ``core.compression`` wire model (int8: one
+    byte per coordinate plus the 4-byte shared scale; bf16: two;
+    uncompressed/topk: four) — the single source of
+    ``RanlResult.pod_bytes`` and the ``pod_exchange_time`` charge."""
+    if comp is None:
+        return 4.0 * n_coords
+    if comp.kind == "int8":
+        return float(n_coords) + 4.0
+    if comp.kind == "bf16":
+        return 2.0 * n_coords
+    return 4.0 * n_coords
+
+
+def _check_hier(problem, hspec: HierarchySpec | None, num_rounds: int):
+    """Dispatch-time divisibility checks shared by every engine."""
+    if hspec is None:
+        return
+    if problem.num_workers % hspec.pods:
+        raise ValueError(
+            f"num_workers={problem.num_workers} must divide evenly "
+            f"across hierarchy pods={hspec.pods}")
+    if num_rounds > 0 and num_rounds % hspec.period:
+        raise ValueError(
+            f"num_rounds={num_rounds} must be a multiple of the "
+            f"hierarchy exchange period={hspec.period}")
+
+
 _ROUND_STATIC = ("num_rounds", "num_regions", "controller", "mu", "lr",
                  "curvature", "use_kernel", "interpret", "cho_lower",
-                 "qspec", "comp")
+                 "qspec", "comp", "hspec")
 
 
 def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
@@ -297,7 +337,8 @@ def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
                  lr: float, curvature: str, use_kernel: bool,
                  interpret: bool | None, cho_lower: bool,
                  qspec: QuorumSpec | None = None,
-                 comp: CompressionSpec | None = None):
+                 comp: CompressionSpec | None = None,
+                 hspec: HierarchySpec | None = None):
     """Alg. 1 lines 9–23 as one ``lax.scan``; returns the full result set
     (xs, dist_sq, losses, coverage, comm, tau, times, stale) as arrays.
 
@@ -321,15 +362,28 @@ def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
     bypassed (it has no EF form).  ``comp=None`` is a static branch —
     the uncompressed loop compiles unchanged (no residual in the
     carry), which is the bit-exactness rail the tests pin.
+
+    ``hspec`` switches on hierarchical pod-of-pods rounds (a separate
+    loop — see ``_hier_scan_rounds``); ``hspec=None`` compiles the flat
+    loop unchanged, except that a cost model with an attached pod
+    topology (``cost.pod_bw`` — a static pytree branch) charges every
+    flat round the param aggregate's inter-pod crossing.
     """
     from ..hetero.controller import initial_telemetry, next_telemetry
-    from ..hetero.cost import quorum_split, worker_times
+    from ..hetero.cost import pod_exchange_time, quorum_split, worker_times
+    if hspec is not None and num_rounds > 0:
+        return _hier_scan_rounds(
+            problem, k_loop, x1, C0, cho_c, hdiag, cost,
+            num_rounds=num_rounds, num_regions=num_regions,
+            controller=controller, mu=mu, lr=lr, curvature=curvature,
+            cho_lower=cho_lower, qspec=qspec, comp=comp, hspec=hspec)
     N, d = problem.num_workers, problem.dim
     Q = num_regions
     region_ids = contiguous_regions(d, Q)
     sizes_q = region_sizes(region_ids, Q)
     worker_ids = jnp.arange(N)
     grad_pruned = jax.vmap(problem.worker_grad, in_axes=(0, 0, 0))
+    pod_wire = _pod_wire_bytes(comp, d)
 
     def body(carry, t):
         x, C, err, late_buf, ctrl_state, telem = carry
@@ -387,11 +441,18 @@ def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
             telem = _observe_round(cost, telem, M, count_q, sizes_q, t,
                                    ubytes)
             round_t = telem.times.max()
+        if cost.pod_bw is not None:
+            # flat rounds on a pod topology: the param aggregate crosses
+            # every inter-pod link every round
+            round_t = round_t + pod_exchange_time(cost, pod_wire)
+            pb = jnp.float32(pod_wire)
+        else:
+            pb = jnp.float32(0.0)
         cov_mean, min_count, min_cov_count = _round_diagnostics(
             count_q > 0, count_q, N)
         return (x, C, err, late_buf, ctrl_state, telem), (
             x, cov_mean, Mx.sum(), min_count, min_cov_count,
-            round_t, telem.stale_q.max(), ubytes.sum())
+            round_t, telem.stale_q.max(), ubytes.sum(), pb)
 
     x0 = jnp.zeros(d)
     late_buf0 = (() if qspec is None
@@ -402,7 +463,7 @@ def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
         carry0 = (x1, C0, err0, late_buf0, controller.init_state(N, Q),
                   initial_telemetry(N, Q))
         _, (xs_t, cov, comm, min_counts, min_cov_counts, times,
-            stale, cbytes) = jax.lax.scan(body, carry0, ts)
+            stale, cbytes, pbytes) = jax.lax.scan(body, carry0, ts)
         xs = jnp.concatenate([jnp.stack([x0, x1]), xs_t], axis=0)
         tau, tau_cov = _tau_pair(min_counts, min_cov_counts, N)
     else:
@@ -414,10 +475,174 @@ def _scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
         times = jnp.zeros((0,))
         stale = jnp.zeros((0,), jnp.int32)
         cbytes = jnp.zeros((0,))
+        pbytes = jnp.zeros((0,))
 
     dist = jnp.sum((xs - problem.x_star[None, :]) ** 2, axis=1)
     losses = jax.vmap(problem.loss)(xs)
-    return xs, dist, losses, cov, comm, tau, tau_cov, times, stale, cbytes
+    return (xs, dist, losses, cov, comm, tau, tau_cov, times, stale,
+            cbytes, pbytes)
+
+
+def _hier_scan_rounds(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
+                      num_rounds: int, num_regions: int, controller,
+                      mu: float, lr: float, curvature: str,
+                      cho_lower: bool, qspec: QuorumSpec | None,
+                      comp: CompressionSpec | None, hspec: HierarchySpec):
+    """Hierarchical pod-of-pods rounds in one program (scan engine).
+
+    The worker axis splits into ``hspec.pods`` contiguous pods; each pod
+    runs the EXACT flat round math on its own sub-population — pod-local
+    coverage counts and denominators, pod-local memory fallback ``C/N_p``
+    (the per-pod ``vmap`` of ``server_aggregate`` and the quorum/
+    compression aggregators gives this for free), pod-local quorum
+    deadlines — against its own iterate ``x_p``.  Every ``period``
+    rounds the pods exchange anchored deltas and damp toward consensus:
+
+        Δ_p = x_p − anchor;  x̄ = anchor + (Σ_p Δ_p) / P
+        x_p += γ · (x̄ − x_p);  anchor = x̄
+
+    (``anchor`` starts at the replicated post-init iterate, so the first
+    exchange's deltas are exactly the accumulated pod drift).  The
+    anchored-delta form is what the optional int8/bf16 exchange
+    compression quantizes — small when pods agree — with its own
+    error-feedback residual in the OUTER carry
+    (``pod_sum_compressed``, bit-matching the sharded engines'
+    ``psum_compressed`` over the pod mesh axis).  The loop is a nested
+    scan — outer over the ``num_rounds/period`` exchange windows, inner
+    over the window's rounds — which in the sharded engines is precisely
+    what makes the pod-axis collective's HLO loop multiplier E =
+    num_rounds/period instead of num_rounds: the
+    inter-pod-bytes-shrink-by-period claim, proven on compiled HLO.
+
+    ``pods=1`` degenerates to the flat trajectory (the parity rail);
+    exchange wire bytes land in the ``pod_bytes`` trace on each window's
+    last round, and ``pod_exchange_time`` joins that round's clock when
+    the cost model carries a pod topology.  The fused diag kernel has no
+    pod-resolved form, so this path always takes the jnp aggregation.
+    Returns the 11-tuple of ``_scan_rounds`` with ``xs`` carrying an
+    extra pod axis: (T+2, P, d) — the caller publishes the pod mean.
+    """
+    from ..hetero.controller import initial_telemetry, next_telemetry
+    from ..hetero.cost import pod_exchange_time, quorum_split, worker_times
+    N, d = problem.num_workers, problem.dim
+    pods, period = hspec.pods, hspec.period
+    n_pod = N // pods
+    Q = num_regions
+    region_ids = contiguous_regions(d, Q)
+    sizes_q = region_sizes(region_ids, Q)
+    worker_ids = jnp.arange(N)
+    grad_pruned = jax.vmap(problem.worker_grad, in_axes=(0, 0, 0))
+    hcomp = parse_compression(hspec.compression)
+    pod_wire = _pod_wire_bytes(hcomp, d)
+
+    def body(carry, t):
+        x, C, err, late_buf, ctrl_state, telem = carry   # x: (P, d)
+        kt = jax.random.fold_in(k_loop, t)
+        M, ctrl_state = _controller_mask(controller, cost, ctrl_state,
+                                         telem, kt, t, N, Q)
+        Mx = expand_mask(M, region_ids)                  # (N, d) bool
+        x_w = jnp.repeat(x, n_pod, axis=0)               # worker's pod iterate
+        x_pruned = jnp.where(Mx, x_w, 0.0)
+        gk = jax.random.split(jax.random.fold_in(kt, 7), N)
+        G = grad_pruned(worker_ids, x_pruned, gk) * Mx
+        ubytes = uplink_bytes(comp, M, sizes_q)
+        Gp = G.reshape(pods, n_pod, d)
+        Mxp = Mx.reshape(pods, n_pod, d)
+        Mp = M.reshape(pods, n_pod, Q)
+        Cp = C.reshape(pods, n_pod, d)
+        if qspec is not None:
+            work = (M * sizes_q[None, :]).sum(axis=1)
+            times = worker_times(cost, work, t, ubytes)
+            split = functools.partial(
+                quorum_split, quorum=qspec.quorum,
+                quorum_tau=qspec.quorum_tau, max_delay=qspec.max_delay)
+            deadline_p, on_p, delays_p = jax.vmap(split)(
+                times.reshape(pods, n_pod), Mp)
+            if comp is None:
+                agg = functools.partial(quorum_aggregate,
+                                        gamma=qspec.gamma,
+                                        max_delay=qspec.max_delay)
+                g_p, Cp, late_buf = jax.vmap(agg)(Gp, Mxp, Cp, on_p,
+                                                  delays_p, late_buf)
+            else:
+                agg = functools.partial(compressed_quorum_aggregate,
+                                        comp=comp, region_ids=region_ids,
+                                        num_regions=Q, gamma=qspec.gamma,
+                                        max_delay=qspec.max_delay)
+                errp = err.reshape(pods, n_pod, d)
+                g_p, Cp, errp, late_buf = jax.vmap(agg)(
+                    Gp, Mxp, Cp, errp, on_p, delays_p, late_buf)
+                err = errp.reshape(N, d)
+            count_pq = (Mp & on_p[:, :, None]).sum(axis=1)   # (P, Q)
+            telem = next_telemetry(telem, count_pq.sum(axis=0), work,
+                                   times)
+            round_t = deadline_p.max()
+        else:
+            if comp is None:
+                g_p, Cp = jax.vmap(server_aggregate)(Gp, Mxp, Cp)
+            else:
+                agg = functools.partial(compressed_server_aggregate,
+                                        comp=comp, region_ids=region_ids,
+                                        num_regions=Q)
+                errp = err.reshape(pods, n_pod, d)
+                g_p, Cp, errp = jax.vmap(agg)(Gp, Mxp, Cp, errp)
+                err = errp.reshape(N, d)
+            count_pq = Mp.sum(axis=1)                        # (P, Q)
+            telem = _observe_round(cost, telem, M, count_pq.sum(axis=0),
+                                   sizes_q, t, ubytes)
+            round_t = telem.times.max()
+        C = Cp.reshape(N, d)
+        if curvature == "dense":
+            step = jax.vmap(
+                lambda g: jax.scipy.linalg.cho_solve((cho_c, cho_lower),
+                                                     g))(g_p)
+        else:
+            step = g_p / project_diag(hdiag, mu)[None, :]
+        x = x - lr * step
+        cov_mean, min_count, min_cov_count = _round_diagnostics(
+            count_pq > 0, count_pq, n_pod)
+        return (x, C, err, late_buf, ctrl_state, telem), (
+            x, cov_mean, Mx.sum(), min_count, min_cov_count,
+            round_t, telem.stale_q.max(), ubytes.sum(), jnp.float32(0.0))
+
+    def window(ocarry, w):
+        carry, anchor, err_pod = ocarry
+        ts_w = w * period + jnp.arange(1, period + 1)
+        carry, outs = jax.lax.scan(body, carry, ts_w)
+        x = carry[0]
+        delta = x - anchor[None, :]                      # (P, d)
+        if hcomp is None:
+            total = delta.sum(axis=0)
+        else:
+            total, err_pod = pod_sum_compressed(hcomp, delta, err_pod)
+        xbar = anchor + total / pods
+        x = x + hspec.gamma * (xbar[None, :] - x)
+        ex_t = pod_exchange_time(cost, pod_wire)
+        outs = (outs[:5] + (outs[5].at[-1].add(ex_t),) + outs[6:8]
+                + (outs[8].at[-1].add(pod_wire),))
+        return ((x,) + carry[1:], xbar, err_pod), outs
+
+    x0 = jnp.zeros(d)
+    late_buf0 = (() if qspec is None
+                 else jnp.zeros((pods, qspec.max_delay, d)))
+    err0 = (() if comp is None else jnp.zeros((N, d)))
+    err_pod0 = (() if hcomp is None else jnp.zeros((pods, d)))
+    carry0 = (jnp.tile(x1[None, :], (pods, 1)), C0, err0, late_buf0,
+              controller.init_state(N, Q), initial_telemetry(N, Q))
+    _, outs = jax.lax.scan(window, (carry0, x1, err_pod0),
+                           jnp.arange(num_rounds // period))
+    (xs_t, cov, comm, min_counts, min_cov_counts, times, stale, cbytes,
+     pbytes) = jax.tree.map(
+        lambda a: a.reshape((num_rounds,) + a.shape[2:]), outs)
+    xs = jnp.concatenate(
+        [jnp.stack([jnp.tile(x0[None, :], (pods, 1)),
+                    jnp.tile(x1[None, :], (pods, 1))]), xs_t], axis=0)
+    tau, tau_cov = _tau_pair(min_counts, min_cov_counts, n_pod)
+    xbar_t = xs.mean(axis=1)                             # (T+2, d) consensus
+    dist = jnp.sum((xbar_t - problem.x_star[None, :]) ** 2, axis=1)
+    losses = jax.vmap(problem.loss)(xbar_t)
+    return (xs, dist, losses, cov, comm, tau, tau_cov, times, stale,
+            cbytes, pbytes)
 
 
 _rounds_jit = functools.partial(
@@ -425,13 +650,15 @@ _rounds_jit = functools.partial(
 
 _BATCH_STATIC = ("num_rounds", "num_regions", "controller", "mu", "lr",
                  "curvature", "use_kernel", "interpret", "hutch_samples",
-                 "projection", "ns_iters", "qspec", "comp", "hessian_rank")
+                 "projection", "ns_iters", "qspec", "comp", "hessian_rank",
+                 "hspec")
 
 
 def _ranl_batch_engine(problem, keys, cost, *, num_rounds, num_regions,
                        controller, mu, lr, curvature, use_kernel,
                        interpret, hutch_samples, projection, ns_iters,
-                       qspec=None, comp=None, hessian_rank=None):
+                       qspec=None, comp=None, hessian_rank=None,
+                       hspec=None):
     def one(key):
         k_init, k_loop = jax.random.split(key)
         x1, C0, cho_c, cho_lower, hdiag = _init_phase(
@@ -443,7 +670,7 @@ def _ranl_batch_engine(problem, keys, cost, *, num_rounds, num_regions,
                             controller=controller, mu=mu, lr=lr,
                             curvature=curvature, use_kernel=use_kernel,
                             interpret=interpret, cho_lower=cho_lower,
-                            qspec=qspec, comp=comp)
+                            qspec=qspec, comp=comp, hspec=hspec)
     return jax.vmap(one)(keys)
 
 
@@ -477,7 +704,9 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
                          controller, mu: float, lr: float,
                          curvature: str, cho_lower: bool, num_workers: int,
                          overlap: bool, qspec: QuorumSpec | None = None,
-                         comp: CompressionSpec | None = None):
+                         comp: CompressionSpec | None = None,
+                         pod_axis: str = "pod",
+                         hspec: HierarchySpec | None = None):
     """Per-device round loop (runs under ``shard_map``).
 
     ``problem``/``C0`` arrive worker-sharded (N/n_dev local workers);
@@ -518,8 +747,22 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
     error-feedback residual ``err`` (d,) in the scan carry.  The memory C
     and the late buffer stay device-local and exact.  ``comp=None`` is a
     static Python branch: the uncompressed loop compiles unchanged.
+
+    With ``hspec`` the loop is hierarchical: workers shard JOINTLY over
+    ``(pod_axis, axis_name)``, so every in-round collective — the count
+    psum and the ONE param-sized psum — reduces over ``axis_name`` only
+    and is therefore pod-local for free (pod-local coverage counts,
+    denominators and ``C/N_p`` fallback — the same round math each pod
+    of the scan engine's ``_hier_scan_rounds`` runs).  The scan nests:
+    outer over the ``num_rounds/period`` exchange windows, inner over
+    each window's rounds, and the ONLY ``pod_axis`` collective in the
+    whole loop is the anchored-delta exchange at the window tail —
+    one d-sized psum (optionally int8/bf16-compressed with its own
+    error-feedback residual) whose HLO loop multiplier is the window
+    count E, not the round count T.  That nesting is the
+    inter-pod-bytes-shrink-by-period contract the HLO auditor proves.
     """
-    from ..hetero.cost import quorum_split, worker_times
+    from ..hetero.cost import pod_exchange_time, quorum_split, worker_times
     from ..hetero.controller import initial_telemetry, next_telemetry
     N = num_workers                       # global worker count
     d = x1.shape[0]
@@ -527,10 +770,20 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
     region_ids = contiguous_regions(d, Q)
     sizes_q = region_sizes(region_ids, Q)
     n_local = problem.num_workers         # workers held by this shard
-    n_dev = max(N // max(n_local, 1), 1)  # devices joining the psum
+    n_dev = max(N // max(n_local, 1), 1)  # worker-axis devices in total
+    hier = hspec is not None
+    pods = hspec.pods if hier else 1
+    n_pop = N // pods                     # workers per pod (= N when flat)
+    n_data = max(n_pop // max(n_local, 1), 1)  # data-axis devices per pod
+    n_agg = n_data if hier else n_dev     # devices joining the param psum
     shard = jax.lax.axis_index(axis_name)
+    me_pod = jax.lax.axis_index(pod_axis) if hier else 0
+    start = (me_pod * n_data + shard) * n_local if hier else shard * n_local
     local_ids = jnp.arange(n_local)
     grad_pruned = jax.vmap(problem.worker_grad, in_axes=(0, 0, 0))
+    hcomp = parse_compression(hspec.compression) if hier else None
+    pod_wire = _pod_wire_bytes(comp, d)   # flat-on-topology charge
+    hier_wire = _pod_wire_bytes(hcomp, d)
 
     def sample_round(t, ctrl_state, telem):
         """Everything x-independent about round t: step the controller on
@@ -544,25 +797,46 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
         M_full, ctrl_state = _controller_mask(controller, cost, ctrl_state,
                                               telem, kt, t, N, Q)
         gk_full = jax.random.split(jax.random.fold_in(kt, 7), N)
-        start = shard * n_local
         M = jax.lax.dynamic_slice_in_dim(M_full, start, n_local)
         gk = jax.lax.dynamic_slice_in_dim(gk_full, start, n_local)
+        # pod-local counts under hier: same collective, per-pod values
         count_q = jax.lax.psum(M.sum(axis=0), axis_name)
         work = (M_full * sizes_q[None, :]).sum(axis=1)
         ubytes = uplink_bytes(comp, M_full, sizes_q)
-        times = worker_times(cost, work, t, ubytes)
+        times = worker_times(cost, work, t, ubytes, overlap=overlap)
         if qspec is None:
             qinfo = ()
+            # replicated display/telemetry counts (pod-resolved when hier)
+            count_disp = (M_full.reshape(pods, n_pop, Q).sum(axis=1)
+                          if hier else count_q)
+        elif hier:
+            split = functools.partial(
+                quorum_split, quorum=qspec.quorum,
+                quorum_tau=qspec.quorum_tau, max_delay=qspec.max_delay)
+            deadline_p, on_p, delays_p = jax.vmap(split)(
+                times.reshape(pods, n_pop), M_full.reshape(pods, n_pop, Q))
+            count_disp = (M_full.reshape(pods, n_pop, Q)
+                          & on_p[:, :, None]).sum(axis=1)        # (P, Q)
+            count_on_loc = jax.lax.dynamic_slice_in_dim(
+                count_disp, me_pod, 1)[0]                        # my pod's
+            qinfo = (count_disp,
+                     jax.lax.dynamic_slice_in_dim(on_p.reshape(N),
+                                                  start, n_local),
+                     jax.lax.dynamic_slice_in_dim(delays_p.reshape(N),
+                                                  start, n_local),
+                     deadline_p.max(), count_on_loc)
         else:
             deadline, on_time, delays = quorum_split(
                 times, M_full, quorum=qspec.quorum,
                 quorum_tau=qspec.quorum_tau, max_delay=qspec.max_delay)
             count_on = (M_full & on_time[:, None]).sum(axis=0)
+            count_disp = count_on
             qinfo = (count_on,
                      jax.lax.dynamic_slice_in_dim(on_time, start, n_local),
                      jax.lax.dynamic_slice_in_dim(delays, start, n_local),
-                     deadline)
-        return (M, gk, count_q, work, times, qinfo, ubytes), ctrl_state
+                     deadline, count_on)
+        return (M, gk, count_q, work, times, qinfo, ubytes,
+                count_disp), ctrl_state
 
     def _psum_payload(y, err):
         """The round's ONE param-sized all-reduce — compressed when
@@ -570,7 +844,7 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
         if comp is None:
             return jax.lax.psum(y, axis_name), err
         return psum_compressed(comp, y, err, axis_name=axis_name,
-                               n_agg=n_dev, region_ids=region_ids,
+                               n_agg=n_agg, region_ids=region_ids,
                                num_regions=Q)
 
     def round_update(x, C, err, late_buf, sampled):
@@ -584,7 +858,7 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
         the FULL count, so late γ-damped arrivals reconstruct the
         synchronous mean), the device-local late buffer's due row joins
         the same psum, and this round's late work enqueues."""
-        M, gk, count_q, work, times, qinfo, _ = sampled
+        M, gk, count_q, work, times, qinfo, _, _ = sampled
         Mx = expand_mask(M, region_ids)                  # (n_local, d)
         x_pruned = jnp.where(Mx, x[None, :], 0.0)
         G = grad_pruned(local_ids, x_pruned, gk) * Mx
@@ -592,14 +866,14 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
         denom = jnp.maximum(count_x, 1).astype(G.dtype)
         if qspec is None:
             covered_x = jnp.take(count_q > 0, region_ids)
-            contrib = jnp.where(covered_x[None, :], G / denom, C / N)
+            contrib = jnp.where(covered_x[None, :], G / denom, C / n_pop)
             g, err = _psum_payload(contrib.sum(axis=0), err)
             C = jnp.where(Mx, G, C)                      # device-local
             return g, C, err, Mx, late_buf
-        count_on, on_loc, delays_loc, _ = qinfo
-        covered_x = jnp.take(count_on > 0, region_ids)
+        on_loc, delays_loc = qinfo[1], qinfo[2]
+        covered_x = jnp.take(qinfo[4] > 0, region_ids)   # my pod's on-time
         fresh = jnp.where(on_loc[:, None], G, 0.0)
-        contrib = jnp.where(covered_x[None, :], fresh / denom, C / N)
+        contrib = jnp.where(covered_x[None, :], fresh / denom, C / n_pop)
         g, err = _psum_payload(contrib.sum(axis=0) + late_buf[0], err)
         adds = late_fold_updates(G, Mx, count_x.astype(G.dtype),
                                  delays_loc, gamma=qspec.gamma,
@@ -618,17 +892,29 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
         return x - lr * step
 
     def round_obs(sampled):
-        """(telemetry count, round-time trace value) for this round —
-        on-time counts and the quorum deadline in quorum mode."""
-        _, _, count_q, _, times, qinfo, _ = sampled
-        if qspec is None:
-            return count_q, times.max()
-        return qinfo[0], qinfo[3]
+        """(telemetry count, round-time trace, inter-pod bytes) for this
+        round — on-time counts and the quorum deadline in quorum mode.
+        The telemetry count is always GLOBAL (Q,); the display counts in
+        ``sampled[7]`` stay pod-resolved.  Flat rounds on a pod topology
+        charge the param aggregate's inter-pod crossing here (hier
+        rounds pay only at the window-tail exchange)."""
+        times, qinfo, count_disp = sampled[4], sampled[5], sampled[7]
+        telem_count = count_disp.sum(axis=0) if hier else count_disp
+        round_t = times.max() if qspec is None else qinfo[3]
+        if cost.pod_bw is not None and not hier:
+            round_t = round_t + pod_exchange_time(cost, pod_wire)
+            pb = jnp.float32(pod_wire)
+        else:
+            pb = jnp.float32(0.0)
+        return telem_count, round_t, pb
 
-    def diagnostics(Mx, count_disp):
-        comm = jax.lax.psum(Mx.sum(), axis_name)
+    def diagnostics(Mx, work, count_disp):
+        if hier:  # pod-local psums aren't replicated; use the full mask
+            comm = work.sum().astype(jnp.int32)
+        else:
+            comm = jax.lax.psum(Mx.sum(), axis_name)
         cov_mean, min_count, min_cov_count = _round_diagnostics(
-            count_disp > 0, count_disp, N)
+            count_disp > 0, count_disp, n_pop)
         return comm, cov_mean, min_count, min_cov_count
 
     ctrl_state0 = controller.init_state(N, Q)
@@ -644,16 +930,16 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
             # overlap window: fold round t's observations into the
             # telemetry, sample round t+1 (controller step + count psum),
             # and compute round t's diagnostics — none of it touches g
-            count_obs, round_t = round_obs(sampled)
+            count_obs, round_t, pb = round_obs(sampled)
             telem = next_telemetry(telem, count_obs, sampled[3],
                                    sampled[4])
             nxt, ctrl_state = sample_round(t + 1, ctrl_state, telem)
             comm, cov_mean, min_count, min_cov_count = diagnostics(
-                Mx, count_obs)
+                Mx, sampled[3], sampled[7])
             x = finish_step(x, g)             # first consumer of the psum
             return (x, C, err, late_buf, ctrl_state, telem, nxt), (
                 x, cov_mean, comm, min_count, min_cov_count,
-                round_t, telem.stale_q.max(), sampled[6].sum())
+                round_t, telem.stale_q.max(), sampled[6].sum(), pb)
 
         nxt0, ctrl_state0 = sample_round(1, ctrl_state0, telem0)
         init_carry = (x1, C0, err0, late_buf0, ctrl_state0, telem0, nxt0)
@@ -664,48 +950,89 @@ def _sharded_rounds_body(problem, k_loop, x1, C0, cho_c, hdiag, cost, *,
             g, C, err, Mx, late_buf = round_update(x, C, err, late_buf,
                                                    sampled)
             x = finish_step(x, g)
-            count_obs, round_t = round_obs(sampled)
+            count_obs, round_t, pb = round_obs(sampled)
             telem = next_telemetry(telem, count_obs, sampled[3],
                                    sampled[4])
             comm, cov_mean, min_count, min_cov_count = diagnostics(
-                Mx, count_obs)
+                Mx, sampled[3], sampled[7])
             return (x, C, err, late_buf, ctrl_state, telem), (
                 x, cov_mean, comm, min_count, min_cov_count,
-                round_t, telem.stale_q.max(), sampled[6].sum())
+                round_t, telem.stale_q.max(), sampled[6].sum(), pb)
 
         init_carry = (x1, C0, err0, late_buf0, ctrl_state0, telem0)
 
-    ts = jnp.arange(1, num_rounds + 1)
-    _, (xs_t, cov, comm, min_counts, min_cov_counts, times,
-        stale, cbytes) = jax.lax.scan(body, init_carry, ts)
+    if not hier:
+        ts = jnp.arange(1, num_rounds + 1)
+        _, outs = jax.lax.scan(body, init_carry, ts)
+    else:
+        def window(ocarry, w):
+            """One exchange window: ``period`` pod-local rounds, then the
+            single pod-axis collective of the loop — the anchored-delta
+            exchange (see ``_hier_scan_rounds`` for the math)."""
+            carry, anchor, err_pod = ocarry
+            ts_w = w * period + jnp.arange(1, period + 1)
+            carry, outs = jax.lax.scan(body, carry, ts_w)
+            x = carry[0]
+            delta = x - anchor
+            if hcomp is None:
+                total = jax.lax.psum(delta, pod_axis)
+            else:
+                total, err_pod = psum_compressed(
+                    hcomp, delta, err_pod, axis_name=pod_axis,
+                    n_agg=pods, region_ids=region_ids, num_regions=Q)
+            xbar = anchor + total / pods
+            x = x + hspec.gamma * (xbar - x)
+            ex_t = pod_exchange_time(cost, hier_wire)
+            outs = (outs[:5] + (outs[5].at[-1].add(ex_t),) + outs[6:8]
+                    + (outs[8].at[-1].add(hier_wire),))
+            return ((x,) + carry[1:], xbar, err_pod), outs
+
+        period = hspec.period
+        err_pod0 = () if hcomp is None else jnp.zeros(d)
+        _, outs = jax.lax.scan(window, (init_carry, x1, err_pod0),
+                               jnp.arange(num_rounds // period))
+        outs = jax.tree.map(
+            lambda a: a.reshape((num_rounds,) + a.shape[2:]), outs)
+    (xs_t, cov, comm, min_counts, min_cov_counts, times,
+     stale, cbytes, pbytes) = outs
     xs = jnp.concatenate([jnp.stack([jnp.zeros(d), x1]), xs_t], axis=0)
-    tau, tau_cov = _tau_pair(min_counts, min_cov_counts, N)
-    return xs, cov, comm, tau, tau_cov, times, stale, cbytes
+    if hier:
+        xs = xs[:, None, :]   # out_spec stacks pods along this axis
+    tau, tau_cov = _tau_pair(min_counts, min_cov_counts, n_pop)
+    return xs, cov, comm, tau, tau_cov, times, stale, cbytes, pbytes
 
 
 _SHARDED_STATIC = ("mesh", "axis_name", "num_rounds", "num_regions",
                    "controller", "mu", "lr", "curvature", "cho_lower",
-                   "num_workers", "overlap", "qspec", "comp")
+                   "num_workers", "overlap", "qspec", "comp", "pod_axis",
+                   "hspec")
 
 
 def _sharded_engine(problem, k_loop, x1, C0, cho_c, hdiag, cost, *, mesh,
                     axis_name, num_rounds, num_regions, controller, mu, lr,
                     curvature, cho_lower, num_workers, overlap, qspec=None,
-                    comp=None):
+                    comp=None, pod_axis="pod", hspec=None):
     body = functools.partial(
         _sharded_rounds_body, axis_name=axis_name, num_rounds=num_rounds,
         num_regions=num_regions, controller=controller, mu=mu, lr=lr,
         curvature=curvature, cho_lower=cho_lower, num_workers=num_workers,
-        overlap=overlap, qspec=qspec, comp=comp)
-    in_specs = (_worker_sharded_specs(problem, axis_name),
+        overlap=overlap, qspec=qspec, comp=comp, pod_axis=pod_axis,
+        hspec=hspec)
+    # hier: workers shard JOINTLY over (pod, data) — pod-major layout,
+    # matching the body's (me_pod * n_data + shard) slice arithmetic
+    waxis = (pod_axis, axis_name) if hspec is not None else axis_name
+    in_specs = (_worker_sharded_specs(problem, waxis),
                 _replicated_specs(k_loop), _replicated_specs(x1),
-                P(axis_name, None), _replicated_specs(cho_c),
+                P(waxis, None), _replicated_specs(cho_c),
                 _replicated_specs(hdiag), _replicated_specs(cost))
     # outputs are replicated by construction (every x-update flows through
     # the psum); check_rep=False because the replication checker cannot
-    # track the axis_index-based worker slicing
+    # track the axis_index-based worker slicing.  Hier: the per-pod
+    # iterates stack along the pod axis; everything else stays replicated.
+    out_specs = ((P(None, pod_axis, None),) + (P(),) * 8
+                 if hspec is not None else (P(),) * 9)
     fn = shard_map(body, mesh=mesh, in_specs=in_specs,
-                   out_specs=(P(),) * 8, check_rep=False)
+                   out_specs=out_specs, check_rep=False)
     return fn(problem, k_loop, x1, C0, cho_c, hdiag, cost)
 
 
@@ -725,9 +1052,36 @@ def _check_mesh(problem, mesh, axis_name: str):
     return n_dev
 
 
+def _check_pod_mesh(problem, mesh, axis_name: str, pod_axis: str,
+                    hspec: HierarchySpec, num_rounds: int):
+    """Hierarchical mesh validation shared by the sharded engines: the
+    mesh must carry a ``pod_axis`` whose extent IS the pod count, and
+    each pod's sub-population must divide across the data axis."""
+    _check_hier(problem, hspec, num_rounds)
+    if pod_axis not in mesh.axis_names:
+        raise ValueError(
+            f"hierarchy pods={hspec.pods} needs a {pod_axis!r} axis on "
+            f"the mesh (got {mesh.axis_names}; build one with "
+            f"launch.mesh.make_engine_mesh(..., pods=...))")
+    if mesh.shape[pod_axis] != hspec.pods:
+        raise ValueError(
+            f"hierarchy pods={hspec.pods} != mesh {pod_axis!r} axis "
+            f"extent {mesh.shape[pod_axis]}")
+    n_pop = problem.num_workers // hspec.pods
+    n_data = mesh.shape[axis_name]
+    if n_pop % n_data:
+        raise ValueError(
+            f"per-pod workers {n_pop} must divide evenly across the "
+            f"{n_data} devices of the {axis_name!r} mesh axis")
+
+
 def _sharded_args(problem, key, opts: RanlOptions, *, mesh, axis_name,
-                  controller, cost):
+                  controller, cost, pod_axis: str = "pod"):
     _check_mesh(problem, mesh, axis_name)
+    hspec = opts.hierarchy_spec()
+    if hspec is not None:
+        _check_pod_mesh(problem, mesh, axis_name, pod_axis, hspec,
+                        int(opts.num_rounds))
     controller, cost = _hetero_defaults(problem, opts.policy, controller,
                                         cost)
     projection = opts.projection or "eigh"
@@ -749,12 +1103,14 @@ def _sharded_args(problem, key, opts: RanlOptions, *, mesh, axis_name,
                   controller=controller, cho_lower=cho_lower,
                   num_workers=problem.num_workers,
                   overlap=bool(opts.overlap), qspec=opts.quorum_spec(),
-                  comp=opts.compression_spec(), **cfg)
+                  comp=opts.compression_spec(), pod_axis=pod_axis,
+                  hspec=hspec, **cfg)
     return args, static
 
 
 def _run_sharded(problem, key, opts: RanlOptions, *, mesh,
-                 axis_name: str = "data", controller=None, cost=None):
+                 axis_name: str = "data", pod_axis: str = "pod",
+                 controller=None, cost=None):
     """Algorithm 1 with the worker axis sharded across ``mesh`` devices
     (engine ``"sharded"`` of ``repro.run``).
 
@@ -780,20 +1136,26 @@ def _run_sharded(problem, key, opts: RanlOptions, *, mesh,
                          cost=cost)
     args, static = _sharded_args(problem, key, opts, mesh=mesh,
                                  axis_name=axis_name,
-                                 controller=controller, cost=cost)
-    xs, cov, comm, tau, tau_cov, times, stale, cbytes = _sharded_jit(
-        *args, **static)
+                                 controller=controller, cost=cost,
+                                 pod_axis=pod_axis)
+    (xs, cov, comm, tau, tau_cov, times, stale, cbytes,
+     pbytes) = _sharded_jit(*args, **static)
+    xs_pods = None
+    if static["hspec"] is not None:
+        xs_pods, xs = xs, xs.mean(axis=1)
     dist = jnp.sum((xs - problem.x_star[None, :]) ** 2, axis=1)
     losses = jax.vmap(problem.loss)(xs)
     return _subsampled(RanlResult(
         xs=xs, dist_sq=dist, losses=losses, coverage=cov,
         comm_floats=comm, tau_star=int(tau), tau_covered=int(tau_cov),
-        round_time=times, max_stale=stale, comm_bytes=cbytes),
+        round_time=times, max_stale=stale, comm_bytes=cbytes,
+        pod_bytes=pbytes, xs_pods=xs_pods),
         opts.record_every)
 
 
 def _lower_sharded(problem, key, opts: RanlOptions, *, mesh,
-                   axis_name: str = "data", controller=None, cost=None):
+                   axis_name: str = "data", pod_axis: str = "pod",
+                   controller=None, cost=None):
     """Lower (without running) the sharded round loop.
 
     Returns the ``jax.stages.Lowered`` for the same computation the
@@ -807,7 +1169,8 @@ def _lower_sharded(problem, key, opts: RanlOptions, *, mesh,
     """
     args, static = _sharded_args(problem, key, opts, mesh=mesh,
                                  axis_name=axis_name,
-                                 controller=controller, cost=cost)
+                                 controller=controller, cost=cost,
+                                 pod_axis=pod_axis)
     return _sharded_jit.lower(*args, **static)
 
 
@@ -900,7 +1263,9 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
                            interpret: bool | None, num_workers: int,
                            n_data: int, n_model: int, overlap: bool,
                            qspec: QuorumSpec | None = None,
-                           comp: CompressionSpec | None = None):
+                           comp: CompressionSpec | None = None,
+                           pod_axis: str = "pod",
+                           hspec: HierarchySpec | None = None):
     """Per-device round loop on the 2-D mesh (runs under ``shard_map`` for
     the diag path, called inline by ``_sharded2d_dense_body`` for dense).
 
@@ -934,8 +1299,16 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
     residual absorbs the difference).  The fused kernel path is bypassed
     (``comp`` changes the wire format of the psum the kernel fuses away).
     ``comp=None`` compiles the uncompressed loop unchanged.
+
+    With ``hspec`` the worker axis shards jointly over ``(pod_axis,
+    data_axis)`` and the loop nests into exchange windows exactly as in
+    the 1-D body: every in-round collective reduces over ``data_axis``
+    (pod-local) or ``model_axis`` (pod-internal assembly) only, and the
+    window-tail anchored-delta exchange — the loop's ONLY ``pod_axis``
+    collective, one d-sized psum issued by every model shard on its
+    replicated iterate — carries multiplier E = rounds/period in HLO.
     """
-    from ..hetero.cost import quorum_split, worker_times
+    from ..hetero.cost import pod_exchange_time, quorum_split, worker_times
     from ..hetero.controller import initial_telemetry, next_telemetry
     from ..kernels.region_aggregate import local_region_ids
     N, Q = num_workers, num_regions
@@ -944,7 +1317,11 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
     n_local = problem.num_workers         # workers held by this shard
     me_d = jax.lax.axis_index(data_axis)
     me_m = jax.lax.axis_index(model_axis)
-    wstart = me_d * n_local
+    hier = hspec is not None
+    pods = hspec.pods if hier else 1
+    n_pop = N // pods                     # workers per pod (= N when flat)
+    me_pod = jax.lax.axis_index(pod_axis) if hier else 0
+    wstart = (me_pod * n_data + me_d) * n_local if hier else me_d * n_local
     row_start = me_m * p
     region_ids = contiguous_regions(d, Q)
     region_ids_loc = local_region_ids(d, Q, row_start, p)
@@ -952,12 +1329,16 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
     local_ids = jnp.arange(n_local)
     grad_rows = jax.vmap(
         lambda i, xp, k: problem.worker_grad_rows(i, xp, k, row_start, p))
+    hcomp = parse_compression(hspec.compression) if hier else None
+    pod_wire = _pod_wire_bytes(comp, d)   # flat-on-topology charge
+    hier_wire = _pod_wire_bytes(hcomp, d)
     # the fused Pallas kernel aggregates over the workers it can see, so it
     # is exact only when this device sees ALL workers (pure model-parallel
     # meshes); otherwise the collective jnp form is used.  It has no
-    # late-fold form, so quorum runs always take the jnp path.
+    # late-fold form, so quorum and hierarchical runs always take the jnp
+    # path.
     kernel_ok = (use_kernel and curvature == "diag" and n_data == 1
-                 and qspec is None and comp is None)
+                 and qspec is None and comp is None and not hier)
 
     def sample_round(t, ctrl_state, telem):
         """Everything x-independent about round t: step the controller on
@@ -972,24 +1353,45 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
         gk_full = jax.random.split(jax.random.fold_in(kt, 7), N)
         M = jax.lax.dynamic_slice_in_dim(M_full, wstart, n_local)
         gk = jax.lax.dynamic_slice_in_dim(gk_full, wstart, n_local)
+        # pod-local counts under hier: same collective, per-pod values
         count_q = jax.lax.psum(M.sum(axis=0), data_axis)
         work = (M_full * sizes_q[None, :]).sum(axis=1)
         ubytes = uplink_bytes(comp, M_full, sizes_q)
-        times = worker_times(cost, work, t, ubytes)
+        times = worker_times(cost, work, t, ubytes, overlap=overlap)
         if qspec is None:
             qinfo = ()
+            count_disp = (M_full.reshape(pods, n_pop, Q).sum(axis=1)
+                          if hier else count_q)
+        elif hier:
+            split = functools.partial(
+                quorum_split, quorum=qspec.quorum,
+                quorum_tau=qspec.quorum_tau, max_delay=qspec.max_delay)
+            deadline_p, on_p, delays_p = jax.vmap(split)(
+                times.reshape(pods, n_pop), M_full.reshape(pods, n_pop, Q))
+            count_disp = (M_full.reshape(pods, n_pop, Q)
+                          & on_p[:, :, None]).sum(axis=1)        # (P, Q)
+            count_on_loc = jax.lax.dynamic_slice_in_dim(
+                count_disp, me_pod, 1)[0]                        # my pod's
+            qinfo = (count_disp,
+                     jax.lax.dynamic_slice_in_dim(on_p.reshape(N),
+                                                  wstart, n_local),
+                     jax.lax.dynamic_slice_in_dim(delays_p.reshape(N),
+                                                  wstart, n_local),
+                     deadline_p.max(), count_on_loc)
         else:
             deadline, on_time, delays = quorum_split(
                 times, M_full, quorum=qspec.quorum,
                 quorum_tau=qspec.quorum_tau, max_delay=qspec.max_delay)
             count_on = (M_full & on_time[:, None]).sum(axis=0)
+            count_disp = count_on
             qinfo = (count_on,
                      jax.lax.dynamic_slice_in_dim(on_time, wstart,
                                                   n_local),
                      jax.lax.dynamic_slice_in_dim(delays, wstart,
                                                   n_local),
-                     deadline)
-        return (M, gk, count_q, work, times, qinfo, ubytes), ctrl_state
+                     deadline, count_on)
+        return (M, gk, count_q, work, times, qinfo, ubytes,
+                count_disp), ctrl_state
 
     def scatter_rows(vec_loc):
         """Assemble a replicated (d,) vector from local rows — one
@@ -1016,7 +1418,7 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
         consume.  Quorum mode folds the local late-buffer tile into that
         same psum and enqueues this round's late work (see the 1-D
         body)."""
-        M, gk, count_q, _, _, qinfo, _ = sampled
+        M, gk, count_q, qinfo = sampled[0], sampled[1], sampled[2], sampled[5]
         Mx_full = expand_mask(M, region_ids)        # (n_local, d)
         Mx = expand_mask(M, region_ids_loc)         # (n_local, p) local cols
         x_pruned = jnp.where(Mx_full, x[None, :], 0.0)
@@ -1036,14 +1438,14 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
         denom = jnp.maximum(count_x, 1).astype(G.dtype)
         if qspec is None:
             covered_x = jnp.take(count_q > 0, region_ids_loc)
-            contrib = jnp.where(covered_x[None, :], G / denom, C / N)
+            contrib = jnp.where(covered_x[None, :], G / denom, C / n_pop)
             g_loc, err = _psum_payload(contrib.sum(axis=0), err)
             C = jnp.where(Mx, G, C)                 # device-local tile
             return None, C, err, g_loc, late_buf
-        count_on, on_loc, delays_loc, _ = qinfo
-        covered_x = jnp.take(count_on > 0, region_ids_loc)
+        on_loc, delays_loc = qinfo[1], qinfo[2]
+        covered_x = jnp.take(qinfo[4] > 0, region_ids_loc)  # my pod's
         fresh = jnp.where(on_loc[:, None], G, 0.0)
-        contrib = jnp.where(covered_x[None, :], fresh / denom, C / N)
+        contrib = jnp.where(covered_x[None, :], fresh / denom, C / n_pop)
         g_loc, err = _psum_payload(contrib.sum(axis=0) + late_buf[0], err)
         adds = late_fold_updates(G, Mx, count_x.astype(G.dtype),
                                  delays_loc, gamma=qspec.gamma,
@@ -1064,20 +1466,29 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
         return x - lr * step
 
     def round_obs(sampled):
-        """(telemetry count, round-time trace value) for this round —
-        on-time counts and the quorum deadline in quorum mode."""
-        _, _, count_q, _, times, qinfo, _ = sampled
-        if qspec is None:
-            return count_q, times.max()
-        return qinfo[0], qinfo[3]
+        """(telemetry count, round-time trace, inter-pod bytes) for this
+        round — on-time counts and the quorum deadline in quorum mode.
+        Flat rounds on a pod topology charge the param aggregate's
+        inter-pod crossing here (hier rounds pay only at the exchange)."""
+        times, qinfo, count_disp = sampled[4], sampled[5], sampled[7]
+        telem_count = count_disp.sum(axis=0) if hier else count_disp
+        round_t = times.max() if qspec is None else qinfo[3]
+        if cost.pod_bw is not None and not hier:
+            round_t = round_t + pod_exchange_time(cost, pod_wire)
+            pb = jnp.float32(pod_wire)
+        else:
+            pb = jnp.float32(0.0)
+        return telem_count, round_t, pb
 
-    def diagnostics(count_q, count_disp):
-        # uplink floats, from the already-global counts (no extra psum);
-        # comm stays FULL coverage (late workers still transmit) while the
-        # coverage/τ diagnostics see the displayed (on-time) counts
-        comm = (count_q * sizes_q).sum()
+    def diagnostics(sampled):
+        # uplink floats, from the replicated full-mask work (no extra
+        # psum); comm stays FULL coverage (late workers still transmit)
+        # while the coverage/τ diagnostics see the displayed (on-time,
+        # pod-resolved when hier) counts
+        work, count_disp = sampled[3], sampled[7]
+        comm = work.sum()
         cov_mean, min_count, min_cov_count = _round_diagnostics(
-            count_disp > 0, count_disp, N)
+            count_disp > 0, count_disp, n_pop)
         return comm, cov_mean, min_count, min_cov_count
 
     ctrl_state0 = controller.init_state(N, Q)
@@ -1093,17 +1504,16 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
             # overlap window: round t's telemetry fold + diagnostics and
             # round t+1's sampling + count psum — none of it touches the
             # in-flight psum
-            count_obs, round_t = round_obs(sampled)
+            count_obs, round_t, pb = round_obs(sampled)
             telem = next_telemetry(telem, count_obs, sampled[3],
                                    sampled[4])
             nxt, ctrl_state = sample_round(t + 1, ctrl_state, telem)
-            comm, cov_mean, min_count, min_cov_count = diagnostics(
-                sampled[2], count_obs)
+            comm, cov_mean, min_count, min_cov_count = diagnostics(sampled)
             if x_new is None:
                 x_new = finish_step(x, g_loc)     # first psum consumer
             return (x_new, C, err, late_buf, ctrl_state, telem, nxt), (
                 x_new, cov_mean, comm, min_count, min_cov_count,
-                round_t, telem.stale_q.max(), sampled[6].sum())
+                round_t, telem.stale_q.max(), sampled[6].sum(), pb)
 
         nxt0, ctrl_state0 = sample_round(1, ctrl_state0, telem0)
         init_carry = (x1, C0, err0, late_buf0, ctrl_state0, telem0, nxt0)
@@ -1116,36 +1526,69 @@ def _sharded2d_rounds_body(problem, k_loop, x1, C0, chol, hdiag, cost, *,
                 x, C, err, late_buf, sampled)
             if x_new is None:
                 x_new = finish_step(x, g_loc)
-            count_obs, round_t = round_obs(sampled)
+            count_obs, round_t, pb = round_obs(sampled)
             telem = next_telemetry(telem, count_obs, sampled[3],
                                    sampled[4])
-            comm, cov_mean, min_count, min_cov_count = diagnostics(
-                sampled[2], count_obs)
+            comm, cov_mean, min_count, min_cov_count = diagnostics(sampled)
             return (x_new, C, err, late_buf, ctrl_state, telem), (
                 x_new, cov_mean, comm, min_count, min_cov_count,
-                round_t, telem.stale_q.max(), sampled[6].sum())
+                round_t, telem.stale_q.max(), sampled[6].sum(), pb)
 
         init_carry = (x1, C0, err0, late_buf0, ctrl_state0, telem0)
 
-    ts = jnp.arange(1, num_rounds + 1)
-    _, (xs_t, cov, comm, min_counts, min_cov_counts, times,
-        stale, cbytes) = jax.lax.scan(body, init_carry, ts)
+    if not hier:
+        ts = jnp.arange(1, num_rounds + 1)
+        _, outs = jax.lax.scan(body, init_carry, ts)
+    else:
+        def window(ocarry, w):
+            """One exchange window, ending in the loop's only pod-axis
+            collective: the anchored-delta exchange on the replicated
+            iterate (see ``_hier_scan_rounds`` for the math)."""
+            carry, anchor, err_pod = ocarry
+            ts_w = w * period + jnp.arange(1, period + 1)
+            carry, outs = jax.lax.scan(body, carry, ts_w)
+            x = carry[0]
+            delta = x - anchor
+            if hcomp is None:
+                total = jax.lax.psum(delta, pod_axis)
+            else:
+                total, err_pod = psum_compressed(
+                    hcomp, delta, err_pod, axis_name=pod_axis,
+                    n_agg=pods, region_ids=region_ids, num_regions=Q)
+            xbar = anchor + total / pods
+            x = x + hspec.gamma * (xbar - x)
+            ex_t = pod_exchange_time(cost, hier_wire)
+            outs = (outs[:5] + (outs[5].at[-1].add(ex_t),) + outs[6:8]
+                    + (outs[8].at[-1].add(hier_wire),))
+            return ((x,) + carry[1:], xbar, err_pod), outs
+
+        period = hspec.period
+        err_pod0 = () if hcomp is None else jnp.zeros(d)
+        _, outs = jax.lax.scan(window, (init_carry, x1, err_pod0),
+                               jnp.arange(num_rounds // period))
+        outs = jax.tree.map(
+            lambda a: a.reshape((num_rounds,) + a.shape[2:]), outs)
+    (xs_t, cov, comm, min_counts, min_cov_counts, times,
+     stale, cbytes, pbytes) = outs
     xs = jnp.concatenate([jnp.stack([jnp.zeros(d), x1]), xs_t], axis=0)
-    tau, tau_cov = _tau_pair(min_counts, min_cov_counts, N)
-    return xs, cov, comm, tau, tau_cov, times, stale, cbytes
+    if hier:
+        xs = xs[:, None, :]   # out_spec stacks pods along this axis
+    tau, tau_cov = _tau_pair(min_counts, min_cov_counts, n_pop)
+    return xs, cov, comm, tau, tau_cov, times, stale, cbytes, pbytes
 
 
 _SHARDED2D_STATIC = ("mesh", "data_axis", "model_axis", "num_rounds",
                      "num_regions", "controller", "mu", "lr", "curvature",
                      "use_kernel", "interpret", "num_workers", "n_data",
-                     "n_model", "overlap", "qspec", "comp")
+                     "n_model", "overlap", "qspec", "comp", "pod_axis",
+                     "hspec")
 
 
 def _sharded2d_engine(problem, k_loop, x1, C0, hdiag, cost, *, mesh,
                       data_axis, model_axis, num_rounds, num_regions,
                       controller, mu, lr, curvature, use_kernel, interpret,
                       num_workers, n_data, n_model, overlap, qspec=None,
-                      comp=None):
+                      comp=None, pod_axis="pod", hspec=None):
     """Diag-curvature 2-D engine: host-side O(d) init, sharded rounds."""
     from ..launch.shard import ranl2d_pspecs
 
@@ -1157,15 +1600,19 @@ def _sharded2d_engine(problem, k_loop, x1, C0, hdiag, cost, *, mesh,
             num_regions=num_regions, controller=controller, mu=mu, lr=lr,
             curvature=curvature, use_kernel=use_kernel, interpret=interpret,
             num_workers=num_workers, n_data=n_data, n_model=n_model,
-            overlap=overlap, qspec=qspec, comp=comp)
+            overlap=overlap, qspec=qspec, comp=comp, pod_axis=pod_axis,
+            hspec=hspec)
 
-    specs = ranl2d_pspecs(problem, worker_axis=data_axis,
+    waxis = (pod_axis, data_axis) if hspec is not None else data_axis
+    specs = ranl2d_pspecs(problem, worker_axis=waxis,
                           dim_axis=model_axis)
     in_specs = (specs["problem"], _replicated_specs(k_loop),
                 _replicated_specs(x1), specs["memory"], specs["hdiag"],
                 _replicated_specs(cost))
+    out_specs = ((P(None, pod_axis, None),) + (P(),) * 8
+                 if hspec is not None else (P(),) * 9)
     fn = shard_map(body, mesh=mesh, in_specs=in_specs,
-                   out_specs=(P(),) * 8, check_rep=False)
+                   out_specs=out_specs, check_rep=False)
     return fn(problem, k_loop, x1, C0, hdiag, cost)
 
 
@@ -1176,7 +1623,8 @@ _sharded2d_jit = functools.partial(
 def _sharded2d_dense_body(problem, key, cost, *, data_axis, model_axis,
                           num_rounds, num_regions, controller, mu, lr,
                           ns_iters, overlap, num_workers, n_data, n_model,
-                          qspec=None, comp=None):
+                          qspec=None, comp=None, pod_axis="pod",
+                          hspec=None):
     """Dense-curvature 2-D program, init INCLUDED (runs under shard_map).
 
     Alg. 1 lines 1–8 with every d-sized object as model-axis row panels:
@@ -1202,7 +1650,14 @@ def _sharded2d_dense_body(problem, key, cost, *, data_axis, model_axis,
     n_local = problem.num_workers         # workers held by this shard
     me_d = jax.lax.axis_index(data_axis)
     me_m = jax.lax.axis_index(model_axis)
-    wstart = me_d * n_local
+    hier = hspec is not None
+    me_pod = jax.lax.axis_index(pod_axis) if hier else 0
+    wstart = ((me_pod * n_data + me_d) * n_local if hier
+              else me_d * n_local)
+    # the init phase is GLOBAL in every mode (Alg. 1's mean Hessian and
+    # mean gradient use all N workers) — under hier its two psums reduce
+    # jointly over the data AND pod axes, once, outside the round loop
+    worker_axes = (data_axis, pod_axis) if hier else data_axis
     row_start = me_m * p
     local_ids = jnp.arange(n_local)
     k_init, k_loop = jax.random.split(key)
@@ -1218,14 +1673,14 @@ def _sharded2d_dense_body(problem, key, cost, *, data_axis, model_axis,
                                                    p), None
 
     h_panel, _ = jax.lax.scan(acc, jnp.zeros((p, d)), (local_ids, hkeys))
-    h_panel = jax.lax.psum(h_panel, data_axis) / N
+    h_panel = jax.lax.psum(h_panel, worker_axes) / N
     hmu_panel = project_psd_ns_panels(h_panel, mu, axis_name=model_axis,
                                       n_model=n_model, num_iters=ns_iters)
     chol = _factor_sharded2d_body(hmu_panel, model_axis=model_axis,
                                   n_model=n_model)
     g0 = jax.vmap(lambda i, k: problem.worker_grad_rows(
         i, x0, k, row_start, p))(local_ids, gkeys)       # (n_local, p)
-    gbar_loc = jax.lax.psum(g0.sum(axis=0), data_axis) / N
+    gbar_loc = jax.lax.psum(g0.sum(axis=0), worker_axes) / N
     step0 = _blocked_solve_panels(chol, gbar_loc, model_axis=model_axis,
                                   n_model=n_model, me=me_m,
                                   row_start=row_start, dim=d)
@@ -1236,33 +1691,37 @@ def _sharded2d_dense_body(problem, key, cost, *, data_axis, model_axis,
         num_regions=num_regions, controller=controller, mu=mu, lr=lr,
         curvature="dense", use_kernel=False, interpret=None,
         num_workers=N, n_data=n_data, n_model=n_model, overlap=overlap,
-        qspec=qspec, comp=comp)
+        qspec=qspec, comp=comp, pod_axis=pod_axis, hspec=hspec)
 
 
 _SHARDED2D_DENSE_STATIC = ("mesh", "data_axis", "model_axis", "num_rounds",
                            "num_regions", "controller", "mu", "lr",
                            "ns_iters", "overlap", "num_workers", "n_data",
-                           "n_model", "qspec", "comp")
+                           "n_model", "qspec", "comp", "pod_axis", "hspec")
 
 
 def _sharded2d_dense_engine(problem, key, cost, *, mesh, data_axis,
                             model_axis, num_rounds, num_regions,
                             controller, mu, lr, ns_iters, overlap,
                             num_workers, n_data, n_model, qspec=None,
-                            comp=None):
+                            comp=None, pod_axis="pod", hspec=None):
     from ..launch.shard import ranl2d_pspecs
     body = functools.partial(
         _sharded2d_dense_body, data_axis=data_axis, model_axis=model_axis,
         num_rounds=num_rounds, num_regions=num_regions,
         controller=controller, mu=mu, lr=lr, ns_iters=ns_iters,
         overlap=overlap, num_workers=num_workers, n_data=n_data,
-        n_model=n_model, qspec=qspec, comp=comp)
-    specs = ranl2d_pspecs(problem, worker_axis=data_axis,
+        n_model=n_model, qspec=qspec, comp=comp, pod_axis=pod_axis,
+        hspec=hspec)
+    waxis = (pod_axis, data_axis) if hspec is not None else data_axis
+    specs = ranl2d_pspecs(problem, worker_axis=waxis,
                           dim_axis=model_axis)
     in_specs = (specs["problem"], _replicated_specs(key),
                 _replicated_specs(cost))
+    out_specs = ((P(None, pod_axis, None),) + (P(),) * 8
+                 if hspec is not None else (P(),) * 9)
     fn = shard_map(body, mesh=mesh, in_specs=in_specs,
-                   out_specs=(P(),) * 8, check_rep=False)
+                   out_specs=out_specs, check_rep=False)
     return fn(problem, key, cost)
 
 
@@ -1291,7 +1750,8 @@ def _check_mesh2d(problem, mesh, data_axis: str, model_axis: str):
 
 
 def _sharded2d_args(problem, key, opts: RanlOptions, *, mesh, data_axis,
-                    model_axis, controller, cost, abstract: bool = False):
+                    model_axis, controller, cost, abstract: bool = False,
+                    pod_axis: str = "pod"):
     """-> (jitted_engine, args, static) for the requested curvature.
 
     Dense: the ENTIRE program — init included — is one shard_map'd
@@ -1303,6 +1763,10 @@ def _sharded2d_args(problem, key, opts: RanlOptions, *, mesh, data_axis,
     traced to avals via ``jax.eval_shape`` so lowering pays no compute).
     """
     n_data, n_model = _check_mesh2d(problem, mesh, data_axis, model_axis)
+    hspec = opts.hierarchy_spec()
+    if hspec is not None:
+        _check_pod_mesh(problem, mesh, data_axis, pod_axis, hspec,
+                        int(opts.num_rounds))
     controller, cost = _hetero_defaults(problem, opts.policy, controller,
                                         cost)
     if opts.curvature == "dense" and opts.projection == "eigh":
@@ -1330,7 +1794,7 @@ def _sharded2d_args(problem, key, opts: RanlOptions, *, mesh, data_axis,
                       overlap=bool(opts.overlap),
                       num_workers=problem.num_workers,
                       n_data=n_data, n_model=n_model, qspec=qspec,
-                      comp=comp)
+                      comp=comp, pod_axis=pod_axis, hspec=hspec)
         return _sharded2d_dense_jit, (problem, key, cost), static
 
     def make_args(problem, key):
@@ -1351,13 +1815,13 @@ def _sharded2d_args(problem, key, opts: RanlOptions, *, mesh, data_axis,
                   interpret=None, num_workers=problem.num_workers,
                   n_data=n_data, n_model=n_model,
                   overlap=bool(opts.overlap), qspec=qspec, comp=comp,
-                  **cfg)
+                  pod_axis=pod_axis, hspec=hspec, **cfg)
     return _sharded2d_jit, (*args, cost), static
 
 
 def _run_sharded2d(problem, key, opts: RanlOptions, *, mesh,
                    data_axis: str = "data", model_axis: str = "model",
-                   controller=None, cost=None):
+                   pod_axis: str = "pod", controller=None, cost=None):
     """Algorithm 1 with workers AND the parameter dimension sharded
     (engine ``"sharded2d"`` of ``repro.run``).
 
@@ -1403,21 +1867,26 @@ def _run_sharded2d(problem, key, opts: RanlOptions, *, mesh,
                          cost=cost)
     engine, args, static = _sharded2d_args(
         problem, key, opts, mesh=mesh, data_axis=data_axis,
-        model_axis=model_axis, controller=controller, cost=cost)
-    xs, cov, comm, tau, tau_cov, times, stale, cbytes = engine(*args,
-                                                              **static)
+        model_axis=model_axis, controller=controller, cost=cost,
+        pod_axis=pod_axis)
+    (xs, cov, comm, tau, tau_cov, times, stale, cbytes,
+     pbytes) = engine(*args, **static)
+    xs_pods = None
+    if static["hspec"] is not None:
+        xs_pods, xs = xs, xs.mean(axis=1)
     dist = jnp.sum((xs - problem.x_star[None, :]) ** 2, axis=1)
     losses = jax.vmap(problem.loss)(xs)
     return _subsampled(RanlResult(
         xs=xs, dist_sq=dist, losses=losses, coverage=cov,
         comm_floats=comm, tau_star=int(tau), tau_covered=int(tau_cov),
-        round_time=times, max_stale=stale, comm_bytes=cbytes),
+        round_time=times, max_stale=stale, comm_bytes=cbytes,
+        pod_bytes=pbytes, xs_pods=xs_pods),
         opts.record_every)
 
 
 def _lower_sharded2d(problem, key, opts: RanlOptions, *, mesh,
                      data_axis: str = "data", model_axis: str = "model",
-                     controller=None, cost=None):
+                     pod_axis: str = "pod", controller=None, cost=None):
     """Lower (without running) the 2-D sharded program.
 
     Genuinely compile-time: for ``curvature="dense"`` the whole program
@@ -1433,7 +1902,7 @@ def _lower_sharded2d(problem, key, opts: RanlOptions, *, mesh,
     engine, args, static = _sharded2d_args(
         problem, key, opts, mesh=mesh, data_axis=data_axis,
         model_axis=model_axis, controller=controller, cost=cost,
-        abstract=True)
+        abstract=True, pod_axis=pod_axis)
     return engine.lower(*args, **static)
 
 
@@ -1463,9 +1932,13 @@ def _subsampled(result: RanlResult, record_every: int) -> RanlResult:
     T = result.dist_sq.shape[-1] - 2
     rounds = sorted(set(range(k, T + 1, k)) | ({T} if T > 0 else set()))
     idx = jnp.asarray([0, 1] + [1 + r for r in rounds], jnp.int32)
+    xs_pods = result.xs_pods
+    if xs_pods is not None:
+        xs_pods = jnp.take(xs_pods, idx, axis=xs_pods.ndim - 3)
     return dc_replace(
         result,
         xs=jnp.take(result.xs, idx, axis=result.xs.ndim - 2),
+        xs_pods=xs_pods,
         dist_sq=jnp.take(result.dist_sq, idx, axis=-1),
         losses=jnp.take(result.losses, idx, axis=-1))
 
@@ -1476,6 +1949,8 @@ def _scan_args(problem, key, opts: RanlOptions, *, controller=None,
     traces) here; shared by ``_run_scan`` and the jaxpr-audit hook
     ``trace_ranl`` so the audited program is the executed program."""
     ctrl, cost = _hetero_defaults(problem, opts.policy, controller, cost)
+    hspec = opts.hierarchy_spec()
+    _check_hier(problem, hspec, int(opts.num_rounds))
     projection = opts.projection or "eigh"
     cfg = _config(problem, mu=opts.mu, lr=opts.lr,
                   curvature=opts.curvature,
@@ -1494,7 +1969,7 @@ def _scan_args(problem, key, opts: RanlOptions, *, controller=None,
                   controller=ctrl, use_kernel=bool(opts.use_kernel),
                   interpret=None, cho_lower=cho_lower,
                   qspec=opts.quorum_spec(),
-                  comp=opts.compression_spec(), **cfg)
+                  comp=opts.compression_spec(), hspec=hspec, **cfg)
     return args, static
 
 
@@ -1518,11 +1993,15 @@ def _run_scan(problem, key, opts: RanlOptions, *, controller=None,
     args, static = _scan_args(problem, key, opts, controller=controller,
                               cost=cost)
     (xs, dist, losses, cov, comm, tau, tau_cov, times, stale,
-     cbytes) = _rounds_jit(*args, **static)
+     cbytes, pbytes) = _rounds_jit(*args, **static)
+    xs_pods = None
+    if static["hspec"] is not None:
+        xs_pods, xs = xs, xs.mean(axis=1)
     return _subsampled(RanlResult(
         xs=xs, dist_sq=dist, losses=losses, coverage=cov,
         comm_floats=comm, tau_star=int(tau), tau_covered=int(tau_cov),
-        round_time=times, max_stale=stale, comm_bytes=cbytes),
+        round_time=times, max_stale=stale, comm_bytes=cbytes,
+        pod_bytes=pbytes, xs_pods=xs_pods),
         opts.record_every)
 
 
@@ -1545,6 +2024,8 @@ def _run_batch(problem, keys, opts: RanlOptions, *, mesh=None,
     ``round_time``/``max_stale`` come back (B, T)-shaped.
     """
     ctrl, cost = _hetero_defaults(problem, opts.policy, controller, cost)
+    hspec = opts.hierarchy_spec()
+    _check_hier(problem, hspec, int(opts.num_rounds))
     keys = jnp.asarray(keys)
     if mesh is not None:
         if axis_name not in mesh.axis_names:
@@ -1564,7 +2045,7 @@ def _run_batch(problem, keys, opts: RanlOptions, *, mesh=None,
                   hutchinson_samples=opts.hutchinson_samples,
                   projection=projection)
     (xs, dist, losses, cov, comm, tau, tau_cov, times, stale,
-     cbytes) = _batch_jit(
+     cbytes, pbytes) = _batch_jit(
         problem, keys, cost, num_rounds=int(opts.num_rounds),
         num_regions=int(opts.num_regions), controller=ctrl,
         use_kernel=bool(opts.use_kernel), interpret=None,
@@ -1572,11 +2053,15 @@ def _run_batch(problem, keys, opts: RanlOptions, *, mesh=None,
         ns_iters=opts.ns_iters if opts.ns_iters == "auto"
         else int(opts.ns_iters),
         qspec=opts.quorum_spec(), comp=opts.compression_spec(),
-        hessian_rank=opts.hessian_rank, **cfg)
+        hessian_rank=opts.hessian_rank, hspec=hspec, **cfg)
+    xs_pods = None
+    if hspec is not None:
+        xs_pods, xs = xs, xs.mean(axis=2)
     return _subsampled(RanlResult(
         xs=xs, dist_sq=dist, losses=losses, coverage=cov,
         comm_floats=comm, tau_star=tau, tau_covered=tau_cov,
-        round_time=times, max_stale=stale, comm_bytes=cbytes),
+        round_time=times, max_stale=stale, comm_bytes=cbytes,
+        pod_bytes=pbytes, xs_pods=xs_pods),
         opts.record_every)
 
 
@@ -1713,7 +2198,7 @@ def _run_reference(problem, key, opts: RanlOptions, *, controller=None,
 def trace_ranl(problem, key, opts: RanlOptions = RanlOptions(), *,
                engine: str = "scan", mesh=None, axis_name: str = "data",
                data_axis: str = "data", model_axis: str = "model",
-               controller=None, cost=None):
+               pod_axis: str = "pod", controller=None, cost=None):
     """Closed jaxpr of the FULL engine program (init phase + round loop).
 
     The pre-compile artifact ``repro.analysis.jaxpr_audit`` inventories:
@@ -1750,7 +2235,8 @@ def trace_ranl(problem, key, opts: RanlOptions = RanlOptions(), *,
                 ns_iters=opts.ns_iters if opts.ns_iters == "auto"
                 else int(opts.ns_iters),
                 qspec=opts.quorum_spec(), comp=opts.compression_spec(),
-                hessian_rank=opts.hessian_rank, **cfg)
+                hessian_rank=opts.hessian_rank,
+                hspec=opts.hierarchy_spec(), **cfg)
     elif engine == "reference":
         def program(problem, key, cost):
             return _reference_program(problem, key, cost, opts=opts,
@@ -1762,7 +2248,8 @@ def trace_ranl(problem, key, opts: RanlOptions = RanlOptions(), *,
         def program(problem, key, cost):
             args, static = _sharded_args(problem, key, opts, mesh=mesh,
                                          axis_name=axis_name,
-                                         controller=ctrl, cost=cost)
+                                         controller=ctrl, cost=cost,
+                                         pod_axis=pod_axis)
             return _sharded_engine(*args, **static)
     elif engine == "sharded2d":
         if mesh is None:
@@ -1771,7 +2258,8 @@ def trace_ranl(problem, key, opts: RanlOptions = RanlOptions(), *,
         def program(problem, key, cost):
             eng, args, static = _sharded2d_args(
                 problem, key, opts, mesh=mesh, data_axis=data_axis,
-                model_axis=model_axis, controller=ctrl, cost=cost)
+                model_axis=model_axis, controller=ctrl, cost=cost,
+                pod_axis=pod_axis)
             return eng(*args, **static)
     else:
         raise ValueError(f"unknown engine {engine!r}")

@@ -19,12 +19,15 @@ from .cost import (  # noqa: F401
     available,
     capacity,
     pareto_cost,
+    pod_exchange_time,
     quorum_deadline,
     quorum_split,
     round_time,
     time_to_target,
     uniform_cost,
     with_availability,
+    with_overlap_credit,
+    with_topology,
     worker_times,
 )
 from .scenarios import (  # noqa: F401

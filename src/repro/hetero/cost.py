@@ -64,15 +64,34 @@ class CostModel:
     * ``diurnal_period``/``diurnal_amplitude``: sinusoidal capacity,
       staggered phase per worker — ``capacity_i(t) = 1 + amp ·
       sin(2π(t/period + i/N))``, floored at 0.05.
+
+    Per-link topology (pod-of-pods): ``pod_bw`` is an optional (P,)
+    array of inter-pod uplink bandwidths in BYTES/time — ``None``
+    (default, a structural pytree difference, so it compiles as a
+    Python branch) models a uniform interconnect where crossing pods is
+    free.  A cross-pod exchange of ``nbytes`` costs ``pod_latency +
+    nbytes / min(pod_bw)`` (a ring/all-reduce is gated by its slowest
+    uplink); see ``pod_exchange_time``.  Flat-synchronous runs on such a
+    topology pay that price EVERY round (the param aggregate crosses
+    every link); hierarchical runs pay it only on exchange rounds —
+    that asymmetry is the entire pod-of-pods win.
+
+    ``overlap_credit`` in [0, 1] is the fraction of ``min(compute,
+    comm)`` a pipelined (``overlap=True``) round hides by overlapping
+    the collective with the next round's gradient work; 0 (default)
+    keeps the sequential clock.
     """
     compute_rate: jnp.ndarray    # (N,)
     bandwidth: jnp.ndarray       # (N,)
+    pod_bw: jnp.ndarray | None = None   # (P,) or None
     overhead: float = 0.0
     dropout_prob: float = 0.0
     churn_period: int = 0
     churn_cohorts: int = 4
     diurnal_period: int = 0
     diurnal_amplitude: float = 0.0
+    pod_latency: float = 0.0
+    overlap_credit: float = 0.0
 
     @property
     def num_workers(self) -> int:
@@ -80,9 +99,10 @@ class CostModel:
 
 
 jax.tree_util.register_dataclass(
-    CostModel, ("compute_rate", "bandwidth"),
+    CostModel, ("compute_rate", "bandwidth", "pod_bw"),
     ("overhead", "dropout_prob", "churn_period", "churn_cohorts",
-     "diurnal_period", "diurnal_amplitude"))
+     "diurnal_period", "diurnal_amplitude", "pod_latency",
+     "overlap_credit"))
 
 
 def uniform_cost(num_workers: int, *, rate: float = 1.0,
@@ -119,6 +139,35 @@ def with_availability(cost: CostModel, *, dropout_prob: float = 0.0,
                    diurnal_amplitude=float(diurnal_amplitude))
 
 
+def with_topology(cost: CostModel, *, pod_bw,
+                  pod_latency: float = 0.0) -> CostModel:
+    """Attach an inter-pod link topology: ``pod_bw`` (P,) BYTES/time per
+    pod uplink (scalars broadcast is NOT done — pass the full vector so
+    asymmetric uplinks are explicit), plus a fixed per-exchange
+    ``pod_latency``."""
+    return replace(cost, pod_bw=jnp.asarray(pod_bw, jnp.float32),
+                   pod_latency=float(pod_latency))
+
+
+def with_overlap_credit(cost: CostModel, credit: float) -> CostModel:
+    """Set the comm/compute overlap credit (see ``worker_times``)."""
+    credit = float(credit)
+    if not 0.0 <= credit <= 1.0:
+        raise ValueError(f"overlap_credit={credit} must be in [0, 1]")
+    return replace(cost, overlap_credit=credit)
+
+
+def pod_exchange_time(cost: CostModel, nbytes):
+    """Scalar simulated time for ``nbytes`` to cross the inter-pod
+    links (0.0 when no topology is attached — a Python branch on the
+    pytree structure, so uniform-interconnect runs compile unchanged).
+    """
+    if cost.pod_bw is None:
+        return jnp.float32(0.0)
+    return cost.pod_latency + (jnp.asarray(nbytes, jnp.float32)
+                               / cost.pod_bw.min())
+
+
 def available(cost: CostModel, key, t) -> jnp.ndarray:
     """(N,) bool — which workers participate in round ``t``.
 
@@ -153,7 +202,8 @@ def capacity(cost: CostModel, t) -> jnp.ndarray:
     return jnp.maximum(1.0 + cost.diurnal_amplitude * wave, 0.05)
 
 
-def worker_times(cost: CostModel, work, t, uplink_bytes=None) -> jnp.ndarray:
+def worker_times(cost: CostModel, work, t, uplink_bytes=None, *,
+                 overlap: bool = False) -> jnp.ndarray:
     """(N,) simulated time per worker for a round.
 
     ``work``: (N,) parameter coordinates each worker trains this round
@@ -163,19 +213,29 @@ def worker_times(cost: CostModel, work, t, uplink_bytes=None) -> jnp.ndarray:
     the uncompressed 4 bytes/coordinate, so ``bandwidth`` is denominated
     in bytes/time and compression (``core.compression.uplink_bytes``)
     shows up in simulated wall-clock on finite-uplink clusters.
+
+    ``overlap=True`` applies the cost model's ``overlap_credit``: a
+    double-buffered round loop hides ``credit · min(compute, comm)`` of
+    each worker's sequential time behind the other phase (the classic
+    pipelining bound — full overlap hides the shorter of the two
+    phases, never both).  With ``overlap_credit=0`` (default) the
+    pipelined clock equals the sequential one.
     """
     work = jnp.asarray(work, jnp.float32)
     if uplink_bytes is None:
         uplink_bytes = 4.0 * work
     rate = cost.compute_rate * capacity(cost, t)
-    per = cost.overhead + work / rate \
-        + jnp.asarray(uplink_bytes, jnp.float32) / cost.bandwidth
+    compute = work / rate
+    comm = jnp.asarray(uplink_bytes, jnp.float32) / cost.bandwidth
+    per = cost.overhead + compute + comm
+    if overlap and cost.overlap_credit > 0.0:
+        per = per - cost.overlap_credit * jnp.minimum(compute, comm)
     return jnp.where(work > 0, per, 0.0)
 
 
-def round_time(cost: CostModel, work, t):
+def round_time(cost: CostModel, work, t, *, overlap: bool = False):
     """Scalar simulated wall-clock of one synchronous round."""
-    return worker_times(cost, work, t).max()
+    return worker_times(cost, work, t, overlap=overlap).max()
 
 
 def quorum_deadline(times, masks, *, quorum: float,

@@ -16,6 +16,23 @@ is one string:
     diurnal                 sinusoidal capacity (period=20, amp=0.8)
     dirichlet               non-IID data shards (alpha=0.3) on uniform cost
 
+Pod-of-pods topology scenarios (attach a per-link inter-pod bandwidth
+vector via ``cost.with_topology`` — the ``topology=`` axis of the
+hierarchical-aggregation bench family):
+
+    geo-distributed         uniform workers split across pods joined by
+                            slow, geometrically asymmetric WAN uplinks
+                            (pods=2, pod_bw=64, asym=8, latency=0.5)
+    edge-cohort             federated-style edge cohorts: pareto compute
+                            rates + i.i.d. dropout per round, thin
+                            asymmetric uplinks to the backbone
+                            (alpha=1.2, p=0.1, pods=2, pod_bw=32,
+                            asym=4, latency=1.0)
+    diurnal-WAN             geo-distributed pods whose compute capacity
+                            follows staggered day/night waves
+                            (period=20, amp=0.8, pods=2, pod_bw=64,
+                            asym=8, latency=0.5)
+
 Parameters override with ``name:key=value,...`` — e.g.
 ``pareto-stragglers:alpha=1.0`` or ``dropout:p=0.4,alpha=1.5`` (dropout /
 churn / diurnal ride on pareto compute rates when ``alpha`` is given,
@@ -23,7 +40,11 @@ uniform otherwise).  Every scenario also takes ``bw`` — a finite uplink
 bandwidth in BYTES per simulated time unit (default inf), e.g.
 ``pareto-stragglers:alpha=1.2,bw=64`` — the finite-uplink variants the
 compressed-communication bench runs on, so ``work / bw`` stops being
-dead code and bytes-on-the-wire shows up in round times.
+dead code and bytes-on-the-wire shows up in round times.  The topology
+scenarios additionally take ``pods`` (P), ``pod_bw`` (the fastest pod
+uplink, BYTES/time), ``asym`` (slowest = pod_bw/asym, geometric in
+between: ``pod_bw / asym**(p/(P-1))``) and ``latency`` (fixed
+per-exchange cost).
 """
 
 from __future__ import annotations
@@ -33,7 +54,13 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from .cost import CostModel, pareto_cost, uniform_cost, with_availability
+from .cost import (
+    CostModel,
+    pareto_cost,
+    uniform_cost,
+    with_availability,
+    with_topology,
+)
 
 
 @dataclass(frozen=True)
@@ -109,6 +136,49 @@ def _dirichlet(key, n, p):
                     dirichlet_alpha=float(p.get("alpha", 0.3)))
 
 
+def pod_uplinks(pods: int, pod_bw: float, asym: float) -> jnp.ndarray:
+    """(P,) geometrically asymmetric uplink bandwidths: pod 0 gets
+    ``pod_bw``, pod P-1 gets ``pod_bw / asym``, the rest interpolate
+    geometrically — the uplink-asymmetric profile of the pinned
+    hierarchical bench."""
+    if pods < 1:
+        raise ValueError(f"pods={pods} must be >= 1")
+    expo = (jnp.arange(pods) / max(pods - 1, 1)).astype(jnp.float32)
+    return pod_bw * jnp.power(1.0 / float(asym), expo)
+
+
+def _with_pods(cost: CostModel, p: dict, *, pod_bw: float, asym: float,
+               latency: float) -> CostModel:
+    pods = int(p.get("pods", 2))
+    bw = pod_uplinks(pods, float(p.get("pod_bw", pod_bw)),
+                     float(p.get("asym", asym)))
+    return with_topology(cost, pod_bw=bw,
+                         pod_latency=float(p.get("latency", latency)))
+
+
+def _geo(key, n, p):
+    cost = _with_pods(_base_cost(key, n, p), p,
+                      pod_bw=64.0, asym=8.0, latency=0.5)
+    return Scenario("geo-distributed", cost)
+
+
+def _edge_cohort(key, n, p):
+    cost = with_availability(
+        _base_cost(key, n, {"alpha": 1.2, **p}),
+        dropout_prob=float(p.get("p", 0.1)))
+    cost = _with_pods(cost, p, pod_bw=32.0, asym=4.0, latency=1.0)
+    return Scenario("edge-cohort", cost)
+
+
+def _diurnal_wan(key, n, p):
+    cost = with_availability(
+        _base_cost(key, n, p),
+        diurnal_period=int(p.get("period", 20)),
+        diurnal_amplitude=float(p.get("amp", 0.8)))
+    cost = _with_pods(cost, p, pod_bw=64.0, asym=8.0, latency=0.5)
+    return Scenario("diurnal-WAN", cost)
+
+
 SCENARIOS = {
     "uniform": _uniform,
     "pareto-stragglers": _pareto,
@@ -117,6 +187,9 @@ SCENARIOS = {
     "churn-stragglers": _churn_stragglers,
     "diurnal": _diurnal,
     "dirichlet": _dirichlet,
+    "geo-distributed": _geo,
+    "edge-cohort": _edge_cohort,
+    "diurnal-WAN": _diurnal_wan,
 }
 
 

@@ -15,10 +15,12 @@ before matching — they otherwise break instruction parsing.
 Collectives additionally carry their parsed ``replica_groups`` so
 multi-axis meshes can attribute each one to a mesh axis:
 ``mesh_axis_groups`` computes the device groups a reduction over one axis
-of a row-major mesh produces, and ``groups_reduce_over`` matches a
-record against them — how the 2-D RANL engine proves "exactly one
-DATA-axis param-shard all-reduce per round" while its model-axis solve
-broadcasts ride in the same loop.  ``max_array_bytes`` reports the
+(or a joint axis combination) of a row-major mesh produces, and
+``groups_reduce_over`` matches a record against them — how the 2-D RANL
+engine proves "exactly one DATA-axis param-shard all-reduce per round"
+while its model-axis solve broadcasts ride in the same loop, and how the
+hierarchical engines' joint ``("pod", "data")`` init psums stay
+attributable on the 3-D mesh.  ``max_array_bytes`` reports the
 largest single (non-tuple) buffer in the partitioned module — the
 per-device memory claim (no d×d curvature buffer) is asserted on it.
 
@@ -31,6 +33,7 @@ than the uncompressed build's ``f32`` one.
 
 from __future__ import annotations
 
+import itertools
 import re
 from dataclasses import dataclass, field
 
@@ -98,25 +101,37 @@ def parse_replica_groups(line: str):
     return None
 
 
-def mesh_axis_groups(axis_sizes, axis: int):
-    """Device-id groups of a reduction over mesh axis ``axis``.
+def mesh_axis_groups(axis_sizes, axis):
+    """Device-id groups of a reduction over mesh axis/axes ``axis``.
 
     ``axis_sizes``: the mesh shape, devices laid out row-major (the
-    ``Mesh(np.array(devices).reshape(shape), names)`` convention).  Each
-    group holds the linearized ids that share every OTHER axis coordinate
-    — exactly the replica_groups a ``psum`` over that one axis lowers to.
+    ``Mesh(np.array(devices).reshape(shape), names)`` convention).
+    ``axis`` is one axis index or an iterable of them — each group holds
+    the linearized ids that share every OTHER axis coordinate, exactly
+    the replica_groups a ``psum`` over those axes lowers to (a joint
+    multi-axis reduction, e.g. the hierarchical engines' init psum over
+    ``("pod", "data")``, is ONE collective whose groups span both axes).
     """
+    axes = sorted({axis} if isinstance(axis, int) else set(axis))
     sizes = list(axis_sizes)
     strides = [1] * len(sizes)
     for i in range(len(sizes) - 2, -1, -1):
         strides[i] = strides[i + 1] * sizes[i + 1]
-    other = [i for i in range(len(sizes)) if i != axis]
+    other = [i for i in range(len(sizes)) if i not in axes]
+
+    def _offsets(dims_idx):
+        offs = [0]
+        for ax in dims_idx:
+            offs = [o + k * strides[ax] for o in offs
+                    for k in range(sizes[ax])]
+        return offs
+
+    member = _offsets(axes)
     groups = []
     coords = [0] * len(other)
     while True:
         base = sum(c * strides[o] for c, o in zip(coords, other))
-        groups.append(tuple(base + k * strides[axis]
-                            for k in range(sizes[axis])))
+        groups.append(tuple(base + m for m in member))
         for i in range(len(other) - 1, -1, -1):
             coords[i] += 1
             if coords[i] < sizes[other[i]]:
@@ -146,8 +161,12 @@ def collective_axes(record_groups, axis_sizes, axis_names):
     size-1 mesh axis produces singleton groups, so on a 1-device mesh
     every collective is labeled "replicated" rather than ambiguously
     matching every axis (the old ``groups_reduce_over``-only callers
-    silently matched ALL size-1 axes at once).  An empty tuple means the
-    groups match no declared axis (e.g. a joint reduction over two axes).
+    silently matched ALL size-1 axes at once).  A JOINT reduction over
+    several axes at once (one collective whose groups span e.g.
+    ``("pod", "data")`` — the hierarchical engines' init-phase psums)
+    attributes to the smallest matching axis COMBINATION, returned in
+    ``axis_names`` order.  An empty tuple means the groups match no
+    declared axis or combination.
     """
     if record_groups is None:
         return ("replicated",)
@@ -157,7 +176,17 @@ def collective_axes(record_groups, axis_sizes, axis_names):
         name for i, name in enumerate(axis_names)
         if axis_sizes[i] > 1
         and groups_reduce_over(record_groups, axis_sizes, i))
-    return labels
+    if labels:
+        return labels
+    got = {frozenset(g) for g in record_groups}
+    big = [i for i in range(len(axis_names)) if axis_sizes[i] > 1]
+    for r in range(2, len(big) + 1):
+        for combo in itertools.combinations(big, r):
+            want = {frozenset(g)
+                    for g in mesh_axis_groups(axis_sizes, combo)}
+            if got == want:
+                return tuple(axis_names[i] for i in combo)
+    return ()
 
 
 def shape_bytes(type_str: str) -> int:

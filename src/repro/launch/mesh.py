@@ -11,21 +11,30 @@ import jax
 import numpy as np
 
 
-def make_engine_mesh(data_shards: int, model_shards: int = 1):
-    """("data", "model") mesh over the first data*model visible devices.
+def make_engine_mesh(data_shards: int, model_shards: int = 1,
+                     pods: int = 1):
+    """("data", "model") — or, with ``pods > 1``,
+    ("pod", "data", "model") — mesh over the first pods*data*model
+    visible devices.
 
-    Row-major (data-major) device order — the layout the RANL engines
-    assume and that ``hlo_analysis.mesh_axis_groups`` reproduces when
-    classifying collectives by mesh axis.  ``model_shards=1`` degenerates
-    to the worker-only sharding of the sharded engine (plus a size-1
-    model axis).
+    Pod-major, then data-major, row-major device order — the layout the
+    RANL engines assume and that ``hlo_analysis.mesh_axis_groups``
+    reproduces when classifying collectives by mesh axis.  Devices of
+    one pod are contiguous, so an intra-pod data-axis psum never
+    crosses a pod boundary.  ``model_shards=1`` degenerates to the
+    worker-only sharding of the sharded engine (plus a size-1 model
+    axis); ``pods=1`` keeps the historical 2-D mesh (no pod axis).
     """
-    n = data_shards * model_shards
+    n = pods * data_shards * model_shards
     if jax.device_count() < n:
         raise ValueError(
-            f"mesh ({data_shards}, {model_shards}) needs {n} devices but "
-            f"jax sees {jax.device_count()}; set XLA_FLAGS="
+            f"mesh ({pods}, {data_shards}, {model_shards}) needs {n} "
+            f"devices but jax sees {jax.device_count()}; set XLA_FLAGS="
             f"--xla_force_host_platform_device_count={n} to emulate them")
+    if pods > 1:
+        devs = np.array(jax.devices()[:n]).reshape(
+            pods, data_shards, model_shards)
+        return jax.sharding.Mesh(devs, ("pod", "data", "model"))
     devs = np.array(jax.devices()[:n]).reshape(data_shards, model_shards)
     return jax.sharding.Mesh(devs, ("data", "model"))
 

@@ -12,9 +12,12 @@ Adding ``--model-shards M`` upgrades it to an (N, M) ``("data","model")``
 mesh: the parameter/tensor axes additionally shard over "model" via the
 PartitionSpec rules in ``launch/shard.py``, so per-device optimizer state
 (params, curvature, the N×params gradient memory) drops by ~M on top of
-the worker split.  On a laptop/CI set
-``XLA_FLAGS=--xla_force_host_platform_device_count=N*M`` to emulate the
-devices.
+the worker split.  ``--pods P`` prepends a pod axis — the full
+(P, N, M) ``("pod","data","model")`` mesh of the hierarchical engines,
+pod-major device order, with the worker/batch axes sharding jointly over
+("pod","data").  On a laptop/CI set
+``XLA_FLAGS=--xla_force_host_platform_device_count=P*N*M`` to emulate
+the devices.
 """
 
 from __future__ import annotations
@@ -60,6 +63,12 @@ def run(argv=None):
                     help="additionally shard parameter/tensor axes over "
                          "this many devices of the 'model' axis of a "
                          "('data','model') mesh (1 = data-parallel only)")
+    ap.add_argument("--pods", type=int, default=1,
+                    help="prepend a 'pod' axis: the worker/batch axes "
+                         "shard jointly over the (pods, data_shards) "
+                         "('pod','data') plane of the 3-D "
+                         "('pod','data','model') mesh, pod-major device "
+                         "order (1 = no pod axis)")
     ap.add_argument("--dump-hlo", default="", metavar="PATH",
                     help="lower + compile the train step, write the "
                          "partitioned HLO text to PATH, print the "
@@ -124,14 +133,17 @@ def run(argv=None):
     if args.smoke:
         cfg = smoke_variant(cfg)
     mesh = None
-    if args.model_shards > 1:
+    if args.pods < 1:
+        raise SystemExit(f"--pods {args.pods} must be >= 1")
+    if args.pods > 1 or args.model_shards > 1:
         from .mesh import make_engine_mesh
         try:
-            mesh = make_engine_mesh(args.data_shards, args.model_shards)
+            mesh = make_engine_mesh(args.data_shards, args.model_shards,
+                                    pods=args.pods)
         except ValueError as e:
             raise SystemExit(str(e)) from e
-        print(f"mesh: ({args.data_shards}, {args.model_shards}) "
-              f"('data','model') over {jax.devices()[0].platform}")
+        print(f"mesh: {tuple(mesh.devices.shape)} {mesh.axis_names} "
+              f"over {jax.devices()[0].platform}")
     elif args.data_shards > 1:
         ndev = jax.device_count()
         if ndev < args.data_shards:

@@ -3,6 +3,16 @@
 ``shard_hint(x, spec)`` applies ``with_sharding_constraint`` when a mesh has
 been installed (by the launcher / dry-run); it is a no-op in single-device
 tests, so model code stays mesh-agnostic.
+
+Specs may name LOGICAL axes (T5X-style): ``("batch", "embed")`` instead
+of hard-coding mesh axis names.  An active rule set — installed with
+``use_logical_axis_rules`` or the default ``DEFAULT_LOGICAL_RULES`` —
+maps each logical name to a mesh axis (or an axis tuple, or ``None`` for
+replicated) through the FIRST matching rule; unresolved names fall
+through unchanged and ``_trim_spec`` drops any axis the active mesh
+lacks (e.g. ``"pod"`` on a single-pod mesh).  Model code therefore says
+*what* an axis means once, and the same module shards correctly on
+("data",), ("data","model") and ("pod","data","model") meshes.
 """
 
 from __future__ import annotations
@@ -33,6 +43,76 @@ def use_mesh(mesh: Mesh):
 
 UNCONSTRAINED = P.UNCONSTRAINED
 
+#: T5X-style (logical name, mesh target) rules; first match wins.  The
+#: worker/batch axes split jointly over ("pod", "data") so pod-major
+#: worker layout follows the mesh automatically; width-like axes go to
+#: "model"; sequence/head-dim axes stay replicated.
+DEFAULT_LOGICAL_RULES = (
+    ("batch", ("pod", "data")),
+    ("worker", ("pod", "data")),
+    ("pods", "pod"),
+    ("embed", "model"),
+    ("mlp", "model"),
+    ("heads", "model"),
+    ("vocab", "model"),
+    ("kv", None),
+    ("seq", None),
+)
+
+
+def logical_axis_rules():
+    """The active rule set (``DEFAULT_LOGICAL_RULES`` unless overridden)."""
+    rules = getattr(_STATE, "rules", None)
+    return DEFAULT_LOGICAL_RULES if rules is None else rules
+
+
+@contextlib.contextmanager
+def use_logical_axis_rules(rules):
+    """Install a logical-axis rule set for the dynamic extent (an
+    iterable of ``(logical_name, mesh_axis | axis_tuple | None)``)."""
+    prev = getattr(_STATE, "rules", None)
+    _STATE.rules = tuple((name, tuple(t) if isinstance(t, list) else t)
+                         for name, t in rules)
+    try:
+        yield _STATE.rules
+    finally:
+        _STATE.rules = prev
+
+
+def _first_match(name, rules):
+    for rule_name, target in rules:
+        if rule_name == name:
+            return target
+    return name
+
+
+def resolve_logical(spec, rules=None):
+    """Map logical axis names in ``spec`` to mesh axes through the rule
+    set (active rules when ``rules`` is None).  Names without a rule —
+    including literal mesh axis names — pass through unchanged; a rule
+    targeting an axis tuple flattens into the part it lands in."""
+    rules = logical_axis_rules() if rules is None else tuple(rules)
+    out = []
+    for part in spec:
+        if part is None or part is UNCONSTRAINED:
+            out.append(part)
+        elif isinstance(part, (tuple, list)):
+            flat = []
+            for a in part:
+                target = _first_match(a, rules)
+                if target is None:
+                    continue
+                if isinstance(target, (tuple, list)):
+                    flat.extend(target)
+                else:
+                    flat.append(target)
+            out.append(tuple(flat) if flat else None)
+        else:
+            target = _first_match(part, rules)
+            out.append(tuple(target) if isinstance(target, (tuple, list))
+                       else target)
+    return tuple(out)
+
 
 def _trim_spec(spec, mesh: Mesh):
     """Drop mesh axes not present (e.g. 'pod' on the single-pod mesh)."""
@@ -52,6 +132,7 @@ def shard_hint(x, spec):
     mesh = current_mesh()
     if mesh is None:
         return x
+    spec = resolve_logical(spec)
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, P(*_trim_spec(spec, mesh))))
 
@@ -60,4 +141,4 @@ BATCH_AXES = ("pod", "data")
 
 
 def named_sharding(mesh: Mesh, *spec):
-    return NamedSharding(mesh, P(*_trim_spec(spec, mesh)))
+    return NamedSharding(mesh, P(*_trim_spec(resolve_logical(spec), mesh)))

@@ -84,6 +84,48 @@ def test_collective_axes_explicit_replicated():
     assert collective_axes(((0, 1),), (2, 1), ("data", "model")) == ("data",)
 
 
+def test_collective_axes_three_axis_mesh():
+    """Single-axis attribution on the 2x2x2 ("pod","data","model") mesh
+    (row-major ids: pod stride 4, data stride 2, model stride 1)."""
+    from repro.launch.hlo_analysis import mesh_axis_groups
+    sizes, names = (2, 2, 2), ("pod", "data", "model")
+    pod_groups = mesh_axis_groups(sizes, 0)
+    assert set(map(frozenset, pod_groups)) == {
+        frozenset({0, 4}), frozenset({1, 5}),
+        frozenset({2, 6}), frozenset({3, 7})}
+    assert collective_axes(pod_groups, sizes, names) == ("pod",)
+    data_groups = mesh_axis_groups(sizes, 1)
+    assert collective_axes(data_groups, sizes, names) == ("data",)
+    model_groups = mesh_axis_groups(sizes, 2)
+    assert collective_axes(model_groups, sizes, names) == ("model",)
+
+
+def test_collective_axes_joint_multi_axis_reduction():
+    """A JOINT reduction over several axes at once (one collective whose
+    groups span e.g. pod x data — the hierarchical engines' init psums)
+    attributes to the axis combination instead of the old empty tuple."""
+    from repro.launch.hlo_analysis import mesh_axis_groups
+    sizes, names = (2, 2, 2), ("pod", "data", "model")
+    pd = mesh_axis_groups(sizes, (0, 1))
+    assert set(map(frozenset, pd)) == {frozenset({0, 2, 4, 6}),
+                                       frozenset({1, 3, 5, 7})}
+    assert collective_axes(pd, sizes, names) == ("pod", "data")
+    dm = mesh_axis_groups(sizes, (1, 2))
+    assert collective_axes(dm, sizes, names) == ("data", "model")
+    # the full-mesh reduction is the all-axes combination
+    full = mesh_axis_groups(sizes, (0, 1, 2))
+    assert full == ((0, 1, 2, 3, 4, 5, 6, 7),)
+    assert collective_axes(full, sizes, names) == ("pod", "data", "model")
+    # groups matching no axis or combination still return ()
+    assert collective_axes(((0, 3), (1, 2), (4, 7), (5, 6)),
+                           sizes, names) == ()
+    # size-1 axes are excluded from combinations too: on (2, 1, 2) a
+    # pod x model joint reduction is just those two real axes
+    sizes2 = (2, 1, 2)
+    pm = mesh_axis_groups(sizes2, (0, 2))
+    assert collective_axes(pm, sizes2, names) == ("pod", "model")
+
+
 def test_single_replica_mesh_contract_regression():
     prob = _problem()
     opts = repro.RanlOptions(num_rounds=3, num_regions=4)

@@ -98,6 +98,76 @@ print(json.dumps({'ok': r['ok'],
     assert res == {"ok": True, "coll": True, "mem": True}
 
 
+def test_resolve_logical_default_rules():
+    """T5X-style logical names map through DEFAULT_LOGICAL_RULES: batch/
+    worker split jointly over ("pod","data"), width-like axes go to
+    "model", sequence/head axes replicate, unknown names (including
+    literal mesh axes) pass through untouched."""
+    from repro.models.sharding import (DEFAULT_LOGICAL_RULES,
+                                       resolve_logical)
+    assert resolve_logical(("batch", "embed")) == (("pod", "data"),
+                                                  "model")
+    assert resolve_logical(("worker", None, "mlp")) == (("pod", "data"),
+                                                        None, "model")
+    assert resolve_logical(("pods", "seq", "kv")) == ("pod", None, None)
+    # literal mesh axis names and unknown logical names fall through
+    assert resolve_logical(("data", "mystery")) == ("data", "mystery")
+    # a tuple part flattens each member through the rules; members that
+    # resolve to None drop, and an all-dropped part becomes None
+    assert resolve_logical((("batch",), "vocab")) == (("pod", "data"),
+                                                     "model")
+    assert resolve_logical((("seq", "kv"),)) == (None,)
+    assert resolve_logical((("heads", "kv"),)) == (("model",),)
+    # explicit rules argument bypasses the active set
+    assert resolve_logical(("batch",), rules=(("batch", "data"),)) \
+        == ("data",)
+    assert ("batch", ("pod", "data")) in DEFAULT_LOGICAL_RULES
+
+
+def test_use_logical_axis_rules_override():
+    from repro.models.sharding import (DEFAULT_LOGICAL_RULES,
+                                       logical_axis_rules,
+                                       resolve_logical,
+                                       use_logical_axis_rules)
+    assert logical_axis_rules() == DEFAULT_LOGICAL_RULES
+    # list targets normalize to tuples; first match wins
+    with use_logical_axis_rules([("batch", ["data"]),
+                                 ("batch", "model"),
+                                 ("embed", None)]) as rules:
+        assert rules == (("batch", ("data",)), ("batch", "model"),
+                         ("embed", None))
+        assert resolve_logical(("batch", "embed")) == (("data",), None)
+    assert logical_axis_rules() == DEFAULT_LOGICAL_RULES
+
+
+def test_named_sharding_trims_missing_mesh_axes():
+    """The same logical spec shards correctly on pod-bearing and podless
+    meshes: axes the active mesh lacks are dropped (the single-pod /
+    single-model degenerate layouts)."""
+    from repro.models.sharding import named_sharding
+    mesh_dm = jax.make_mesh((1, 1), ("data", "model"))
+    s = named_sharding(mesh_dm, "batch", "embed")
+    assert s.spec == P(("data",), "model")
+    mesh_d = jax.make_mesh((1,), ("data",))
+    s = named_sharding(mesh_d, "batch", "embed")
+    assert s.spec == P(("data",), None)
+    assert named_sharding(mesh_d, "pods").spec == P(None)
+
+
+def test_shard_hint_logical_spec():
+    from repro.models.sharding import shard_hint, use_mesh
+    x = jnp.ones((4, 8))
+    # mesh-agnostic: a no-op when no mesh is installed
+    assert shard_hint(x, ("batch", "embed")) is x
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with use_mesh(mesh):
+        y = jax.jit(lambda a: shard_hint(a, ("batch", "embed")))(x)
+    # on the degenerate 1x1 mesh the constraint canonicalizes to fully
+    # replicated — the output still lands on our mesh with x unchanged
+    assert y.sharding.mesh.axis_names == ("data", "model")
+    assert (y == x).all()
+
+
 def test_hlo_collective_parser():
     from repro.launch.hlo_analysis import (collect_collectives,
                                            shape_bytes,
