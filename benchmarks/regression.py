@@ -62,7 +62,33 @@ def compare(baseline: dict[str, dict], fresh: dict[str, dict],
         lines.append(f"NEW      {name}: {float(fresh[name]['us_per_call']):.0f}us "
                      f"(no baseline yet — commit a refreshed "
                      f"BENCH_engine.json to start tracking it)")
+    failures += obs_overhead_gate(fresh, lines)
     return failures, lines
+
+
+#: Observability must be free: journal+trace on vs off, same process,
+#: adjacent best-of-5 timings (not cross-runner), so the bound is tight.
+OBS_OVERHEAD_LIMIT = 1.05
+
+
+def obs_overhead_gate(fresh: dict[str, dict], lines: list) -> list:
+    """The journal/tracing overhead pin: ``engine/obs_on`` vs
+    ``engine/obs_off`` from the SAME fresh run must stay within
+    ``OBS_OVERHEAD_LIMIT`` — unlike the cross-run tolerance above, both
+    legs share a runner and a warm compile, so 5% is generous."""
+    on, off = fresh.get("engine/obs_on"), fresh.get("engine/obs_off")
+    if not (on and off):
+        return []
+    ratio = float(on["us_per_call"]) / float(off["us_per_call"])
+    status = "OK" if ratio <= OBS_OVERHEAD_LIMIT else "REGRESSED"
+    lines.append(f"{status:9s}engine/obs_on vs obs_off: {ratio:.3f}x "
+                 f"(limit {OBS_OVERHEAD_LIMIT}x — observability must "
+                 f"be free)")
+    if ratio > OBS_OVERHEAD_LIMIT:
+        return [("engine/obs_on",
+                 f"journal+trace overhead {ratio:.3f}x > "
+                 f"{OBS_OVERHEAD_LIMIT}x of obs_off")]
+    return []
 
 
 def main(argv=None) -> int:

@@ -53,7 +53,8 @@ def main() -> None:
                    claims.bench_hierarchy,
                    claims.bench_hetero,
                    claims.bench_quorum,
-                   claims.bench_compression):
+                   claims.bench_compression,
+                   claims.bench_obs_overhead):
             rows.extend(fn(smoke=args.smoke))
     if args.only in (None, "kernels"):
         from . import kernels_bench as kb
@@ -75,6 +76,13 @@ def main() -> None:
         with open(args.engine_json, "w") as f:
             json.dump(eng, f, indent=2)
         print(f"# wrote {len(eng)} engine rows to {args.engine_json}")
+        if args.only in (None, "claims"):
+            # a renderable run journal rides along with every engine
+            # bench artifact (python -m repro.obs.report <path>)
+            from . import claims
+            jpath = os.path.splitext(args.engine_json)[0] + ".journal.jsonl"
+            claims.write_bench_journal(jpath, smoke=args.smoke)
+            print(f"# wrote engine bench journal to {jpath}")
 
     if args.only in (None, "roofline") and not args.smoke:
         dr = os.path.join(os.path.dirname(__file__), "..",

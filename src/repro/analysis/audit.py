@@ -33,7 +33,6 @@ Exit status 0 = every combination verified; 1 = any drift/violation.
 
 import argparse
 import json
-import sys
 
 # audit problem: small enough to compile 30 configs in seconds, large
 # enough that every payload window is distinguishable from the small-
@@ -226,11 +225,13 @@ def main(argv=None) -> int:
     except FileNotFoundError:
         registry = {}
 
+    from ..obs.report import emit
+
     import jax
     if len(jax.devices()) < 8:
-        print(f"audit needs 8 devices, found {len(jax.devices())} — "
-              f"set XLA_FLAGS=--xla_force_host_platform_device_count=8 "
-              f"before python starts", file=sys.stderr)
+        emit(f"audit needs 8 devices, found {len(jax.devices())} — "
+             f"set XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+             f"before python starts", err=True)
         return 1
 
     from .contracts import contract_key
@@ -248,21 +249,21 @@ def main(argv=None) -> int:
         new_registry[key] = _jsonify(derived)
         status = "OK  " if not failures else "FAIL"
         n_fail += bool(failures)
-        print(f"[{status}] {key}", flush=True)
+        emit(f"[{status}] {key}")
         for f in failures:
-            print(f"       {f}")
+            emit(f"       {f}")
 
     if args.update:
         if args.engine or args.options:
             # a filtered update must not drop the unaudited entries
             new_registry = {**registry, **new_registry}
         save_registry(new_registry, path)
-        print(f"wrote {len(new_registry)} contracts to {path}")
+        emit(f"wrote {len(new_registry)} contracts to {path}")
         return 0
     if n_fail:
-        print(f"{n_fail} combination(s) failed", file=sys.stderr)
+        emit(f"{n_fail} combination(s) failed", err=True)
         return 1
-    print(f"all {len(new_registry)} combinations verified against {path}")
+    emit(f"all {len(new_registry)} combinations verified against {path}")
     return 0
 
 

@@ -330,6 +330,47 @@ def engine_contract(engine: str, opts, *, dim: int, num_workers: int,
     raise ValueError(f"unknown engine {engine!r}")
 
 
+def round_byte_budget(opts, *, dim: int, num_workers: int) -> dict:
+    """Per-round wire-byte ceilings for the runtime drift alarm.
+
+    The static contracts above bound the compiled program's collectives;
+    this derives the matching ceilings for the two *metered* traces every
+    engine reports (``RanlResult.comm_bytes`` — the sum of per-worker
+    uplinks under the ``core.compression`` wire model — and
+    ``RanlResult.pod_bytes`` — the inter-pod crossing), from the same
+    per-payload windows the collective budgets use.  A full participation
+    mask is the worst case, so any round whose observed bytes exceed the
+    ceiling means the wire model, the compression spec, or the engine's
+    metering drifted from the contract derivation —
+    ``repro.obs.metrics.check_byte_drift`` turns that into a structured
+    journal record at runtime, the live form of the CI-only audit.
+
+    Returns ``{"comm_per_round": float, "pod_per_round": float}``
+    (``pod_per_round`` covers both the hierarchical exchange payload,
+    attributed to its window's last round, and the flat-on-pod-topology
+    crossing charged every round).
+    """
+    comp = opts.compression_spec()
+    if comp is None:
+        per_worker = 4.0 * dim
+    elif comp.kind == "int8":
+        # wire model: one byte per kept coordinate + a 4-byte scale
+        per_worker = dim + COMPRESSED_SLACK
+    elif comp.kind == "bf16":
+        per_worker = 2.0 * dim
+    else:
+        # topk keeps at most every coordinate + 4 bytes/region metadata
+        per_worker = 4.0 * dim + 4.0 * int(comp.k)
+    hspec = opts.hierarchy_spec()
+    pod_kind = (hspec.compression if hspec is not None
+                else (comp.kind if comp is not None else None))
+    if pod_kind not in ("int8", "bf16"):
+        pod_kind = None                      # topk crosses pods dense
+    _, pod_hi, _ = _hier_window(pod_kind, dim * 4)
+    return {"comm_per_round": per_worker * num_workers,
+            "pod_per_round": float(pod_hi)}
+
+
 def with_rounds(comm: CommContract, rounds: int) -> CommContract:
     """Same contract re-pinned to a different round count (budgets whose
     multiplier was the old round count follow it)."""

@@ -1,6 +1,6 @@
 """AST-based repo lint: ``python -m repro.analysis.lint [paths...]``.
 
-Four repo-specific rules that generic linters cannot express — each one
+Five repo-specific rules that generic linters cannot express — each one
 a bug class this codebase has actually had to defend against:
 
 - **RPL001 host-sync-in-scan-body** — no ``.item()`` / ``float()`` /
@@ -19,6 +19,11 @@ a bug class this codebase has actually had to defend against:
   ``P(...)``/``PartitionSpec(...)`` specs and ``axis_name``-style
   parameter defaults) must come from the declared mesh axes
   ``{"data", "model", "pod"}`` of ``launch.mesh``.
+- **RPL005 bare-print** — no bare ``print`` in library code: only the
+  ``launch/`` CLIs and the ``obs/report.py`` ``emit`` chokepoint may
+  print; everything else routes human-facing output through the obs
+  layer (structured journals/reports), so library modules stay silent
+  and machine-consumable.
 
 Scope is deliberately conservative (direct calls inside the scan-body
 function itself, annotated static parameters only) so the lint runs
@@ -38,6 +43,8 @@ DECLARED_AXES = frozenset({"data", "model", "pod"})
 
 AXIS_PARAM_NAMES = frozenset({"axis_name", "data_axis", "model_axis"})
 EIGH_ALLOWED_SUFFIX = os.path.join("core", "hessian.py")
+PRINT_ALLOWED_SUFFIX = os.path.join("obs", "report.py")
+PRINT_ALLOWED_DIR = "launch"
 
 
 @dataclass(frozen=True)
@@ -281,7 +288,27 @@ def lint_file(path: str, tree: ast.Module,
                     path, arg.lineno, "RPL004",
                     f"default {arg.arg}={default.value!r} is not a "
                     f"declared mesh axis {sorted(DECLARED_AXES)}"))
+
+    # RPL005: bare print in library code
+    if not _print_allowed(path):
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "print"):
+                violations.append(LintViolation(
+                    path, node.lineno, "RPL005",
+                    "bare print() in library code — route output "
+                    "through repro.obs (journal/report emit); only "
+                    "launch/ CLIs and obs/report.py may print"))
     return violations
+
+
+def _print_allowed(path: str) -> bool:
+    """RPL005 scope: ``launch/`` CLIs and the ``obs/report.py`` emit
+    chokepoint may print; every other library module may not."""
+    parts = os.path.normpath(path).split(os.sep)
+    return (PRINT_ALLOWED_DIR in parts[:-1]
+            or path.endswith(PRINT_ALLOWED_SUFFIX))
 
 
 def _collect_files(paths):
@@ -314,14 +341,26 @@ def lint_paths(paths) -> list[LintViolation]:
     return violations
 
 
+def _emit(msg: str) -> None:
+    """Route through the obs chokepoint when importable; the no-jax CI
+    lint environment (and script-mode ``python .../lint.py``) falls back
+    to a raw stream write — never a bare print (RPL005 self-clean)."""
+    try:
+        from repro.obs.report import emit
+    except Exception:
+        sys.stdout.write(f"{msg}\n")
+    else:
+        emit(msg)
+
+
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     paths = [a for a in argv if not a.startswith("-")] or ["src"]
     violations = lint_paths(paths)
     for v in violations:
-        print(v)
+        _emit(str(v))
     n_files = len(_collect_files(paths))
-    print(f"repro.analysis.lint: {n_files} file(s), "
+    _emit(f"repro.analysis.lint: {n_files} file(s), "
           f"{len(violations)} violation(s)")
     return 1 if violations else 0
 

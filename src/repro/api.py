@@ -126,36 +126,53 @@ def run(problem, key, *, engine: str = "scan",
         options: RanlOptions | None = None, mesh=None,
         axis_name: str = "data", data_axis: str = "data",
         model_axis: str = "model", pod_axis: str = "pod",
-        controller=None, cost=None, **overrides):
+        controller=None, cost=None, journal=None, scenario=None,
+        **overrides):
     """Run Algorithm 1 on ``problem`` with the chosen engine.
 
     ``key``: a PRNG key — or (B,)-stacked keys for ``engine="batch"``
     (whose result carries a leading seed axis).  ``controller`` may be a
     Controller instance, a ``make_controller`` spec string, or ``None``
     (the options' open-loop policy); ``cost`` a ``CostModel`` or ``None``
-    (uniform).  Remaining ``**overrides`` are ``RanlOptions`` fields
+    (uniform).  ``journal`` (a path or ``repro.obs.Journal``) records the
+    finished run — header, per-round traces, drift alarms, active spans,
+    summary — entirely host-side after the engine returns: the compiled
+    program is identical with or without it.  ``scenario`` labels the
+    journal header (defaults to the cost model's scenario name when it
+    has one).  Remaining ``**overrides`` are ``RanlOptions`` fields
     merged into ``options``.  Returns :class:`RanlResult`.
     """
     opts, controller = _resolve(engine, options, mesh, controller,
                                 overrides)
-    if engine == "scan":
-        return _run_scan(problem, key, opts, controller=controller,
-                         cost=cost)
-    if engine == "batch":
-        return _run_batch(problem, key, opts, mesh=mesh,
-                          axis_name=axis_name, controller=controller,
-                          cost=cost)
-    if engine == "sharded":
-        return _run_sharded(problem, key, opts, mesh=mesh,
-                            axis_name=axis_name, pod_axis=pod_axis,
-                            controller=controller, cost=cost)
-    if engine == "sharded2d":
-        return _run_sharded2d(problem, key, opts, mesh=mesh,
-                              data_axis=data_axis, model_axis=model_axis,
-                              pod_axis=pod_axis, controller=controller,
-                              cost=cost)
-    return _run_reference(problem, key, opts, controller=controller,
-                          cost=cost)
+    from .obs.trace import span
+    with span("execute", engine=engine):
+        if engine == "scan":
+            result = _run_scan(problem, key, opts, controller=controller,
+                               cost=cost)
+        elif engine == "batch":
+            result = _run_batch(problem, key, opts, mesh=mesh,
+                                axis_name=axis_name, controller=controller,
+                                cost=cost)
+        elif engine == "sharded":
+            result = _run_sharded(problem, key, opts, mesh=mesh,
+                                  axis_name=axis_name, pod_axis=pod_axis,
+                                  controller=controller, cost=cost)
+        elif engine == "sharded2d":
+            result = _run_sharded2d(problem, key, opts, mesh=mesh,
+                                    data_axis=data_axis,
+                                    model_axis=model_axis,
+                                    pod_axis=pod_axis,
+                                    controller=controller, cost=cost)
+        else:
+            result = _run_reference(problem, key, opts,
+                                    controller=controller, cost=cost)
+    if journal is not None:
+        from .obs.journal import write_run_journal
+        if scenario is None:
+            scenario = getattr(cost, "name", None)
+        write_run_journal(journal, result, engine=engine, options=opts,
+                          mesh=mesh, problem=problem, scenario=scenario)
+    return result
 
 
 def lower(problem, key, *, engine: str = "sharded",
@@ -177,14 +194,17 @@ def lower(problem, key, *, engine: str = "sharded",
                          f"repro.lower supports {_MESH_REQUIRED}")
     opts, controller = _resolve(engine, options, mesh, controller,
                                 overrides)
-    if engine == "sharded":
-        return _lower_sharded(problem, key, opts, mesh=mesh,
-                              axis_name=axis_name, pod_axis=pod_axis,
-                              controller=controller, cost=cost)
-    return _lower_sharded2d(problem, key, opts, mesh=mesh,
-                            data_axis=data_axis, model_axis=model_axis,
-                            pod_axis=pod_axis, controller=controller,
-                            cost=cost)
+    from .obs.trace import span
+    with span("lower", engine=engine):
+        if engine == "sharded":
+            return _lower_sharded(problem, key, opts, mesh=mesh,
+                                  axis_name=axis_name, pod_axis=pod_axis,
+                                  controller=controller, cost=cost)
+        return _lower_sharded2d(problem, key, opts, mesh=mesh,
+                                data_axis=data_axis,
+                                model_axis=model_axis,
+                                pod_axis=pod_axis, controller=controller,
+                                cost=cost)
 
 
 def trace(problem, key, *, engine: str = "scan",

@@ -45,7 +45,8 @@ def lower_and_compile(cfg, shape, mesh, *, scan_layers=True,
                       compile_graph=True):
     """Returns result dict (everything JSON-serializable)."""
     from ..models.sharding import use_mesh
-    from .hlo_analysis import collect_collectives, summarize_collectives
+    from .hlo_analysis import (collect_collectives, cost_raw_summary,
+                               summarize_collectives)
     from .steps import make_bundle
     import jax
 
@@ -84,12 +85,7 @@ def lower_and_compile(cfg, shape, mesh, *, scan_layers=True,
                         + mem.temp_size_in_bytes
                         - mem.alias_size_in_bytes),
     }
-    ca = compiled.cost_analysis() or {}
-    if isinstance(ca, (list, tuple)):     # older jax returns [dict]
-        ca = ca[0] if ca else {}
-    out["cost_raw"] = {k: float(v) for k, v in ca.items()
-                       if k in ("flops", "bytes accessed",
-                                "transcendentals")}
+    out["cost_raw"] = cost_raw_summary(compiled)
     txt = compiled.as_text()
     recs = collect_collectives(txt, default_trip=cfg.num_layers)
     out["collectives"] = summarize_collectives(recs)

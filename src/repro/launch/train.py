@@ -25,6 +25,7 @@ from __future__ import annotations
 import argparse
 import json
 import time
+from contextlib import nullcontext
 from functools import partial
 
 import jax
@@ -33,6 +34,7 @@ import jax.numpy as jnp
 from ..configs import get_config, smoke_variant
 from ..data import make_batch
 from ..models import init_model, lm_loss
+from ..obs import Journal, Tracer, make_header
 from ..optim import (AdamWConfig, RanlLLMConfig, adamw_init, adamw_step,
                      init_state, train_step)
 from ..checkpoint import save
@@ -112,6 +114,16 @@ def run(argv=None):
                     choices=["bigram", "uniform"])
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--log-every", type=int, default=1)
+    ap.add_argument("--journal", default="", metavar="PATH",
+                    help="write a structured run journal (JSONL, "
+                         "repro.obs schema): header + one record per "
+                         "step + summary — render it with "
+                         "'python -m repro.obs.report PATH'")
+    ap.add_argument("--trace", default="", metavar="PATH",
+                    help="span-trace the run (lower/compile/execute/"
+                         "checkpoint) and write Chrome-trace JSON to "
+                         "PATH (open in Perfetto); spans also land in "
+                         "the --journal when both are set")
     args = ap.parse_args(argv)
     if args.dump_hlo and args.optimizer != "ranl":
         raise SystemExit("--dump-hlo reports the RANL train step; rerun "
@@ -165,6 +177,13 @@ def run(argv=None):
                         args.batch, args.seq, pattern=args.pattern)
 
     history = []
+    journal = Journal(args.journal) if args.journal else None
+    tracer = Tracer() if args.trace else None
+
+    def tspan(name, **meta):
+        return (tracer.span(name, **meta) if tracer is not None
+                else nullcontext())
+
     if args.optimizer == "ranl":
         rcfg = RanlLLMConfig(num_workers=args.workers,
                              keep_prob=args.keep_prob, mu=args.mu,
@@ -201,17 +220,44 @@ def run(argv=None):
             if scen:
                 print(f"scenario: {scen.name} (controller "
                       f"{args.controller or 'policy shim'})")
+        def _header(hlo=None):
+            return make_header(
+                engine="train:ranl", options=rcfg, mesh=mesh,
+                scenario=args.scenario or None, hlo=hlo,
+                extra={"arch": args.arch, "steps": args.steps,
+                       "batch": args.batch, "seq": args.seq,
+                       "controller": args.controller or None,
+                       "quorum": args.quorum or None})
+
         if args.dump_hlo:
-            from .hlo_analysis import module_report
-            txt = step_fn.lower(params, state, batch0, ko) \
-                .compile().as_text()
+            from .hlo_analysis import cost_raw_summary, module_report
+            from ..obs import hlo_header
+            with tspan("lower"):
+                lowered = step_fn.lower(params, state, batch0, ko)
+            with tspan("compile"):
+                compiled = lowered.compile()
+            txt = compiled.as_text()
             with open(args.dump_hlo, "w") as f:
                 f.write(txt)
             rep = module_report(txt)
+            if journal is not None:
+                # surface the compiled program's byte totals next to the
+                # contract key so a journal alone answers what this
+                # program put on the wire and held per device
+                journal.write(_header(
+                    hlo=hlo_header(rep, cost_raw_summary(compiled))))
+                if tracer is not None:
+                    for srec in tracer.span_records():
+                        journal.write(srec)
+                journal.close()
+                print(f"wrote journal to {args.journal}")
             rep["records"] = rep["records"][:12]      # top movers only
             print(f"wrote partitioned HLO to {args.dump_hlo}")
             print(json.dumps(rep, indent=2))
             return rep
+        if journal is not None:
+            journal.write(_header())
+        exec_fn = None
         for t in range(args.steps):
             batch = make_batch(cfg, jax.random.fold_in(kd, t + 1),
                                args.batch, args.seq, pattern=args.pattern)
@@ -235,34 +281,58 @@ def run(argv=None):
                         quorum_tau=args.quorum_tau or None)
                     masks = jnp.logical_and(masks, on_time[:, None])
                     hetero["deadline"] = float(deadline)
+            if tracer is not None and exec_fn is None:
+                # AOT split so lowering/compile time is attributable
+                # (the jit path would fold both into the first execute)
+                with tracer.span("lower"):
+                    low = step_fn.lower(params, state, batch, ko,
+                                        masks=masks)
+                with tracer.span("compile"):
+                    exec_fn = low.compile()
+            fn = exec_fn if exec_fn is not None else step_fn
             t0 = time.perf_counter()
-            params, state, metrics = step_fn(params, state, batch, ko,
-                                             masks=masks)
-            metrics = {k: float(v) for k, v in metrics.items()}
-            metrics["step_s"] = time.perf_counter() - t0
+            with tspan("execute", step=t):
+                params, state, metrics = fn(params, state, batch, ko,
+                                            masks=masks)
             sim_note = ""
             if hetero is not None:
                 work = (masks * hetero["sizes_q"][None, :]).sum(axis=1)
                 times = worker_times(hetero["cost"], work, t)
                 hetero["telem"] = next_telemetry(
                     hetero["telem"], masks.sum(axis=0), work, times)
-                metrics["sim_round_s"] = (hetero["deadline"]
-                                          if args.quorum
-                                          else float(times.max()))
-                hetero["sim_s"] += metrics["sim_round_s"]
-                metrics["sim_s"] = hetero["sim_s"]
-                metrics["max_stale"] = int(hetero["telem"].stale_q.max())
+                hetero["sim_round_s"] = (hetero["deadline"]
+                                         if args.quorum
+                                         else float(times.max()))
+                hetero["sim_s"] += hetero["sim_round_s"]
+                hetero["max_stale"] = int(hetero["telem"].stale_q.max())
                 sim_note = (f" sim_s={hetero['sim_s']:.0f} "
-                            f"stale<={metrics['max_stale']}")
-            history.append(metrics)
-            if t % args.log_every == 0:
-                print(f"step {t:4d} loss={metrics['loss']:.4f} "
-                      f"cov={metrics['coverage']:.2f} "
-                      f"uplink={metrics['uplink_frac']:.2f} "
-                      f"({metrics['step_s']:.2f}s){sim_note}")
+                            f"stale<={hetero['max_stale']}")
+            if (journal is not None or t % args.log_every == 0
+                    or t == args.steps - 1):
+                # the ONLY device round-trip: unrecorded steps leave the
+                # metrics on device and the dispatch queue stays async
+                metrics = {k: float(v) for k, v in metrics.items()}
+                metrics["step_s"] = time.perf_counter() - t0
+                if hetero is not None:
+                    metrics["sim_round_s"] = hetero["sim_round_s"]
+                    metrics["sim_s"] = hetero["sim_s"]
+                    metrics["max_stale"] = hetero["max_stale"]
+                history.append(metrics)
+                if journal is not None:
+                    journal.write({"kind": "round", "t": t + 1, **metrics})
+                if t % args.log_every == 0:
+                    print(f"step {t:4d} loss={metrics['loss']:.4f} "
+                          f"cov={metrics['coverage']:.2f} "
+                          f"uplink={metrics['uplink_frac']:.2f} "
+                          f"({metrics['step_s']:.2f}s){sim_note}")
     else:
         acfg = AdamWConfig(lr=1e-3)
         state = adamw_init(params, acfg)
+        if journal is not None:
+            journal.write(make_header(
+                engine="train:adamw", options=acfg, mesh=mesh,
+                extra={"arch": args.arch, "steps": args.steps,
+                       "batch": args.batch, "seq": args.seq}))
 
         @jax.jit
         def astep(params, state, batch):
@@ -273,14 +343,33 @@ def run(argv=None):
         for t in range(args.steps):
             batch = make_batch(cfg, jax.random.fold_in(kd, t + 1),
                                args.batch, args.seq, pattern=args.pattern)
-            params, state, loss = astep(params, state, batch)
-            history.append({"loss": float(loss)})
-            if t % args.log_every == 0:
-                print(f"step {t:4d} loss={float(loss):.4f}")
+            with tspan("execute", step=t):
+                params, state, loss = astep(params, state, batch)
+            if (journal is not None or t % args.log_every == 0
+                    or t == args.steps - 1):
+                rec = {"loss": float(loss)}
+                history.append(rec)
+                if journal is not None:
+                    journal.write({"kind": "round", "t": t + 1, **rec})
+                if t % args.log_every == 0:
+                    print(f"step {t:4d} loss={rec['loss']:.4f}")
 
     if args.checkpoint_dir:
-        save(params, args.checkpoint_dir, step=args.steps)
+        with tspan("checkpoint"):
+            save(params, args.checkpoint_dir, step=args.steps)
         print(f"saved checkpoint to {args.checkpoint_dir}")
+    if journal is not None:
+        if tracer is not None:
+            for srec in tracer.span_records():
+                journal.write(srec)
+        journal.write({"kind": "summary", "rounds": args.steps,
+                       "first_loss": history[0]["loss"],
+                       "final_loss": history[-1]["loss"]})
+        journal.close()
+        print(f"wrote journal to {args.journal}")
+    if tracer is not None:
+        tracer.write_chrome(args.trace)
+        print(f"wrote chrome trace to {args.trace}")
     print(json.dumps({"final_loss": history[-1]["loss"],
                       "first_loss": history[0]["loss"]}))
     return history

@@ -17,7 +17,7 @@ Fast, in-process:
 * contract JSON round-trip + registry key uniqueness;
 * dryrun-style cost analysis on the RANL engines pinned against the
   jaxpr auditor's inventory (XLA may fuse collectives, never invent);
-* every lint rule (RPL001-004) on synthetic positive/negative sources,
+* every lint rule (RPL001-005) on synthetic positive/negative sources,
   and the whole ``src/`` tree linting clean (CI parity).
 
 Slow (subprocess, 8 emulated devices): the ``repro.analysis.audit`` CLI
@@ -423,6 +423,35 @@ def test_lint_undeclared_mesh_axis(tmp_path):
             return x
         """, name="ok.py")
     assert good == []
+
+
+def test_lint_bare_print(tmp_path):
+    bad = _lint(tmp_path, """
+        def report(x):
+            print("loss", x)
+        """)
+    assert [v.rule for v in bad] == ["RPL005"]
+    # launch/ CLIs may print...
+    cli = _lint(tmp_path, """
+        def main():
+            print("hello")
+        """, name=os.path.join("launch", "train.py"))
+    assert cli == []
+    # ...and so may the report renderer's own module
+    rep = _lint(tmp_path, """
+        def emit(msg):
+            print(msg)
+        """, name=os.path.join("obs", "report.py"))
+    assert rep == []
+    # attribute calls (jax.debug.print) are not bare prints
+    dbg = _lint(tmp_path, """
+        import jax
+
+        def body(c, x):
+            jax.debug.print("c={c}", c=c)
+            return c, c
+        """, name="dbg.py")
+    assert dbg == []
 
 
 def test_lint_repo_src_clean():
